@@ -1,0 +1,22 @@
+"""Benchmark: paper Figure 1 — test accuracy vs iteration, 4 methods.
+
+Reduced-scale by default (CPU); ``examples/paper_cifar.py --full`` is the
+paper-exact variant. Emits ``name,us_per_call,derived`` CSV rows where
+``derived`` carries the final accuracies.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def run(iters: int = 250) -> list[str]:
+    import examples.paper_cifar as pc
+    t0 = time.time()
+    final = pc.main(["--iters", str(iters), "--eval-every", str(iters // 5)])
+    dt_us = (time.time() - t0) * 1e6
+    rows = [f"fig1_{m},{dt_us / 4:.0f},acc={a:.3f}" for m, a in final.items()]
+    ok = (final["alg1"] > final["benchmark1"] > 0
+          and final["alg1"] > final["benchmark2"])
+    rows.append(f"fig1_ordering,{dt_us:.0f},alg1>benchmarks={ok}")
+    return rows

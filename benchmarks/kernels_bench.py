@@ -1,0 +1,64 @@
+"""Benchmark: kernel-adjacent micro-benchmarks on CPU.
+
+Pallas kernels execute in interpret mode here (the container has no TPU),
+so their wall-time is NOT meaningful — instead we benchmark the XLA
+implementations the kernels are validated against, plus the algorithmic
+win of the chunked GLA over a naive sequential scan (a real, CPU-visible
+effect of the TPU-oriented chunking).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def run() -> list[str]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # server aggregation: weighted reduce over 40 clients x 1M params
+    g = jax.random.normal(key, (40, 1_000_000))
+    w = jax.random.uniform(key, (40,))
+    from repro.kernels.aggregate.ref import masked_scaled_aggregate_ref
+    us = _time(jax.jit(masked_scaled_aggregate_ref), g, w)
+    rows.append(f"aggregate_ref_40x1M,{us:.0f},bytes={g.nbytes}")
+
+    # attention reference at a serving-ish shape
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    q = jax.random.normal(key, (1, 8, 512, 64))
+    kv = jax.random.normal(key, (1, 2, 512, 64))
+    us = _time(jax.jit(lambda a, b, c: flash_attention_ref(a, b, c)), q, kv,
+               kv)
+    rows.append(f"attention_ref_gqa_512,{us:.0f},S=512;H=8;Hkv=2")
+
+    # chunked GLA vs naive sequential scan (the SSD chunking win)
+    from repro.kernels.ssm_scan.ref import gla_scan_ref
+    from repro.models.ssm import chunked_gla
+    b, s, h, dk, dv = 2, 1024, 4, 32, 32
+    ks = jax.random.split(key, 4)
+    a = jax.random.uniform(ks[0], (b, s, h), minval=0.8, maxval=1.0)
+    k = jax.random.normal(ks[1], (b, s, h, dk)) * 0.2
+    v = jax.random.normal(ks[2], (b, s, h, dv))
+    q2 = jax.random.normal(ks[3], (b, s, h, dk)) * 0.2
+    us_chunk = _time(jax.jit(lambda *t: chunked_gla(*t, chunk=64)[0]),
+                     a, k, v, q2)
+    fold = lambda x: x.swapaxes(1, 2).reshape((b * h, s) + x.shape[3:])
+    us_seq = _time(jax.jit(gla_scan_ref), fold(a), fold(k), fold(v),
+                   fold(q2))
+    rows.append(f"gla_chunked_1k,{us_chunk:.0f},speedup_vs_seq="
+                f"{us_seq / us_chunk:.1f}x")
+    rows.append(f"gla_sequential_1k,{us_seq:.0f},baseline")
+    return rows

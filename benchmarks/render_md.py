@@ -1,0 +1,80 @@
+"""Render the §Roofline markdown table from dryrun.json into EXPERIMENTS.md
+(replaces the <!-- ROOFLINE_TABLE --> marker block).
+
+    PYTHONPATH=src python -m benchmarks.render_md
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+
+HERE = os.path.dirname(__file__)
+RESULTS = os.path.join(HERE, "results", "dryrun.json")
+EXPERIMENTS = os.path.join(HERE, "..", "EXPERIMENTS.md")
+
+MARK = "<!-- ROOFLINE_TABLE -->"
+
+
+def fmt(x):
+    return f"{x:.2e}" if x else "0"
+
+
+def render() -> str:
+    with open(RESULTS) as f:
+        results = json.load(f)
+    singles = {k: v for k, v in results.items() if v["mesh"] == "16x16"}
+    multis = {k: v for k, v in results.items() if v["mesh"] == "2x16x16"}
+
+    out = ["## §Roofline — single-pod 16×16 (256 chips), unrolled accounting",
+           "",
+           "Terms in seconds/step (compute = HLO_FLOPs/(chip·197e12); "
+           "memory = HLO_bytes/(chip·819e9); collective = coll_bytes/"
+           "(chip·50e9)). `useful` = MODEL_FLOPS(6·N_act·D or 2·N_act·D) / "
+           "total-HLO-FLOPs — the fraction of compiled compute that is "
+           "model math (rest: remat recompute, attention O(S²), dispatch).",
+           "",
+           "| arch | shape | compute_s | memory_s | collective_s | "
+           "bottleneck | useful | coll GB (AG/AR/RS/A2A/CP) |",
+           "|---|---|---|---|---|---|---|---|"]
+    for k in sorted(singles):
+        r = singles[k]
+        t = r["roofline"]
+        pk = r["collectives"]["per_kind"]
+        gb = "/".join(f"{pk[c] / 1e9:.1f}" for c in
+                      ("all-gather", "all-reduce", "reduce-scatter",
+                       "all-to-all", "collective-permute"))
+        ratio = r.get("useful_flops_ratio")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(t['compute_s'])} | "
+            f"{fmt(t['memory_s'])} | {fmt(t['collective_s'])} | "
+            f"**{t['bottleneck']}** | "
+            f"{('%.2f' % ratio) if ratio else '—'} | {gb} |")
+
+    out += ["",
+            f"Multi-pod 2×16×16: **{len(multis)} pairs compiled** "
+            "(scan artifacts — coherence proof; per-layer terms live in "
+            "the single-pod table). Bottleneck distribution: "]
+    from collections import Counter
+    c = Counter(v["roofline"]["bottleneck"] for v in multis.values())
+    out[-1] += ", ".join(f"{k}={v}" for k, v in sorted(c.items())) + "."
+    return "\n".join(out)
+
+
+def main():
+    table = render()
+    with open(EXPERIMENTS) as f:
+        text = f.read()
+    block = f"{MARK}\n{table}\n{MARK}"
+    if text.count(MARK) == 2:
+        text = re.sub(f"{MARK}.*?{MARK}", block, text, flags=re.S)
+    else:
+        text = text.replace(MARK, block, 1)
+    with open(EXPERIMENTS, "w") as f:
+        f.write(text)
+    print(f"rendered {len(table.splitlines())} lines into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Benchmark: render the dry-run roofline table (§Roofline) as CSV rows."""
+
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.json")
+
+
+def run() -> list[str]:
+    if not os.path.exists(RESULTS):
+        return ["roofline_table,0,missing (run repro.launch.dryrun first)"]
+    with open(RESULTS) as f:
+        results = json.load(f)
+    rows = []
+    for key in sorted(results):
+        r = results[key]
+        t = r["roofline"]
+        ratio = r.get("useful_flops_ratio")
+        rows.append(
+            f"dryrun_{key.replace('|', '_')},{r['compile_seconds'] * 1e6:.0f},"
+            f"compute={t['compute_s']:.3e};memory={t['memory_s']:.3e};"
+            f"collective={t['collective_s']:.3e};"
+            f"bottleneck={t['bottleneck']};"
+            f"useful_flops={'%.2f' % ratio if ratio else 'na'};"
+            f"accounting={r.get('layer_accounting', '?')}")
+    ok = len(results)
+    rows.append(f"dryrun_pairs_compiled,0,count={ok}")
+    return rows

@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  fig1           paper Figure 1 (accuracy vs iteration, 4 schedulers)
+  theory         Theorem 1 bound vs empirical (+ error-floor sweep)
+  kernels_bench  kernel-adjacent micro-benchmarks
+  roofline_table dry-run roofline terms per (arch x shape x mesh)
+
+Prints ``name,us_per_call,derived`` CSV. Select with ``--only``.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,theory] [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--fast", action="store_true",
+                    help="shrink fig1 iterations for CI-speed runs")
+    args = ap.parse_args()
+
+    sys.path.insert(0, ".")  # examples/ imports
+    from benchmarks import fig1, kernels_bench, roofline_table, theory
+
+    suites = {
+        "fig1": lambda: fig1.run(iters=100 if args.fast else 250),
+        "theory": theory.run,
+        "kernels_bench": kernels_bench.run,
+        "roofline_table": roofline_table.run,
+    }
+    selected = [s.strip() for s in args.only.split(",") if s.strip()] \
+        or list(suites)
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name in selected:
+        try:
+            for row in suites[name]():
+                print(row, flush=True)
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Figure-1 reproduction (paper §V), CIFAR-10 replaced by the synthetic
+class-prototype image task (offline container — DESIGN.md §2).
+
+Setup exactly as the paper: N=40 clients in 4 equal groups A_k = {i : i mod
+4 = k} with periodic energy E_i^t = 1 iff t ≡ 0 (mod τ_k), τ = (1,5,10,20)
+(eq. 37); training via distributed SGD with the McMahan CIFAR CNN (~10⁶
+params); compared: Algorithm 1, Benchmark 1 (energy-agnostic best-effort),
+Benchmark 2 (wait-for-all), and full-participation oracle.
+
+Default is a CPU-sized variant (16×16 images, small CNN, 300 iterations);
+``--full`` runs the paper-exact 32×32 / ~10⁶-param CNN / 1000 iterations
+(hours on 1 CPU core). Writes a CSV of accuracy-vs-iteration per method to
+``benchmarks/results/fig1.csv``.
+
+    PYTHONPATH=src python examples/paper_cifar.py [--full] [--iters N]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ClientSimulator, make_scheduler
+from repro.core.energy import DeterministicArrivals
+from repro.data import (
+    ClientBatcher,
+    group_label_skew_partition,
+    make_confusable_image_classification,
+)
+from repro.models.cnn import cnn_accuracy, cnn_forward, init_cnn
+from repro.optim import sgd
+
+N_CLIENTS, N_GROUPS = 40, 4
+TAUS = (1, 5, 10, 20)
+METHODS = ("alg1", "benchmark1", "benchmark2", "oracle")
+
+
+def per_client_grads_fn(batcher, image_hw):
+    """grads_fn for ClientSimulator: vmapped per-client CNN gradients."""
+
+    def loss_one(params, images, labels):
+        logits = cnn_forward(params, images).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - gold)
+
+    grad_one = jax.grad(loss_one)
+
+    def grads_fn(params, key, t):
+        batch = batcher.sample(key)
+        return jax.vmap(lambda x, y: grad_one(params, x, y))(
+            batch["x"], batch["y"])
+
+    return grads_fn
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-exact scale (32x32, ~1e6-param CNN, 1000 it)")
+    ap.add_argument("--iters", type=int, default=0)
+    ap.add_argument("--eval-every", type=int, default=25)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="benchmarks/results/fig1.csv")
+    args = ap.parse_args(argv)
+
+    if args.full:
+        hw, batch, iters, n_train = 32, 16, args.iters or 1000, 8000
+    else:
+        hw, batch, iters, n_train = 16, 4, args.iters or 300, 2000
+    lr = 0.05
+
+    # Cross-group confusable classes: stands in for CIFAR's non-realizable
+    # hardness — the weighting decides which class boundaries get resolved
+    # (DESIGN.md §2; reproduces the paper's 80/64/52 ordering).
+    ds = make_confusable_image_classification(
+        args.seed, n_train + 800, image_shape=(hw, hw, 3),
+        similarity=0.9, noise=0.8)
+    train_x, train_y = ds.images[:n_train], ds.labels[:n_train]
+    test_x = jnp.asarray(ds.images[n_train:])
+    test_y = jnp.asarray(ds.labels[n_train:])
+
+    # class partition aligned with energy groups (client i holds classes
+    # ≡ i mod 4) -> benchmark-1's bias is visible
+    parts = group_label_skew_partition(args.seed, train_y, N_CLIENTS,
+                                       N_GROUPS, skew=1.0)
+    per_client = [{"x": train_x[ix], "y": train_y[ix]} for ix in parts]
+    batcher = ClientBatcher(per_client, batch_size=batch, seed=args.seed)
+
+    taus = [TAUS[i % N_GROUPS] for i in range(N_CLIENTS)]
+    energy = DeterministicArrivals.periodic(taus, horizon=iters + 1)
+    params0 = init_cnn(jax.random.PRNGKey(args.seed), image_hw=hw)
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jax.tree_util.tree_leaves(params0))
+    print(f"CNN params: {n_params:,}  clients: {N_CLIENTS}  "
+          f"taus per group: {TAUS}  iters: {iters}")
+
+    acc_fn = jax.jit(lambda p: cnn_accuracy(p, test_x, test_y))
+    grads_fn = per_client_grads_fn(batcher, hw)
+
+    curves = {}
+    for method in METHODS:
+        sim = ClientSimulator(
+            grads_fn=grads_fn, scheduler=make_scheduler(method, N_CLIENTS),
+            energy=energy, p=batcher.p, optimizer=sgd(lr))
+        carry = sim.init(jax.random.PRNGKey(args.seed + 1), params0)
+        step = jax.jit(sim.step)
+        accs = []
+        for t in range(iters):
+            carry, _ = step(carry)
+            if t % args.eval_every == 0 or t == iters - 1:
+                accs.append((t, float(acc_fn(carry.params))))
+        curves[method] = accs
+        print(f"{method:<12} final acc = {accs[-1][1]:.3f}")
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write("method,iteration,test_accuracy\n")
+        for m, accs in curves.items():
+            for t, a in accs:
+                f.write(f"{m},{t},{a:.4f}\n")
+    print(f"wrote {args.out}")
+
+    final = {m: curves[m][-1][1] for m in METHODS}
+    print("\npaper Fig-1 ordering check: "
+          f"alg1={final['alg1']:.3f} ≥ benchmarks "
+          f"(b1={final['benchmark1']:.3f}, b2={final['benchmark2']:.3f}); "
+          f"oracle={final['oracle']:.3f}")
+    return final
+
+
+if __name__ == "__main__":
+    main()

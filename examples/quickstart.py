@@ -1,0 +1,56 @@
+"""Quickstart: energy-harvesting distributed SGD in ~60 lines.
+
+Builds the paper's setting on a closed-form quadratic: 8 clients with
+heterogeneous periodic energy (τ cycling through 1/5/10/20), and compares
+Algorithm 1 against the paper's two benchmarks and the full-participation
+oracle. Run:
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ClientSimulator, make_quadratic, make_scheduler
+from repro.core.energy import DeterministicArrivals
+from repro.optim import sgd
+
+N_CLIENTS, STEPS, ETA = 8, 1000, 0.01  # t=1000 as in the paper's Fig. 1
+TAUS = [(1, 5, 10, 20)[i % 4] for i in range(N_CLIENTS)]
+
+
+def main():
+    problem = make_quadratic(jax.random.PRNGKey(0), N_CLIENTS, dim=10,
+                             hetero=1.0)
+    energy = DeterministicArrivals.periodic(TAUS, horizon=STEPS + 1)
+
+    def grads_fn(params, key, t):
+        return problem.all_grads(params, key=key, noise=0.05)
+
+    print(f"{N_CLIENTS} clients, energy periods {TAUS}")
+    print(f"{'scheduler':<12} {'final subopt':>14} {'mean weight Σω':>16}")
+    results = {}
+    for name in ("alg1", "benchmark1", "benchmark2", "oracle"):
+        sim = ClientSimulator(
+            grads_fn=grads_fn,
+            scheduler=make_scheduler(name, N_CLIENTS),
+            energy=energy,
+            p=problem.p,
+            optimizer=sgd(ETA),
+            loss_fn=problem.suboptimality,
+        )
+        w0 = jnp.full((10,), 5.0)
+        _, hist = sim.run(jax.random.PRNGKey(1), w0, STEPS)
+        final = float(np.asarray(hist.loss[-100:]).mean())
+        results[name] = final
+        print(f"{name:<12} {final:>14.5f} "
+              f"{float(hist.weight_sum.mean()):>16.3f}")
+
+    assert results["alg1"] < results["benchmark1"], "Alg1 must beat B1"
+    assert results["alg1"] < results["benchmark2"], "Alg1 must beat B2"
+    print("\nAlgorithm 1 (unbiased energy-aware) beats both benchmarks ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Batched serving example: KV-cache greedy decode across architectures.
+
+Runs reduced variants of a dense, an MoE, a hybrid-SSM and the enc-dec
+arch through the same serve_step API and reports tokens/s.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+
+from repro.launch.serve import main as serve_main
+
+ARCHS = ["minitron-4b", "phi3.5-moe-42b-a6.6b", "zamba2-2.7b",
+         "whisper-tiny"]
+
+
+def main():
+    for arch in ARCHS:
+        serve_main(["--arch", arch, "--reduced", "--batch", "4",
+                    "--prompt-len", "8", "--new-tokens", "24"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""End-to-end driver: train a ~100M-parameter LM with energy-aware
+distributed SGD for a few hundred steps.
+
+The model is the stablelm-1.6b *family* scaled to ~100M parameters
+(same blocks, GQA, norm). Default CPU budget uses ``--preset small``
+(~20M params, minutes); ``--preset 100m`` is the full deliverable run
+(~100M params, a few hours on 1 CPU core — exactly the same code path).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig
+
+PRESETS = {
+    # name: (d_model, n_layers, n_heads, n_kv, d_ff, vocab)
+    "small": (384, 6, 6, 6, 1024, 8192),      # ~20M params
+    "100m": (640, 10, 10, 10, 1792, 50304),   # ~105M params
+}
+
+
+def make_cfg(preset: str) -> ArchConfig:
+    d, l, h, kv, ff, vocab = PRESETS[preset]
+    base = get_config("stablelm-1.6b")
+    return base.replace(
+        name=f"stablelm-family-{preset}", n_layers=l, d_model=d, n_heads=h,
+        n_kv_heads=kv, head_dim=d // h, d_ff=ff, vocab=vocab,
+        dtype_name="float32", remat=False)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="small", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--n-clients", type=int, default=8)
+    ap.add_argument("--scheduler", default="alg1")
+    ap.add_argument("--arrivals", default="periodic")
+    args = ap.parse_args(argv)
+
+    from repro.launch import train as train_mod
+    # monkey-free: reuse the production driver with our config injected
+    cfg = make_cfg(args.preset)
+    if args.global_batch % args.n_clients:
+        args.n_clients = max(1, args.global_batch // 2)  # keep divisible
+    orig_get = train_mod.get_config
+    train_mod.get_config = lambda name: cfg
+    try:
+        losses = train_mod.main([
+            "--arch", cfg.name,
+            "--steps", str(args.steps),
+            "--global-batch", str(args.global_batch),
+            "--seq-len", str(args.seq_len),
+            "--n-clients", str(args.n_clients),
+            "--scheduler", args.scheduler,
+            "--arrivals", args.arrivals,
+        ])
+    finally:
+        train_mod.get_config = orig_get
+    assert np.mean(losses[-10:]) < losses[0], "loss must decrease"
+    print("train_lm: loss decreased ✓")
+
+
+if __name__ == "__main__":
+    main()

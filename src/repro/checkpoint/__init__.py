@@ -1,0 +1,8 @@
+from repro.checkpoint.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    restore_pytree,
+    save_pytree,
+)
+
+__all__ = ["save_pytree", "restore_pytree", "CheckpointManager", "latest_step"]

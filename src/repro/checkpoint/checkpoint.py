@@ -1,0 +1,119 @@
+"""Pytree checkpointing on npz — no external deps, structure-checked.
+
+Leaves are flattened with ``jax.tree_util.tree_flatten_with_path`` so the
+npz carries stable, human-readable keys; restore verifies the target
+structure matches and re-dtypes leaves to the template.
+
+``CheckpointManager`` adds step-indexed directories, atomic writes
+(write-to-tmp + rename) and retention.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _key_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {}
+    for p, leaf in flat:
+        arr = np.asarray(leaf)
+        if arr.dtype.name not in ("float64", "float32", "float16", "int64",
+                                  "int32", "int16", "int8", "uint64",
+                                  "uint32", "uint16", "uint8", "bool"):
+            # bfloat16 / fp8 etc. don't survive npz — store as float32;
+            # restore re-casts to the template dtype.
+            arr = arr.astype(np.float32)
+        arrays[_key_str(p)] = arr
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                               suffix=".tmp.npz")
+    os.close(fd)
+    try:
+        np.savez(tmp, **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def restore_pytree(path: str, template: Any) -> Any:
+    with np.load(path) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for p, leaf in flat:
+            key = _key_str(p)
+            if key not in data:
+                raise KeyError(f"checkpoint {path} missing leaf {key!r}")
+            arr = data[key]
+            if tuple(arr.shape) != tuple(np.shape(leaf)):
+                raise ValueError(
+                    f"shape mismatch for {key!r}: ckpt {arr.shape} vs "
+                    f"template {np.shape(leaf)}")
+            leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+_STEP_RE = re.compile(r"^step_(\d+)\.npz$")
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := _STEP_RE.match(f))]
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def path(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step}.npz")
+
+    def save(self, step: int, tree: Any) -> str:
+        p = self.path(step)
+        save_pytree(p, tree)
+        self._retain()
+        return p
+
+    def restore(self, template: Any, step: int | None = None) -> tuple[Any, int]:
+        if step is None:
+            step = latest_step(self.directory)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        return restore_pytree(self.path(step), template), step
+
+    def _retain(self) -> None:
+        steps = sorted(
+            int(m.group(1)) for f in os.listdir(self.directory)
+            if (m := _STEP_RE.match(f)))
+        for s in steps[:-self.keep] if self.keep else []:
+            os.remove(self.path(s))
+
+    def delete(self) -> None:
+        shutil.rmtree(self.directory, ignore_errors=True)

@@ -1,0 +1,54 @@
+"""Config registry: the 10 assigned architectures (+ the paper's CNN task).
+
+``get_config(name)`` / ``--arch <id>`` resolve through ``REGISTRY``.
+"""
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import (
+    DEFAULT_N_CLIENTS,
+    INPUT_SHAPES,
+    InputShape,
+    effective_window,
+    input_specs,
+)
+
+from repro.configs import (
+    command_r_35b,
+    deepseek_coder_33b,
+    llama4_scout_17b,
+    minitron_4b,
+    phi35_moe_42b,
+    qwen2_vl_2b,
+    stablelm_1p6b,
+    whisper_tiny,
+    xlstm_1p3b,
+    zamba2_2p7b,
+)
+
+REGISTRY = {
+    c.CONFIG.name: c.CONFIG
+    for c in (
+        phi35_moe_42b, minitron_4b, whisper_tiny, llama4_scout_17b,
+        zamba2_2p7b, xlstm_1p3b, deepseek_coder_33b, stablelm_1p6b,
+        command_r_35b, qwen2_vl_2b,
+    )
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown arch {name!r}; available: {sorted(REGISTRY)}") from None
+
+
+def arch_names():
+    return sorted(REGISTRY)
+
+
+__all__ = [
+    "ArchConfig", "REGISTRY", "get_config", "arch_names",
+    "INPUT_SHAPES", "InputShape", "input_specs", "effective_window",
+    "DEFAULT_N_CLIENTS",
+]

@@ -1,0 +1,33 @@
+"""qwen2-vl-2b — VLM decoder with M-RoPE (transformer backbone only).
+
+[arXiv:2409.12191] 28L, d_model=1536, 12 heads (GQA kv=2), d_ff=8960,
+vocab=151936, M-RoPE sections (16, 24, 24) over head_dim=128, dynamic
+resolution. The ViT vision encoder + projector is a STUB per the
+assignment: ``input_specs`` provides precomputed patch embeddings
+(B, 256, 1536) that the model scatters into the token stream.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-2b",
+    arch_type="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab=151936,
+    m_rope=True,
+    mrope_sections=(16, 24, 24),
+    n_vision_tokens=256,
+    rope_theta=1000000.0,
+    long_context_window=8192,
+    norm="rmsnorm",
+    act="silu",
+    use_bias=True,  # qwen2 qkv biases
+    dtype_name="bfloat16",
+    remat=True,
+    citation="[arXiv:2409.12191]",
+)

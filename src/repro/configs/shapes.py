@@ -1,0 +1,112 @@
+"""The four assigned input shapes + ShapeDtypeStruct input specs.
+
+``input_specs(cfg, shape_name)`` returns the exact pytree of
+``jax.ShapeDtypeStruct`` stand-ins the corresponding step function is
+lowered with — weak-type-correct, shardable, zero allocation. Decode
+shapes include the full decode state (KV caches / SSM states) as inputs:
+``serve_step`` consumes ONE new token against a cache of ``seq_len``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+class InputShape(NamedTuple):
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+DEFAULT_N_CLIENTS = 32  # energy-harvesting client slots for train shapes
+
+
+def effective_window(cfg: ArchConfig, shape: InputShape) -> int:
+    """long_500k forces sliding-window attention on attention blocks
+    (sub-quadratic requirement); other shapes use the config's window."""
+    if shape.name == "long_500k":
+        has_attn = any(k in ("attn_mlp", "attn_moe", "xattn")
+                       for k, _, _ in cfg.resolved_superblock)
+        if has_attn:
+            return cfg.long_context_window
+    return cfg.sliding_window
+
+
+def _modality_specs(cfg: ArchConfig, batch: int):
+    extra = {}
+    if cfg.n_vision_tokens:
+        extra["vision_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_vision_tokens, cfg.d_model), cfg.dtype)
+    if cfg.enc_dec:
+        extra["audio_feats"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_len, cfg.d_model), cfg.dtype)
+    return extra
+
+
+def train_input_specs(cfg: ArchConfig, shape: InputShape,
+                      n_clients: int = DEFAULT_N_CLIENTS):
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), i32),
+        "labels": jax.ShapeDtypeStruct((b, s), i32),
+        "client_ids": jax.ShapeDtypeStruct((b,), i32),
+    }
+    specs.update(_modality_specs(cfg, b))
+    sched = {
+        "mask": jax.ShapeDtypeStruct((n_clients,), jnp.float32),
+        "scale": jax.ShapeDtypeStruct((n_clients,), jnp.float32),
+    }
+    return specs, sched
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: InputShape):
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    specs.update(_modality_specs(cfg, b))
+    return specs
+
+
+def decode_input_specs(cfg: ArchConfig, shape: InputShape):
+    # lazy import: repro.models imports repro.configs.base (cycle guard)
+    from repro.models.transformer import decode_cache_len, init_decode_state
+    b, s = shape.global_batch, shape.seq_len
+    window = effective_window(cfg, shape)
+    cache_len = decode_cache_len(cfg, s, window=window or None)
+    states = jax.eval_shape(
+        lambda: init_decode_state(cfg, b, cache_len))
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "states": states,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if cfg.enc_dec:
+        specs["memory"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_len, cfg.d_model), cfg.dtype)
+    return specs
+
+
+def input_specs(cfg: ArchConfig, shape_name: str,
+                n_clients: int = DEFAULT_N_CLIENTS):
+    """Dispatch on the shape's mode. Returns (specs, mode)."""
+    shape = INPUT_SHAPES[shape_name]
+    if not cfg.supports_shape(shape_name):
+        raise ValueError(f"{cfg.name} skips {shape_name} (see DESIGN.md §4)")
+    if shape.mode == "train":
+        return train_input_specs(cfg, shape, n_clients), "train"
+    if shape.mode == "prefill":
+        return prefill_input_specs(cfg, shape), "prefill"
+    return decode_input_specs(cfg, shape), "decode"

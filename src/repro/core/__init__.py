@@ -1,0 +1,54 @@
+"""Core of the reproduction: the paper's contribution.
+
+* :mod:`repro.core.energy` — energy-arrival processes E_i^t (§II-B)
+* :mod:`repro.core.scheduling` — Algorithm 1 / 2 + paper benchmarks (§III, §V)
+* :mod:`repro.core.aggregation` — unbiased scaled server aggregation (eq. 11/12)
+* :mod:`repro.core.convergence` — Theorem 1 / Corollary 1 constants & bounds
+* :mod:`repro.core.trainer` — EnergyAwareTrainer (simulator + SPMD step)
+"""
+
+from repro.core.energy import (
+    Arrivals,
+    BinaryArrivals,
+    DeterministicArrivals,
+    UniformArrivals,
+    expected_participation,
+)
+from repro.core.scheduling import (
+    AlwaysOnScheduler,
+    BestEffortScheduler,
+    Decision,
+    EHAppointmentScheduler,
+    WaitForAllScheduler,
+    make_scheduler,
+    scheduler_names,
+)
+from repro.core.aggregation import (
+    aggregate_client_grads,
+    client_weights,
+    per_example_coefficients,
+    server_update,
+)
+from repro.core.convergence import (
+    QuadraticProblem,
+    biased_fixed_point,
+    error_floor,
+    make_quadratic,
+    max_step_size,
+    theorem1_bound,
+    variance_constant,
+)
+from repro.core.trainer import ClientSimulator, build_energy_train_step
+
+__all__ = [
+    "Arrivals", "BinaryArrivals", "DeterministicArrivals", "UniformArrivals",
+    "expected_participation",
+    "AlwaysOnScheduler", "BestEffortScheduler", "Decision",
+    "EHAppointmentScheduler", "WaitForAllScheduler", "make_scheduler",
+    "scheduler_names",
+    "aggregate_client_grads", "client_weights", "per_example_coefficients",
+    "server_update",
+    "QuadraticProblem", "biased_fixed_point", "error_floor", "make_quadratic",
+    "max_step_size", "theorem1_bound", "variance_constant",
+    "ClientSimulator", "build_energy_train_step",
+]

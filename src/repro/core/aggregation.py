@@ -1,0 +1,99 @@
+"""Server-side aggregation (paper eq. 11 / 12), in three flavours.
+
+The update the paper's server performs is
+
+    w ← w − η · Σ_{i∈S_t} p_i · scale_i^t · g_i(w, ξ_i)
+
+which we express as a *weighted sum over the client axis* with weights
+``ω_i = p_i · mask_i · scale_i``. Three execution paths, all algebraically
+identical:
+
+1. ``aggregate_client_grads`` — client-stacked gradients (leading axis N),
+   pure jnp. Used by the paper-scale simulator (vmap over clients).
+2. ``aggregate_client_grads_kernel`` — same contract, but the flat
+   parameter vector is reduced by the Pallas ``masked scaled aggregate``
+   kernel (``repro.kernels.aggregate``) — the TPU hot path for the server.
+3. ``per_example_coefficients`` — the *SPMD path* for framework-scale
+   training: instead of materializing N per-client gradients, each example
+   in the global batch carries the coefficient of its owning client, and
+   the ordinary gradient of the weighted loss equals the paper's update.
+   This is what the pjit train step uses; it adds **zero** collective
+   traffic over plain data-parallel SGD.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scheduling import Decision
+
+
+def client_weights(p: jax.Array, decision: Decision) -> jax.Array:
+    """ω_i = p_i · mask_i · scale_i — the per-client aggregation weight."""
+    return p * decision.mask * decision.scale
+
+
+def aggregate_client_grads(stacked_grads, weights: jax.Array):
+    """Weighted sum over the leading (client) axis of a gradient pytree.
+
+    stacked_grads: pytree whose leaves have shape (N, ...).
+    weights: (N,) float32 — ω_i.
+    """
+
+    def _one(leaf):
+        w = weights.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        return jnp.sum(w * leaf, axis=0)
+
+    return jax.tree_util.tree_map(_one, stacked_grads)
+
+
+def aggregate_client_grads_kernel(stacked_grads, weights: jax.Array):
+    """Same contract as :func:`aggregate_client_grads` via the Pallas kernel.
+
+    Flattens every leaf to (N, P), reduces with the kernel, reshapes back.
+    Imported lazily so the pure-jnp path has no kernel dependency.
+    """
+    from repro.kernels.aggregate import ops as agg_ops
+
+    def _one(leaf):
+        n = leaf.shape[0]
+        flat = leaf.reshape(n, -1)
+        out = agg_ops.masked_scaled_aggregate(flat, weights.astype(leaf.dtype))
+        return out.reshape(leaf.shape[1:])
+
+    return jax.tree_util.tree_map(_one, stacked_grads)
+
+
+def per_example_coefficients(
+    client_ids: jax.Array,
+    weights: jax.Array,
+    examples_per_client: jax.Array | int,
+) -> jax.Array:
+    """Per-example loss coefficients realizing the paper's update in SPMD.
+
+    If client i owns b_i examples of the batch and g_i is the *mean*
+    gradient over its examples, then
+
+        Σ_i ω_i g_i = Σ_i Σ_{j∈i} (ω_i / b_i) · ∇l_ij
+
+    so example j of client i gets coefficient ω_i / b_i. Gradient of
+    ``sum(coeff * per_example_loss)`` == paper's aggregated update.
+
+    client_ids : (B,) int32 — owning client of each example.
+    weights    : (N,) float32 — ω_i.
+    examples_per_client : scalar or (N,) — b_i.
+    """
+    b = jnp.asarray(examples_per_client, jnp.float32)
+    if b.ndim == 0:
+        per_client = weights / b
+    else:
+        per_client = weights / jnp.maximum(b, 1.0)
+    return per_client[client_ids]
+
+
+def server_update(params, aggregated_grads, lr):
+    """Plain SGD server update, w ← w − η · aggregate (paper eq. 11)."""
+    return jax.tree_util.tree_map(
+        lambda w, g: w - lr * g.astype(w.dtype), params, aggregated_grads
+    )

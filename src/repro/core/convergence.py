@@ -1,0 +1,156 @@
+"""Theorem 1 / Corollary 1 machinery + strongly-convex test problems.
+
+Implements the paper's convergence constants exactly:
+
+    C = ( Σ_i (T_i,max − 1) p_i²  +  Σ_i Σ_j p_i p_j ) G²          (eq. 21)
+
+    E[F(w^T)] − F* ≤ (L/μ)(1−ημ)^T (F(w⁰) − F* − ηC/2) + ηLC/(2μ)  (eq. 20)
+
+and provides a family of strongly-convex quadratic problems with
+closed-form optima so tests/benchmarks can compare the *empirical*
+suboptimality of every scheduler against the bound.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def variance_constant(p, t_max, g2) -> jax.Array:
+    """C from eq. (21). ``t_max``: (N,) per-client T_{i,max} (or 1/β_i, T_i
+    per Corollary 1). ``g2``: the second-moment bound G²."""
+    p = jnp.asarray(p, jnp.float32)
+    t_max = jnp.asarray(t_max, jnp.float32)
+    return (jnp.sum((t_max - 1.0) * p**2) + jnp.sum(p) ** 2) * g2
+
+
+def theorem1_bound(t, f0_gap, mu, lsmooth, eta, c) -> jax.Array:
+    """Right-hand side of eq. (20) as a function of iteration t."""
+    t = jnp.asarray(t, jnp.float32)
+    decay = (lsmooth / mu) * (1.0 - eta * mu) ** t * (f0_gap - eta * c / 2.0)
+    floor = eta * lsmooth * c / (2.0 * mu)
+    return decay + floor
+
+
+def error_floor(mu, lsmooth, eta, c) -> float:
+    """The non-vanishing term ηLC/(2μ) (Remark 1)."""
+    return float(eta * lsmooth * c / (2.0 * mu))
+
+
+def max_step_size(mu, lsmooth) -> float:
+    """η ≤ min{1/(2μ), 1/L} required by Theorem 1."""
+    return float(min(1.0 / (2.0 * mu), 1.0 / lsmooth))
+
+
+class QuadraticProblem(NamedTuple):
+    """N-client quadratic: F_i(w) = ½ wᵀ A_i w − b_iᵀ w + c_i.
+
+    Each A_i is symmetric PD, so F = Σ p_i F_i is μ-strongly convex with
+    μ = λ_min(Σ p_i A_i), L = λ_max(Σ p_i A_i), and
+    w* = (Σ p_i A_i)⁻¹ Σ p_i b_i — everything in closed form.
+    """
+
+    a: jax.Array       # (N, d, d)
+    b: jax.Array       # (N, d)
+    p: jax.Array       # (N,)
+    w_star: jax.Array  # (d,)
+    mu: float
+    lsmooth: float
+
+    @property
+    def n_clients(self) -> int:
+        return self.a.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.a.shape[1]
+
+    def local_grad(self, i, w, key=None, noise=0.0):
+        """∇F_i(w) (+ optional isotropic noise → 'stochastic' gradient)."""
+        g = self.a[i] @ w - self.b[i]
+        if key is not None and noise > 0.0:
+            g = g + noise * jax.random.normal(key, g.shape)
+        return g
+
+    def all_grads(self, w, key=None, noise=0.0):
+        """(N, d) stacked local gradients, optionally noisy."""
+        g = jnp.einsum("nij,j->ni", self.a, w) - self.b
+        if key is not None and noise > 0.0:
+            g = g + noise * jax.random.normal(key, g.shape)
+        return g
+
+    def global_loss(self, w):
+        quad = 0.5 * jnp.einsum("i,nij,j,n->", w, self.a, w, self.p)
+        lin = jnp.einsum("ni,i,n->", self.b, w, self.p)
+        return quad - lin
+
+    def suboptimality(self, w):
+        return self.global_loss(w) - self.global_loss(self.w_star)
+
+    def grad_second_moment_bound(self, radius: float) -> float:
+        """G² over the ball ||w − w*|| ≤ radius (deterministic gradients).
+
+        ||∇F_i(w)|| = ||A_i(w − w*) + (A_i w* − b_i)||
+                    ≤ L_i·radius + ||A_i w* − b_i||.
+        """
+        a = np.asarray(self.a)
+        ws = np.asarray(self.w_star)
+        b = np.asarray(self.b)
+        worst = 0.0
+        for i in range(a.shape[0]):
+            li = float(np.linalg.eigvalsh(a[i]).max())
+            resid = float(np.linalg.norm(a[i] @ ws - b[i]))
+            worst = max(worst, (li * radius + resid) ** 2)
+        return worst
+
+
+def make_quadratic(
+    key, n_clients: int, dim: int, hetero: float = 1.0, cond: float = 10.0
+) -> QuadraticProblem:
+    """Random well-conditioned quadratic with heterogeneous client optima.
+
+    ``hetero`` controls how far apart the per-client minimizers are — the
+    lever that makes Benchmark 1's bias visible (biased participation pulls
+    w toward energy-rich clients' minimizers).
+    """
+    k1, k2, k3 = jax.random.split(key, 3)
+    # Per-client SPD matrices with spectrum in [1, cond].
+    qs = jax.random.normal(k1, (n_clients, dim, dim))
+
+    def _spd(q):
+        q, _ = jnp.linalg.qr(q)
+        eigs = jnp.linspace(1.0, cond, dim)
+        return (q * eigs) @ q.T
+
+    a = jax.vmap(_spd)(qs)
+    centers = hetero * jax.random.normal(k2, (n_clients, dim))
+    b = jnp.einsum("nij,nj->ni", a, centers)
+    p_raw = jax.random.uniform(k3, (n_clients,), minval=0.5, maxval=1.5)
+    p = p_raw / jnp.sum(p_raw)
+
+    a_bar = jnp.einsum("n,nij->ij", p, a)
+    b_bar = jnp.einsum("n,ni->i", p, b)
+    w_star = jnp.linalg.solve(a_bar, b_bar)
+    eigs = jnp.linalg.eigvalsh(a_bar)
+    return QuadraticProblem(
+        a=a, b=b, p=p, w_star=w_star,
+        mu=float(eigs[0]), lsmooth=float(eigs[-1]),
+    )
+
+
+def biased_fixed_point(problem: QuadraticProblem, participation: jax.Array) -> jax.Array:
+    """Fixed point of *unscaled* best-effort SGD (Benchmark 1).
+
+    With participation probabilities q_i and no rescaling, the expected
+    update drives w to argmin Σ_i q_i p_i F_i — the biased optimum the
+    paper warns about. Closed form for quadratics; used to *quantitatively*
+    verify the bias claim, not just eyeball it.
+    """
+    q = jnp.asarray(participation, jnp.float32)
+    a_bar = jnp.einsum("n,nij->ij", q * problem.p, problem.a)
+    b_bar = jnp.einsum("n,ni->i", q * problem.p, problem.b)
+    return jnp.linalg.solve(a_bar, b_bar)

@@ -1,0 +1,170 @@
+"""Energy-arrival processes (paper §II-B).
+
+Each process models ``E_i^t`` — whether client ``i`` harvests a unit of
+energy at step ``t`` — for ``n_clients`` clients, vectorized and
+scan-friendly so the whole training loop can live under ``jax.jit`` /
+``jax.lax.scan``.
+
+Protocol (duck-typed; all methods pure):
+
+    init(key)              -> state                     (pytree)
+    arrivals(state, t, key)-> (state, Arrivals)
+
+``Arrivals`` carries:
+    energy : (N,) float32 in {0,1}   -- E_i^t
+    gap    : (N,) float32            -- T_i^t for deterministic arrivals
+                                        (gap between the arrival at/most
+                                        recently before t and the next one);
+                                        for stochastic processes, the
+                                        *nominal* scaling constant γ_i
+                                        (1/β_i binary, T_i uniform).
+
+Three concrete processes, mirroring the paper exactly:
+
+* ``DeterministicArrivals`` — arrival times known in advance (paper
+  §II-B-1). Built from an explicit (N, horizon) 0/1 schedule or from
+  per-client periods via :meth:`DeterministicArrivals.periodic`.
+* ``BinaryArrivals`` — E_i^t ~ Bern(β_i) iid per step (paper eq. 9).
+* ``UniformArrivals`` — exactly one arrival per window of length T_i,
+  uniformly placed within the window (paper §II-B-2, "Uniform Arrivals").
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Arrivals(NamedTuple):
+    """Per-step arrival information for all clients."""
+
+    energy: jax.Array  # (N,) float32 in {0, 1}
+    gap: jax.Array     # (N,) float32 — T_i^t (det.) or γ_i (stochastic)
+
+
+class DeterministicArrivals:
+    """Deterministic energy arrivals known in advance (paper §II-B-1).
+
+    Parameters
+    ----------
+    schedule : (N, horizon) 0/1 array of arrival indicators. Arrival times
+        for client i are ``I_i = {t : schedule[i, t] == 1}``.
+
+    Precomputes, on the host (the schedule is known in advance by
+    assumption), the gap table ``T[i, t] = Ī_i^t − I_i^t`` used by
+    Algorithm 1. At an arrival time ``t`` this is the distance to the next
+    arrival; the final interval is truncated at the horizon so the run
+    stays self-contained (and the scheme stays unbiased within the run).
+    Steps before a client's first arrival have gap 0 (the client cannot
+    participate yet).
+    """
+
+    def __init__(self, schedule):
+        schedule = np.asarray(schedule)
+        if schedule.ndim != 2:
+            raise ValueError(f"schedule must be (N, horizon), got {schedule.shape}")
+        self.n_clients, self.horizon = schedule.shape
+        self._np_schedule = (schedule != 0).astype(np.float32)
+
+        gaps = np.zeros_like(self._np_schedule)
+        for i in range(self.n_clients):
+            ts = np.flatnonzero(self._np_schedule[i])
+            for k, t0 in enumerate(ts):
+                t1 = ts[k + 1] if k + 1 < len(ts) else self.horizon
+                gaps[i, t0:t1] = t1 - t0  # T_i^t constant over [I, Ī)
+        self.schedule = jnp.asarray(self._np_schedule)
+        self.gaps = jnp.asarray(gaps)
+
+    @classmethod
+    def periodic(cls, taus, horizon: int, offsets=None) -> "DeterministicArrivals":
+        """Paper's experimental profile (eq. 37): arrivals at ``t ≡ off (mod τ_i)``."""
+        taus = np.asarray(taus, dtype=np.int64)
+        if offsets is None:
+            offsets = np.zeros_like(taus)
+        offsets = np.asarray(offsets, dtype=np.int64)
+        t = np.arange(horizon)[None, :]
+        sched = ((t - offsets[:, None]) % taus[:, None] == 0) & (t >= offsets[:, None])
+        return cls(sched.astype(np.float32))
+
+    def init(self, key):
+        del key
+        return ()
+
+    def arrivals(self, state, t, key):
+        del key
+        t = jnp.asarray(t, jnp.int32)
+        # Past the precomputed horizon there are no further arrivals.
+        tc = jnp.clip(t, 0, self.horizon - 1)
+        valid = (t < self.horizon).astype(jnp.float32)
+        energy = self.schedule[:, tc] * valid
+        gap = self.gaps[:, tc] * valid
+        return state, Arrivals(energy=energy, gap=gap)
+
+
+class BinaryArrivals:
+    """E_i^t ~ Bern(β_i), iid across steps and clients (paper eq. 9)."""
+
+    def __init__(self, betas):
+        self.betas = jnp.asarray(betas, jnp.float32)
+        self.n_clients = self.betas.shape[0]
+
+    def init(self, key):
+        del key
+        return ()
+
+    def arrivals(self, state, t, key):
+        del t
+        u = jax.random.uniform(key, (self.n_clients,))
+        energy = (u < self.betas).astype(jnp.float32)
+        gap = 1.0 / self.betas  # γ_i = 1/β_i (Alg. 2 / Corollary 1)
+        return state, Arrivals(energy=energy, gap=gap)
+
+
+class UniformArrivalsState(NamedTuple):
+    offset: jax.Array  # (N,) int32 — arrival position inside current window
+
+
+class UniformArrivals:
+    """One arrival per window of length T_i, uniformly placed (paper §II-B-2).
+
+    For every t with ``t mod T_i == 0`` a fresh offset ``U{0,…,T_i−1}`` is
+    drawn; the client receives energy when ``t mod T_i == offset``. Windows
+    are per-client, so clients with different ``T_i`` roll over at
+    different times.
+    """
+
+    def __init__(self, periods):
+        self.periods = jnp.asarray(periods, jnp.int32)
+        self.n_clients = self.periods.shape[0]
+
+    def init(self, key):
+        # Offsets for the first window (the t=0 step rolls them anyway if
+        # t mod T == 0, which it is; keep a valid placeholder).
+        offset = jax.random.randint(key, (self.n_clients,), 0, jnp.asarray(2**30)) % self.periods
+        return UniformArrivalsState(offset=offset.astype(jnp.int32))
+
+    def arrivals(self, state, t, key):
+        t = jnp.asarray(t, jnp.int32)
+        pos = t % self.periods
+        fresh = jax.random.randint(key, (self.n_clients,), 0, jnp.asarray(2**30)) % self.periods
+        offset = jnp.where(pos == 0, fresh.astype(jnp.int32), state.offset)
+        energy = (pos == offset).astype(jnp.float32)
+        gap = self.periods.astype(jnp.float32)  # γ_i = T_i (Corollary 1)
+        return UniformArrivalsState(offset=offset), Arrivals(energy=energy, gap=gap)
+
+
+def expected_participation(process) -> jax.Array:
+    """Long-run participation probability per client under best-effort.
+
+    Used by tests and by the theory module (Corollary 1 constants).
+    """
+    if isinstance(process, BinaryArrivals):
+        return process.betas
+    if isinstance(process, UniformArrivals):
+        return 1.0 / process.periods.astype(jnp.float32)
+    if isinstance(process, DeterministicArrivals):
+        return jnp.mean(process.schedule, axis=1)
+    raise TypeError(f"unknown process {type(process)!r}")

@@ -1,0 +1,213 @@
+"""User-scheduling policies (paper §III + §V benchmarks).
+
+Every scheduler is a pure-jax state machine:
+
+    init(key)               -> state
+    step(state, t, key, arrivals) -> (state, Decision)
+
+with ``Decision(mask, scale)``:
+
+    mask  : (N,) float32 in {0,1} — α_i^t, does client i participate at t
+    scale : (N,) float32          — the gradient scaling the client applies
+                                    (T_i^t, γ_i, or 1 for benchmarks)
+
+The server-side weight for client i at step t is then
+``p_i · mask_i · scale_i`` (paper eq. 11/12), assembled by
+:mod:`repro.core.aggregation`.
+
+Schedulers
+----------
+* ``EHAppointmentScheduler`` — **Algorithm 1** (deterministic arrivals):
+  on arrival at t, draw J ~ U{0,…,T_i^t−1}, book an appointment at t+J,
+  participate then with scale T_i^t. P[participate at any step] = 1/T_i^t.
+* ``BestEffortScheduler`` — **Algorithm 2** (stochastic arrivals):
+  participate immediately on arrival, scale γ_i (=1/β_i or T_i).
+  With ``scaled=False`` it degrades into the paper's **Benchmark 1**
+  (energy-agnostic best-effort).
+* ``WaitForAllScheduler`` — **Benchmark 2**: clients bank energy in a unit
+  battery; a global synchronous step fires only when *all* batteries are
+  full.
+* ``AlwaysOnScheduler`` — the full-participation oracle (conventional
+  distributed SGD with all users available, paper §V "target").
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.energy import Arrivals
+
+
+class Decision(NamedTuple):
+    mask: jax.Array   # (N,) float32 in {0,1}
+    scale: jax.Array  # (N,) float32
+
+
+class AppointmentState(NamedTuple):
+    appt_time: jax.Array   # (N,) int32 — booked participation step (-1: none)
+    appt_scale: jax.Array  # (N,) float32 — T_i^t captured at booking time
+
+
+class EHAppointmentScheduler:
+    """Algorithm 1 — unbiased scheduling for deterministic arrivals."""
+
+    def __init__(self, n_clients: int):
+        self.n_clients = n_clients
+
+    def init(self, key):
+        del key
+        return AppointmentState(
+            appt_time=jnp.full((self.n_clients,), -1, jnp.int32),
+            appt_scale=jnp.zeros((self.n_clients,), jnp.float32),
+        )
+
+    def step(self, state, t, key, arrivals: Arrivals):
+        t = jnp.asarray(t, jnp.int32)
+        gap = jnp.maximum(arrivals.gap, 1.0)
+        # J ~ Uniform{0, …, T_i^t − 1}, per-client bound. randint with a
+        # vector bound isn't supported; use floor(u * gap) which is exact
+        # for integer gap (u ∈ [0,1)).
+        u = jax.random.uniform(key, (self.n_clients,))
+        j = jnp.floor(u * gap).astype(jnp.int32)
+        j = jnp.minimum(j, gap.astype(jnp.int32) - 1)  # paranoia vs. u→1 rounding
+        arrived = arrivals.energy > 0
+        appt_time = jnp.where(arrived, t + j, state.appt_time)
+        appt_scale = jnp.where(arrived, gap, state.appt_scale)
+        mask = (appt_time == t).astype(jnp.float32)
+        new_state = AppointmentState(appt_time=appt_time, appt_scale=appt_scale)
+        return new_state, Decision(mask=mask, scale=appt_scale)
+
+
+class BestEffortScheduler:
+    """Algorithm 2 (scaled=True) / paper Benchmark 1 (scaled=False)."""
+
+    def __init__(self, n_clients: int, scaled: bool = True):
+        self.n_clients = n_clients
+        self.scaled = scaled
+
+    def init(self, key):
+        del key
+        return ()
+
+    def step(self, state, t, key, arrivals: Arrivals):
+        del t, key
+        mask = arrivals.energy
+        if self.scaled:
+            scale = jnp.maximum(arrivals.gap, 1.0)
+        else:
+            scale = jnp.ones_like(mask)
+        return state, Decision(mask=mask, scale=scale)
+
+
+class WaitForAllState(NamedTuple):
+    battery: jax.Array  # (N,) float32 in {0,1} — unit battery
+
+
+class WaitForAllScheduler:
+    """Benchmark 2 — synchronous step only when every battery is full."""
+
+    def __init__(self, n_clients: int):
+        self.n_clients = n_clients
+
+    def init(self, key):
+        del key
+        return WaitForAllState(battery=jnp.zeros((self.n_clients,), jnp.float32))
+
+    def step(self, state, t, key, arrivals: Arrivals):
+        del t, key
+        battery = jnp.minimum(state.battery + arrivals.energy, 1.0)
+        fire = jnp.min(battery) >= 1.0
+        mask = jnp.where(fire, jnp.ones_like(battery), jnp.zeros_like(battery))
+        battery = battery - mask
+        return WaitForAllState(battery=battery), Decision(
+            mask=mask, scale=jnp.ones_like(battery)
+        )
+
+
+class AlwaysOnScheduler:
+    """Full-participation oracle (conventional distributed SGD)."""
+
+    def __init__(self, n_clients: int):
+        self.n_clients = n_clients
+
+    def init(self, key):
+        del key
+        return ()
+
+    def step(self, state, t, key, arrivals: Arrivals):
+        del t, key, arrivals
+        ones = jnp.ones((self.n_clients,), jnp.float32)
+        return state, Decision(mask=ones, scale=ones)
+
+
+class BatteryState(NamedTuple):
+    battery: jax.Array  # (N,) float32 in [0, capacity]
+    rate: jax.Array     # (N,) float32 — EMA participation-rate estimate
+    steps: jax.Array    # () int32
+
+
+class BatteryAdaptiveScheduler:
+    """Beyond-paper: energy ACCUMULATION (the paper's §VI future work).
+
+    Devices bank harvested energy in a battery of ``capacity`` units
+    (paper assumes capacity 1) and participate whenever ≥1 unit is
+    stored. Unbiasedness is restored *adaptively*: each client scales its
+    gradient by the inverse of its own EMA participation-rate estimate —
+    "requires only local estimation of the energy statistics" (abstract).
+    With capacity 1 and Bernoulli arrivals this converges to Algorithm 2's
+    1/β_i scaling without knowing β_i.
+    """
+
+    def __init__(self, n_clients: int, capacity: float = 2.0,
+                 ema: float = 0.05, warmup: int = 20):
+        self.n_clients = n_clients
+        self.capacity = capacity
+        self.ema = ema
+        self.warmup = warmup
+
+    def init(self, key):
+        del key
+        return BatteryState(
+            battery=jnp.zeros((self.n_clients,), jnp.float32),
+            rate=jnp.ones((self.n_clients,), jnp.float32),
+            steps=jnp.zeros((), jnp.int32),
+        )
+
+    def step(self, state, t, key, arrivals: Arrivals):
+        del t, key
+        battery = jnp.minimum(state.battery + arrivals.energy, self.capacity)
+        mask = (battery >= 1.0).astype(jnp.float32)
+        battery = battery - mask
+        rate = (1 - self.ema) * state.rate + self.ema * mask
+        # During warmup the estimate is unusable -> scale 1 (biased but
+        # bounded); afterwards scale by 1/r̂ clipped for stability.
+        scale = jnp.where(state.steps >= self.warmup,
+                          1.0 / jnp.clip(rate, 0.02, 1.0),
+                          jnp.ones_like(rate))
+        new = BatteryState(battery=battery, rate=rate, steps=state.steps + 1)
+        return new, Decision(mask=mask, scale=scale)
+
+
+_REGISTRY = {
+    "alg1": lambda n, **kw: EHAppointmentScheduler(n),
+    "alg2": lambda n, **kw: BestEffortScheduler(n, scaled=True),
+    "benchmark1": lambda n, **kw: BestEffortScheduler(n, scaled=False),
+    "benchmark2": lambda n, **kw: WaitForAllScheduler(n),
+    "oracle": lambda n, **kw: AlwaysOnScheduler(n),
+    "battery_adaptive": lambda n, **kw: BatteryAdaptiveScheduler(n, **kw),
+}
+
+
+def make_scheduler(name: str, n_clients: int, **kw):
+    """Scheduler factory — names used across configs/CLI/benchmarks."""
+    try:
+        return _REGISTRY[name](n_clients, **kw)
+    except KeyError:
+        raise ValueError(f"unknown scheduler {name!r}; have {sorted(_REGISTRY)}") from None
+
+
+def scheduler_names():
+    return sorted(_REGISTRY)

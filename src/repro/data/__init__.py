@@ -1,0 +1,22 @@
+"""Data substrate: synthetic datasets, federated partitioning, batching."""
+
+from repro.data.synthetic import (
+    SyntheticImageDataset,
+    SyntheticLMDataset,
+    make_confusable_image_classification,
+    make_image_classification,
+    make_lm_tokens,
+)
+from repro.data.partition import (
+    dirichlet_partition,
+    group_label_skew_partition,
+    iid_partition,
+)
+from repro.data.loader import ClientBatcher, GlobalBatcher
+
+__all__ = [
+    "SyntheticImageDataset", "SyntheticLMDataset",
+    "make_image_classification", "make_lm_tokens",
+    "iid_partition", "dirichlet_partition", "group_label_skew_partition",
+    "ClientBatcher", "GlobalBatcher",
+]

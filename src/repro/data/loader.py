@@ -1,0 +1,104 @@
+"""Batching: per-client samplers (simulator path) and global batchers (SPMD).
+
+Everything is device-resident jnp + PRNG-indexed gather so batch sampling
+can live *inside* the jitted/scan'd training loop (the paper's eq. (4)
+ξ_i^t sampling) with no host round-trips.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ClientBatcher:
+    """Per-client uniform sampling ξ_i^t from equal-size client shards.
+
+    Stores client data as stacked arrays (N, D_i, ...) (shards padded to a
+    common size by resampling, recorded in ``true_sizes`` so p_i can still
+    reflect the real D_i). ``sample(key)`` returns a pytree of
+    (N, batch, ...) minibatches, one per client — vmap-ready.
+    """
+
+    def __init__(self, arrays_per_client: list[dict], batch_size: int, seed: int = 0):
+        if not arrays_per_client:
+            raise ValueError("need at least one client")
+        self.n_clients = len(arrays_per_client)
+        self.batch_size = batch_size
+        sizes = [len(next(iter(d.values()))) for d in arrays_per_client]
+        self.true_sizes = np.asarray(sizes, dtype=np.int64)
+        cap = max(sizes)
+        rng = np.random.default_rng(seed)
+        stacked: dict[str, np.ndarray] = {}
+        for name in arrays_per_client[0]:
+            per = []
+            for d, size in zip(arrays_per_client, sizes):
+                arr = np.asarray(d[name])
+                if size < cap:  # pad by resampling with replacement
+                    extra = arr[rng.integers(0, size, cap - size)]
+                    arr = np.concatenate([arr, extra], axis=0)
+                per.append(arr)
+            stacked[name] = np.stack(per, axis=0)
+        self.data = {k: jnp.asarray(v) for k, v in stacked.items()}
+        self.shard_size = cap
+
+    @property
+    def p(self) -> jnp.ndarray:
+        """p_i = D_i / D from the true (pre-padding) shard sizes."""
+        return jnp.asarray(self.true_sizes / self.true_sizes.sum(), jnp.float32)
+
+    def sample(self, key) -> dict:
+        idx = jax.random.randint(
+            key, (self.n_clients, self.batch_size), 0, self.shard_size)
+
+        def gather(arr):
+            return jax.vmap(lambda a, ix: a[ix])(arr, idx)
+
+        return {k: gather(v) for k, v in self.data.items()}
+
+
+class GlobalBatcher:
+    """Global-batch sampler for the SPMD path.
+
+    The global batch of size B is laid out as ``n_clients`` contiguous
+    slots of B/N examples; ``client_ids`` marks ownership so the train
+    step can apply per-example energy coefficients. Sampling is
+    jnp-resident like ClientBatcher.
+    """
+
+    def __init__(self, data: dict, n_clients: int, global_batch: int,
+                 client_index: list[np.ndarray] | None = None):
+        if global_batch % n_clients != 0:
+            raise ValueError(f"global_batch {global_batch} % n_clients {n_clients} != 0")
+        self.n_clients = n_clients
+        self.global_batch = global_batch
+        self.per_client = global_batch // n_clients
+        n = len(next(iter(data.values())))
+        if client_index is None:
+            # IID: every client samples from the full dataset.
+            self._index = None
+            self.data = {k: jnp.asarray(v) for k, v in data.items()}
+            self._n = n
+        else:
+            cap = max(len(ix) for ix in client_index)
+            rng = np.random.default_rng(0)
+            padded = []
+            for ix in client_index:
+                if len(ix) < cap:
+                    ix = np.concatenate([ix, rng.choice(ix, cap - len(ix))])
+                padded.append(ix)
+            self._index = jnp.asarray(np.stack(padded))  # (N, cap)
+            self.data = {k: jnp.asarray(v) for k, v in data.items()}
+            self._n = cap
+        self.client_ids = jnp.repeat(jnp.arange(n_clients, dtype=jnp.int32),
+                                     self.per_client)
+
+    def sample(self, key) -> dict:
+        idx = jax.random.randint(key, (self.n_clients, self.per_client), 0, self._n)
+        if self._index is not None:
+            idx = jax.vmap(lambda row, ix: row[ix])(self._index, idx)
+        flat = idx.reshape(-1)
+        batch = {k: v[flat] for k, v in self.data.items()}
+        batch["client_ids"] = self.client_ids
+        return batch

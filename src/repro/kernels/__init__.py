@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots (validated in interpret
+mode on CPU; Mosaic-compiled on TPU):
+
+* ``aggregate`` — masked/scaled client-gradient aggregation (the paper's
+  server update, eq. 11/12)
+* ``flash_attention`` — blockwise causal/sliding-window GQA attention
+* ``ssm_scan`` — chunked gated-linear-recurrence (Mamba2 SSD / mLSTM)
+
+Each ships ``ops.py`` (jit'd wrapper) and ``ref.py`` (pure-jnp oracle).
+"""

@@ -1,0 +1,4 @@
+from repro.kernels.aggregate.ops import masked_scaled_aggregate
+from repro.kernels.aggregate.ref import masked_scaled_aggregate_ref
+
+__all__ = ["masked_scaled_aggregate", "masked_scaled_aggregate_ref"]

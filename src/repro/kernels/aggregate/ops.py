@@ -1,0 +1,29 @@
+"""Jit'd public wrapper for the aggregation kernel.
+
+On CPU (this container) the kernel runs in interpret mode — the kernel
+body executes in Python per grid step, validating the exact TPU program.
+On TPU it compiles to Mosaic. VMEM budgeting: shrink the parameter tile
+so the (N, bp) block stays ≤ ~8 MB.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.aggregate.aggregate import masked_scaled_aggregate_kernel
+
+_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def masked_scaled_aggregate(g, w, block_p: int = 2048):
+    """out[p] = Σ_n w[n]·g[n,p].  g: (N, P); w: (N,) -> (P,)."""
+    n = g.shape[0]
+    itemsize = g.dtype.itemsize
+    while block_p > 128 and n * block_p * itemsize > _VMEM_BUDGET:
+        block_p //= 2
+    return masked_scaled_aggregate_kernel(
+        g, w, block_p=block_p, interpret=_interpret())

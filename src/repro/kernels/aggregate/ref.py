@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the masked/scaled aggregation kernel."""
+
+import jax.numpy as jnp
+
+
+def masked_scaled_aggregate_ref(g, w):
+    """g: (N, P); w: (N,) -> (P,)."""
+    return jnp.einsum("n,np->p", w.astype(jnp.float32),
+                      g.astype(jnp.float32)).astype(g.dtype)

@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: blockwise (flash) attention, causal + sliding window.
+
+TPU adaptation of FlashAttention: the (S×T) score matrix never
+materializes in HBM; q/k/v stream through VMEM in (bq, dh)/(bk, dh)
+tiles, the running max/denominator live in VMEM scratch across the
+sequential kv-grid dimension, and each tile product is an MXU matmul.
+GQA is handled *in the index map* — query head h reads kv head
+h // (H/Hkv) — so grouped kv is never replicated in memory.
+
+Sliding-window masking makes the kernel sub-quadratic in effect (fully
+masked tiles are skipped with ``pl.when``), which is what qualifies dense
+archs for the ``long_500k`` shape.
+
+Grid: (B, H, nq, nk), nk innermost/sequential ("arbitrary" semantics).
+Scratch per step: acc (bq, dh) f32 + m,l (bq, 128) f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+_STAT = 128  # lane width for m/l scratch columns
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  causal, window, bq, bk, scale):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * bq
+    k_start = ik * bk
+
+    # Tile-level skip test (static shapes, dynamic predicate).
+    live = jnp.asarray(True)
+    if causal:
+        live = live & (k_start <= q_start + bq - 1)
+    if window > 0:
+        live = live & (k_start + bk - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, dh)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bk, dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                                # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                               # (bq, bk)
+        # Rows with everything masked: p would be exp(NEG_INF - NEG_INF)=1.
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                      # (bq, 1)
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_kernel(q, k, v, *, causal=True, window=0,
+                           block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K,
+                           interpret=False):
+    """q: (B, H, S, Dh); k, v: (B, Hkv, T, Dh) -> (B, H, S, Dh)."""
+    b, h, s, dh = q.shape
+    _, hkv, t, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    bq = min(block_q, s)
+    bk = min(block_k, t)
+    assert s % bq == 0 and t % bk == 0, (s, bq, t, bk)
+    grid = (b, h, s // bq, t // bk)
+    scale = dh ** -0.5
+
+    kernel = functools.partial(_flash_kernel, causal=causal, window=window,
+                               bq=bq, bk=bk, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b_, h_, iq, ik, g=group: (b_, h_ // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b_, h_, iq, ik, g=group: (b_, h_ // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh),
+                               lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dh), jnp.float32),
+            pltpu.VMEM((bq, _STAT), jnp.float32),
+            pltpu.VMEM((bq, _STAT), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

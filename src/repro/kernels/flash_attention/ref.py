@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for blockwise attention (causal / sliding window / GQA)."""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B, H, S, Dh); k, v: (B, Hkv, T, Dh) -> (B, H, S, Dh)."""
+    b, h, s, dh = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = h // hkv
+    qf = q.astype(jnp.float32) * (dh ** -0.5)
+    qf = qf.reshape(b, hkv, g, s, dh)
+    logits = jnp.einsum("bhgsd,bhtd->bhgst", qf, k.astype(jnp.float32))
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bhtd->bhgsd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, s, dh).astype(q.dtype)

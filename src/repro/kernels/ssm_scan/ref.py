@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: sequential evaluation of the gated linear recurrence."""
+
+import jax
+import jax.numpy as jnp
+
+
+def gla_scan_ref(a, k, v, q):
+    """a: (BH, S); k,q: (BH, S, dk); v: (BH, S, dv) -> (BH, S, dv) f32."""
+    f32 = lambda x: x.astype(jnp.float32)
+    a, k, v, q = f32(a), f32(k), f32(v), f32(q)
+    bh = a.shape[0]
+    dk, dv = k.shape[-1], v.shape[-1]
+
+    def body(h, xs):
+        a_t, k_t, v_t, q_t = xs
+        h = a_t[:, None, None] * h + k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bd,bdv->bv", q_t, h)
+        return h, y
+
+    h0 = jnp.zeros((bh, dk, dv), jnp.float32)
+    _, ys = jax.lax.scan(
+        body, h0,
+        (a.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+         q.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1)

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: chunked gated-linear-recurrence (SSD) scan.
+
+The Mamba2 / mLSTM recurrence  H_t = a_t H_{t-1} + k_t v_tᵀ,
+y_t = q_tᵀ H_t  evaluated chunkwise: the (dk, dv) state lives in VMEM
+scratch across the sequential chunk-grid dimension; each grid step does
+two MXU matmuls (intra-chunk quadratic + inter-chunk state read) and one
+rank-c state update. This is the TPU adaptation of Mamba2's SSD CUDA
+kernel: chunk matmuls on the MXU replace the GPU's warp-level scan
+(DESIGN.md §Hardware adaptation).
+
+Grid: (B·H, S/chunk) — chunk axis sequential ("arbitrary").
+VMEM per step: chunk·(2dk+dv) inputs + dk·dv state + chunk² scores.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_LOG_EPS = 1e-12
+
+
+def _gla_kernel(a_ref, k_ref, v_ref, q_ref, y_ref, h_ref, *, chunk):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)                      # (c,)
+    k = k_ref[0].astype(jnp.float32)                      # (c, dk)
+    v = v_ref[0].astype(jnp.float32)                      # (c, dv)
+    q = q_ref[0].astype(jnp.float32)                      # (c, dk)
+    la = jnp.cumsum(jnp.log(jnp.maximum(a, _LOG_EPS)))    # (c,)
+
+    # inter-chunk: decay(start→t) · qᵀ H_prev
+    qd = q * jnp.exp(la)[:, None]
+    y = jax.lax.dot(qd, h_ref[...], preferred_element_type=jnp.float32)
+
+    # intra-chunk (causal, decay-weighted)
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (c, c)
+    ratio = jnp.exp(la[:, None] - la[None, :])
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    scores = jnp.where(tri, scores * ratio, 0.0)
+    y = y + jax.lax.dot(scores, v, preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state carry: H ← decay(chunk)·H + Σ_s decay(s→end) k_s v_sᵀ
+    dec_end = jnp.exp(la[-1] - la)                         # (c,)
+    kw = k * dec_end[:, None]
+    h_ref[...] = (jnp.exp(la[-1]) * h_ref[...]
+                  + jax.lax.dot_general(kw, v, (((0,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def gla_scan_kernel(a, k, v, q, *, chunk=64, interpret=False):
+    """a: (BH, S); k,q: (BH, S, dk); v: (BH, S, dv) -> y (BH, S, dv).
+
+    S must be a multiple of ``chunk`` (ops.py pads).
+    """
+    bh, s = a.shape
+    dk, dv = k.shape[-1], v.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    grid = (bh, s // chunk)
+    kernel = functools.partial(_gla_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, chunk, dk), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dv), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dv), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, k, v, q)

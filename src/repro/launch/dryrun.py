@@ -1,0 +1,292 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh).
+
+Proves the distribution config is coherent without hardware: for each
+assigned architecture and input shape, the train/prefill/serve step is
+``jax.jit(...).lower(**ShapeDtypeStructs).compile()``'d against the
+production mesh — (16,16)=(data,model) single pod AND (2,16,16)=
+(pod,data,model) two pods — and the compiled artifact's
+memory_analysis / cost_analysis / collective schedule are recorded to
+``benchmarks/results/dryrun.json`` for the §Roofline tables.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch command-r-35b \
+        --shape train_4k --mesh multi_pod
+Incremental: existing (arch, shape, mesh) entries are skipped unless
+--force.
+"""
+
+import argparse      # noqa: E402
+import functools     # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    DEFAULT_N_CLIENTS,
+    INPUT_SHAPES,
+    arch_names,
+    effective_window,
+    get_config,
+    input_specs,
+)
+from repro.launch import roofline  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import (  # noqa: E402
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+from repro.models import init_lm  # noqa: E402
+from repro.sharding import batch_specs, param_specs, state_specs  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "results", "dryrun.json")
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _memory_analysis(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _cost_analysis(compiled):
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in dict(ca).items()
+            if isinstance(v, (int, float))}
+
+
+def _coerce(v: str):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return v == "True"
+    return v
+
+
+def lower_pair(arch: str, shape_name: str, multi_pod: bool,
+               unroll: bool | None = None, overrides: dict | None = None):
+    """Lower + compile one (arch, shape, mesh). Returns the record dict.
+
+    ``unroll`` (default: single-pod yes, multi-pod no): unrolled layers
+    make cost_analysis / collective parsing count every layer (XLA counts
+    a while body ONCE — measured); the scan version is the faster
+    production artifact and is what the multi-pod coherence proof uses.
+    Roofline tables read the single-pod (unrolled) records.
+    """
+    if unroll is None:
+        unroll = not multi_pod
+    cfg = get_config(arch).replace(unroll_layers=unroll, **(overrides or {}))
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    window = effective_window(cfg, shape) or None
+    t0 = time.time()
+
+    with mesh:
+        params_s = jax.eval_shape(
+            lambda: init_lm(jax.random.PRNGKey(0), cfg))
+        p_specs = param_specs(params_s, mesh)
+
+        if shape.mode == "train":
+            (batch_s, sched_s), _ = input_specs(cfg, shape_name)
+            init_state, train_step = make_train_step(
+                cfg, DEFAULT_N_CLIENTS, window=window)
+            state_s = jax.eval_shape(init_state, params_s)
+            # optimizer state mirrors the param tree → same suffix rules
+            st_specs = param_specs(state_s, mesh)
+            b_specs = batch_specs(batch_s, mesh)
+            repl = P()
+            jitted = jax.jit(
+                train_step,
+                in_shardings=(_ns(mesh, st_specs), _ns(mesh, b_specs),
+                              _ns(mesh, repl), _ns(mesh, repl)),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_s, batch_s, sched_s["mask"],
+                                   sched_s["scale"])
+        elif shape.mode == "prefill":
+            specs, _ = input_specs(cfg, shape_name)
+            prefill = make_prefill_step(cfg, window=window)
+            b_specs = batch_specs(specs, mesh)
+            jitted = jax.jit(prefill,
+                             in_shardings=(_ns(mesh, p_specs),
+                                           _ns(mesh, b_specs)))
+            lowered = jitted.lower(params_s, specs)
+        else:  # decode
+            specs, _ = input_specs(cfg, shape_name)
+            serve = make_serve_step(cfg, window=window)
+            tok_specs = batch_specs({"tokens": specs["tokens"]}, mesh)["tokens"]
+            s_specs = state_specs(specs["states"], mesh)
+            in_sh = [_ns(mesh, p_specs), _ns(mesh, tok_specs),
+                     _ns(mesh, s_specs), _ns(mesh, P())]
+            args = [params_s, specs["tokens"], specs["states"], specs["pos"]]
+            if cfg.enc_dec:
+                mem_spec = batch_specs({"m": specs["memory"]}, mesh)["m"]
+                in_sh.append(_ns(mesh, mem_spec))
+                args.append(specs["memory"])
+                serve_fn = lambda p, t, s, pos, mem: serve(p, t, s, pos,
+                                                           memory=mem)
+            else:
+                serve_fn = serve
+            # Pin output states to the INPUT cache sharding — leaving it
+            # to the compiler makes GSPMD all-gather the entire KV cache
+            # at step exit (measured: 69.6 GB/step on minitron decode_32k,
+            # EXPERIMENTS.md §Perf hillclimb 2).
+            b = specs["tokens"].shape[0]
+            tok_out = batch_specs(
+                {"t": jax.ShapeDtypeStruct((b,), jnp.int32)}, mesh)["t"]
+            logit_out = batch_specs(
+                {"l": jax.ShapeDtypeStruct((b, cfg.vocab), cfg.dtype)},
+                mesh)["l"]
+            jitted = jax.jit(
+                serve_fn, in_shardings=tuple(in_sh),
+                out_shardings=(_ns(mesh, tok_out), _ns(mesh, logit_out),
+                               _ns(mesh, s_specs)),
+                donate_argnums=(2,))
+            lowered = jitted.lower(*args)
+
+        compiled = lowered.compile()
+
+    compile_s = time.time() - t0
+    hlo = compiled.as_text()
+    coll = roofline.parse_collective_bytes(hlo)
+    cost = _cost_analysis(compiled)
+    mem = _memory_analysis(compiled)
+    mf = roofline.model_flops(cfg, shape_name)
+    flops = cost.get("flops", 0.0)
+    # Decide scope: GSPMD-partitioned modules are per-device programs.
+    per_device = flops < 0.6 * mf  # heuristic recorded for transparency
+    terms = roofline.roofline_terms(
+        flops, cost.get("bytes accessed", 0.0), coll["total"], chips,
+        per_device=per_device)
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "mode": shape.mode,
+        "layer_accounting": "unrolled" if unroll else "scan_body_once",
+        "compile_seconds": round(compile_s, 1),
+        "flops": flops,
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "collectives": coll,
+        "memory_analysis": mem,
+        "model_flops": mf,
+        "flops_scope": "per_device" if per_device else "whole_module",
+        "roofline": terms,
+        "useful_flops_ratio": (mf / (flops * (chips if per_device else 1))
+                               if flops else None),
+    }
+    return record
+
+
+def load_results(path=RESULTS):
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def save_results(results, path=RESULTS):
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(results, f, indent=1)
+
+
+def key_of(arch, shape, mesh_name):
+    return f"{arch}|{shape}|{mesh_name}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi_pod", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--unroll", default="auto", choices=["auto", "on", "off"])
+    ap.add_argument("--out", default=RESULTS)
+    ap.add_argument("--set", action="append", default=[],
+                    help="ArchConfig override, e.g. --set remat_policy=dots")
+    args = ap.parse_args()
+    unroll = {"auto": None, "on": True, "off": False}[args.unroll]
+    overrides = dict(kv.split("=", 1) for kv in args.set)
+    overrides = {k: _coerce(v) for k, v in overrides.items()}
+
+    archs = arch_names() if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi_pod": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = load_results(args.out)
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes:
+            if not cfg.supports_shape(shape):
+                print(f"SKIP  {arch} × {shape} (see DESIGN.md §4)")
+                continue
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                k = key_of(arch, shape, mesh_name)
+                if k in results and not args.force:
+                    print(f"CACHED {k}")
+                    continue
+                print(f"LOWER {k} ...", flush=True)
+                try:
+                    rec = lower_pair(arch, shape, mp, unroll=unroll,
+                                     overrides=overrides)
+                    results[k] = rec
+                    save_results(results, args.out)
+                    r = rec["roofline"]
+                    print(f"  ok in {rec['compile_seconds']}s  "
+                          f"compute={r['compute_s']:.3e}s "
+                          f"memory={r['memory_s']:.3e}s "
+                          f"coll={r['collective_s']:.3e}s "
+                          f"bottleneck={r['bottleneck']}")
+                except Exception as e:  # noqa: BLE001
+                    failures.append((k, repr(e)))
+                    traceback.print_exc()
+    if failures:
+        print("\nFAILURES:")
+        for k, e in failures:
+            print(f"  {k}: {e}")
+        raise SystemExit(1)
+    print("\nall requested dry-runs compiled OK")
+
+
+if __name__ == "__main__":
+    main()

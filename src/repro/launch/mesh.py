@@ -1,0 +1,26 @@
+"""Production mesh definitions.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (device count locks on first jax init).
+
+  single pod : (16, 16)    axes ("data", "model")   = 256 chips
+  multi-pod  : (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+The dry-run launcher sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512``
+before any jax import so 512 placeholder CPU devices exist.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke paths (tests, examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

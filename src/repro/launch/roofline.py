@@ -1,0 +1,116 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs  / (chips × 197e12  bf16 FLOP/s)
+    memory     = HLO_bytes  / (chips × 819e9   B/s HBM)
+    collective = coll_bytes / (chips × 50e9    B/s/link ICI)
+
+``cost_analysis()`` yields flops / bytes accessed; collective bytes are
+NOT in cost_analysis — they are parsed from the post-SPMD HLO text by
+summing the result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.
+
+Whether cost_analysis is per-device or whole-module depends on the
+backend's partitioning; the dry-run records ``flops_scope`` by comparing
+against the analytic MODEL_FLOPS so tables are interpreted consistently.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import INPUT_SHAPES
+
+PEAK_FLOPS = 197e12   # bf16 / chip (TPU v5e)
+HBM_BW = 819e9        # B/s / chip
+LINK_BW = 50e9        # B/s / link (ICI)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %ag = bf16[2,1024,512]{2,1,0} all-gather(%x), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes per collective kind from HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if kind.endswith("-done"):
+            continue
+        out[kind] += _shape_bytes(dtype, dims)
+        counts[kind] += 1
+    total = sum(out.values())
+    return {"per_kind": out, "counts": counts, "total": total}
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   collective_bytes: float, chips: int,
+                   per_device: bool) -> dict:
+    """Terms in seconds. ``per_device``: whether flops/bytes already
+    describe one chip's program (post-SPMD module) or the whole mesh."""
+    div = 1 if per_device else chips
+    compute = flops / div / PEAK_FLOPS
+    memory = bytes_accessed / div / HBM_BW
+    collective = collective_bytes / div / LINK_BW
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k]).replace("_s", "")
+    return terms
+
+
+# -------------------------------------------------------- analytic FLOPs
+
+def active_params(cfg: ArchConfig) -> float:
+    """Parameters touched per token (MoE: top-k experts + shared)."""
+    import jax
+    from repro.models import init_lm
+
+    shapes = jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), cfg))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+
+    total = 0.0
+    for path, leaf in flat:
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        n = math.prod(leaf.shape)
+        if "moe/w_" in keys and cfg.n_experts:
+            n = n * cfg.top_k / cfg.n_experts
+        total += n
+    return total
+
+
+def model_flops(cfg: ArchConfig, shape_name: str) -> float:
+    """MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference)."""
+    shape = INPUT_SHAPES[shape_name]
+    n_act = active_params(cfg)
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence
+    return 2.0 * n_act * shape.global_batch

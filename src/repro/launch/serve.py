@@ -1,0 +1,85 @@
+"""Batched serving driver: greedy decode with KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-vl-2b \
+        --reduced --batch 4 --prompt-len 16 --new-tokens 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.steps import make_serve_step
+from repro.models import encode, init_decode_state, init_lm
+from repro.models.transformer import decode_cache_len
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(args.seed)
+    k_param, k_prompt = jax.random.split(key)
+    params = init_lm(k_param, cfg)
+
+    cache_len = decode_cache_len(cfg, args.max_len)
+    states = init_decode_state(cfg, args.batch, cache_len)
+    serve = jax.jit(make_serve_step(cfg), donate_argnums=(2,))
+
+    memory = None
+    if cfg.enc_dec:
+        memory = encode(params, cfg,
+                        jnp.zeros((args.batch, cfg.enc_len, cfg.d_model),
+                                  cfg.dtype))
+
+    prompt = jax.random.randint(
+        k_prompt, (args.batch, args.prompt_len), 0, cfg.vocab, jnp.int32)
+
+    def step(tok, states, pos):
+        if cfg.enc_dec:
+            return serve(params, tok, states, jnp.asarray(pos), memory)
+        return serve(params, tok, states, jnp.asarray(pos))
+
+    # Prefill by sequential cache writes (teacher-forced prompt tokens).
+    t0 = time.time()
+    tok = prompt[:, :1]
+    for pos in range(args.prompt_len):
+        tok_in = prompt[:, pos:pos + 1]
+        next_tok, logits, states = step(tok_in, states, pos)
+    prefill_s = time.time() - t0
+
+    out_tokens = []
+    t0 = time.time()
+    tok = next_tok[:, None]
+    for i in range(args.new_tokens):
+        next_tok, logits, states = step(tok, states, args.prompt_len + i)
+        out_tokens.append(next_tok)
+        tok = next_tok[:, None]
+    jax.block_until_ready(next_tok)
+    decode_s = time.time() - t0
+
+    toks = jnp.stack(out_tokens, axis=1)
+    print(f"arch={cfg.name} batch={args.batch} "
+          f"prefill {args.prompt_len} tok in {prefill_s:.2f}s; "
+          f"decode {args.new_tokens} tok in {decode_s:.2f}s "
+          f"({args.batch * args.new_tokens / decode_s:.1f} tok/s)")
+    print("sample tokens:", toks[0, :16].tolist())
+    return toks
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Step-function builders: train / prefill / serve per architecture.
+
+These are the exact functions the dry-run lowers and the drivers run.
+The energy-harvesting weighting (paper eq. 11/12) enters ``train_step``
+through the (mask, scale) scheduler outputs — see
+``repro.core.trainer.build_energy_train_step``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.trainer import build_energy_train_step
+from repro.models import transformer
+from repro.optim import adamw, sgd
+
+
+def make_train_step(cfg: ArchConfig, n_clients: int, *, lr: float = 1e-4,
+                    optimizer=None, window=None):
+    """Returns (init_state, train_step(state, batch, mask, scale))."""
+    if optimizer is None:
+        optimizer = adamw(lr)
+
+    def loss_fn(params, batch):
+        return transformer.per_example_loss(params, cfg, batch, window=window)
+
+    return build_energy_train_step(
+        per_example_loss_fn=loss_fn,
+        optimizer=optimizer,
+        n_clients=n_clients,
+        aux_loss_weight=(0.01 if cfg.n_experts else 0.0),
+    )
+
+
+def make_prefill_step(cfg: ArchConfig, *, window=None):
+    """prefill(params, batch) -> last-position logits (B, vocab).
+
+    The LM head is applied to the final position only — the (B, S, vocab)
+    logits tensor never materializes (537 GB for command-r @ 32k×32).
+    """
+
+    def prefill(params, batch):
+        x, _ = transformer.hidden_states(
+            params, cfg, batch["tokens"],
+            vision_embeds=batch.get("vision_embeds"),
+            audio_feats=batch.get("audio_feats"),
+            window=window)
+        last = x[:, -1:]
+        logits = transformer._head(params, cfg, last)
+        return logits[:, 0]
+
+    return prefill
+
+
+def make_serve_step(cfg: ArchConfig, *, window=None, greedy: bool = True):
+    """serve(params, tokens (B,1), states, pos[, memory]) ->
+    (next_token (B,), logits (B,vocab), new_states)."""
+
+    def serve(params, tokens, states, pos, memory=None):
+        logits, new_states = transformer.decode_step(
+            params, cfg, tokens, states, pos, memory=memory, window=window)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_states
+
+    return serve
+
+
+def make_sgd_train_step(cfg: ArchConfig, n_clients: int, lr: float = 0.05,
+                        window=None):
+    """Paper-exact variant: plain SGD server update (eq. 11)."""
+    return make_train_step(cfg, n_clients, optimizer=sgd(lr), window=window)

@@ -1,0 +1,150 @@
+"""Energy-aware distributed LM training driver.
+
+Runs any ``--arch`` (full or ``--reduced`` smoke variant) under any
+scheduler (alg1 / alg2 / benchmark1 / benchmark2 / oracle) and energy
+profile. The energy scheduler runs as a tiny jitted state machine beside
+the jitted SPMD train step; the (mask, scale) it emits each step is the
+paper's eq. (11/12) weighting, applied inside the train step with zero
+extra collective traffic.
+
+CPU example (end-to-end, ~100M params):
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
+        --reduced --steps 200 --global-batch 16 --seq-len 128 \
+        --scheduler alg1 --arrivals periodic
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.core.energy import (
+    BinaryArrivals,
+    DeterministicArrivals,
+    UniformArrivals,
+)
+from repro.core.scheduling import make_scheduler
+from repro.data import GlobalBatcher, make_lm_tokens
+from repro.launch.steps import make_train_step
+from repro.models import count_params, init_lm
+from repro.optim import adamw
+
+
+def make_energy_process(kind: str, n_clients: int, horizon: int):
+    """Paper §V profile: 4 groups, periods (1, 5, 10, 20) — generalized to
+    N clients by cycling the group periods (client i ∈ group i mod 4)."""
+    taus = np.array([(1, 5, 10, 20)[i % 4] for i in range(n_clients)])
+    if kind == "periodic":
+        return DeterministicArrivals.periodic(taus, horizon)
+    if kind == "binary":
+        return BinaryArrivals(1.0 / taus)
+    if kind == "uniform":
+        return UniformArrivals(taus)
+    raise ValueError(kind)
+
+
+def default_scheduler_for(arrivals: str, requested: str) -> str:
+    if requested != "auto":
+        return requested
+    return "alg1" if arrivals == "periodic" else "alg2"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--n-clients", type=int, default=8)
+    ap.add_argument("--scheduler", default="auto",
+                    help="auto|alg1|alg2|benchmark1|benchmark2|oracle")
+    ap.add_argument("--arrivals", default="periodic",
+                    choices=["periodic", "binary", "uniform"])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(args.seed)
+    k_param, k_data, k_sched, k_energy, k_batch = jax.random.split(key, 5)
+
+    params = init_lm(k_param, cfg)
+    print(f"arch={cfg.name} reduced={args.reduced} "
+          f"params={count_params(params):,}")
+
+    lm = make_lm_tokens(args.seed, 512, args.seq_len, cfg.vocab)
+    batcher = GlobalBatcher({"raw": lm.tokens}, n_clients=args.n_clients,
+                            global_batch=args.global_batch)
+
+    sched_name = default_scheduler_for(args.arrivals, args.scheduler)
+    scheduler = make_scheduler(sched_name, args.n_clients)
+    energy = make_energy_process(args.arrivals, args.n_clients,
+                                 horizon=args.steps + 1)
+
+    init_state, train_step = make_train_step(
+        cfg, args.n_clients, optimizer=adamw(args.lr))
+    state = init_state(params)
+    train_step = jax.jit(train_step, donate_argnums=(0,))
+
+    sched_state = scheduler.init(k_sched)
+    energy_state = energy.init(k_energy)
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+
+    @jax.jit
+    def sched_step(sstate, estate, t, k):
+        k1, k2 = jax.random.split(k)
+        estate, arr = energy.arrivals(estate, t, k1)
+        sstate, dec = scheduler.step(sstate, t, k2, arr)
+        return sstate, estate, dec.mask, dec.scale
+
+    t_start = time.time()
+    losses = []
+    for step in range(args.steps):
+        k_batch, kb, ks = jax.random.split(k_batch, 3)
+        batch_raw = batcher.sample(kb)
+        batch = {
+            "tokens": batch_raw["raw"][:, :-1],
+            "labels": batch_raw["raw"][:, 1:],
+            "client_ids": batch_raw["client_ids"],
+        }
+        if cfg.n_vision_tokens:
+            batch["vision_embeds"] = jnp.zeros(
+                (args.global_batch, cfg.n_vision_tokens, cfg.d_model),
+                cfg.dtype)
+        if cfg.enc_dec:
+            batch["audio_feats"] = jnp.zeros(
+                (args.global_batch, cfg.enc_len, cfg.d_model), cfg.dtype)
+        sched_state, energy_state, mask, scale = sched_step(
+            sched_state, energy_state, jnp.asarray(step), ks)
+        state, metrics = train_step(state, batch, mask, scale)
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d}  loss={losses[-1]:.4f}  "
+                  f"active={float(metrics['active_clients']):.0f}/"
+                  f"{args.n_clients}  wsum={float(metrics['weight_sum']):.3f}")
+        if ckpt and step and step % args.ckpt_every == 0:
+            ckpt.save(step, state.params)
+
+    dt = time.time() - t_start
+    print(f"done: {args.steps} steps in {dt:.1f}s "
+          f"({args.steps / dt:.2f} steps/s); "
+          f"loss {losses[0]:.4f} -> {np.mean(losses[-10:]):.4f}")
+    if ckpt:
+        ckpt.save(args.steps, state.params)
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Model zoo: composable blocks + stacks covering all assigned archs."""
+
+from repro.models.cnn import cnn_accuracy, cnn_forward, cnn_loss, init_cnn
+from repro.models.common import count_params
+from repro.models.transformer import (
+    decode_cache_len,
+    decode_step,
+    encode,
+    forward,
+    init_decode_state,
+    init_lm,
+    per_example_loss,
+)
+
+__all__ = [
+    "init_cnn", "cnn_forward", "cnn_loss", "cnn_accuracy",
+    "count_params",
+    "init_lm", "forward", "per_example_loss",
+    "init_decode_state", "decode_step", "decode_cache_len", "encode",
+]

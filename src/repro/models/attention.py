@@ -1,0 +1,201 @@
+"""GQA attention: train/prefill path, decode path with KV cache.
+
+Features required across the assigned architectures:
+  * grouped-query attention (n_kv_heads ≤ n_heads)        — all archs
+  * RoPE / M-RoPE (qwen2-vl) / no-rope (whisper, learned pos)
+  * causal, bidirectional (whisper encoder), cross (whisper decoder)
+  * sliding-window variant (sub-quadratic; enables long_500k on dense)
+  * KV cache decode — full cache or ring buffer (sliding window)
+  * optional Pallas flash-attention kernel for the prefill/train path
+
+Tensor convention: x (B, S, D); q (B, S, H, Dh); kv (B, S, Hkv, Dh).
+Sharding: heads split along "model", batch along ("pod","data").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    apply_mrope,
+    apply_rope,
+    dense,
+    dense_init,
+    maybe_shard,
+)
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d_model, n_heads, n_kv_heads, head_dim, dtype,
+                   use_bias=False):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d_model, n_heads * head_dim, dtype, use_bias),
+        "wk": dense_init(kk, d_model, n_kv_heads * head_dim, dtype, use_bias),
+        "wv": dense_init(kv, d_model, n_kv_heads * head_dim, dtype, use_bias),
+        "wo": dense_init(ko, n_heads * head_dim, d_model, dtype, use_bias),
+    }
+
+
+def _split_heads(x, n, dh):
+    return x.reshape(x.shape[:-1] + (n, dh))
+
+
+def _rope(q, k, positions, theta, m_rope, mrope_sections):
+    if positions is None:
+        return q, k
+    if m_rope:
+        return (apply_mrope(q, positions, theta, mrope_sections),
+                apply_mrope(k, positions, theta, mrope_sections))
+    return apply_rope(q, positions, theta), apply_rope(k, positions, theta)
+
+
+def _sdpa(q, k, v, mask):
+    """Reference scaled-dot-product GQA attention.
+
+    q: (B,S,H,Dh), k/v: (B,T,Hkv,Dh); mask: (B,1,S,T) or (S,T) additive or
+    None. Handles GQA by reshaping q into (Hkv, group). Accumulation is
+    f32 via preferred_element_type — K/V are NOT materialized in f32 (that
+    copy doubled decode cache-read bytes; EXPERIMENTS.md §Perf, climb 2).
+    """
+    b, s, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qs = (q * (dh ** -0.5)).reshape(b, s, hkv, g, dh)
+    logits = jnp.einsum("bshgd,bthd->bhgst", qs, k,
+                        preferred_element_type=jnp.float32)
+    if mask is not None:
+        while mask.ndim < logits.ndim:
+            mask = mask[None]
+        logits = logits + mask
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, h, dh).astype(q.dtype)
+
+
+def causal_mask(s, t_len=None, window=0, offset=0):
+    """Additive (S, T) mask. ``offset`` = absolute position of query 0
+    relative to key 0 (for prefill continuation). ``window > 0`` keeps only
+    keys within ``window`` positions behind the query (sliding window)."""
+    t_len = t_len or s
+    qpos = jnp.arange(s)[:, None] + offset
+    kpos = jnp.arange(t_len)[None, :]
+    ok = kpos <= qpos
+    if window > 0:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention(params, x, *, n_heads, n_kv_heads, head_dim,
+              positions=None, rope_theta=1e4, m_rope=False,
+              mrope_sections=(16, 24, 24), causal=True, window=0,
+              kv_override=None, use_flash=False):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    kv_override: (B, T, D) memory for cross-attention (whisper decoder);
+    when set, ``causal`` is ignored (full visibility of the memory).
+    """
+    b, s, _ = x.shape
+    q = _split_heads(dense(params["wq"], x), n_heads, head_dim)
+    kv_in = x if kv_override is None else kv_override
+    k = _split_heads(dense(params["wk"], kv_in), n_kv_heads, head_dim)
+    v = _split_heads(dense(params["wv"], kv_in), n_kv_heads, head_dim)
+    q = maybe_shard(q, ("pod", "data"), None, "model", None)
+    k = maybe_shard(k, ("pod", "data"), None, "model", None)
+    v = maybe_shard(v, ("pod", "data"), None, "model", None)
+    if kv_override is None:
+        q, k = _rope(q, k, positions, rope_theta, m_rope, mrope_sections)
+
+    if use_flash and kv_override is None and causal:
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, causal=True, window=window)
+    else:
+        mask = None
+        if kv_override is None and causal:
+            mask = causal_mask(s, k.shape[1], window=window)
+        out = _sdpa(q, k, v, mask)
+    out = maybe_shard(out, ("pod", "data"), None, "model", None)
+    y = dense(params["wo"], out.reshape(b, s, n_heads * head_dim))
+    return maybe_shard(y, ("pod", "data"), None, None)
+
+
+# ------------------------------------------------------------------ decode
+
+def init_kv_cache(batch, n_kv_heads, head_dim, cache_len, dtype):
+    """cache_len = full seq for dense attention, window for SWA (ring)."""
+    shape = (batch, cache_len, n_kv_heads, head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def decode_attention(params, x, cache, pos, *, n_heads, n_kv_heads, head_dim,
+                     rope_theta=1e4, m_rope=False, mrope_sections=(16, 24, 24),
+                     window=0, kv_override=None, use_rope=True):
+    """One-token decode. x: (B, 1, D); pos: scalar int — absolute position.
+
+    Full attention: cache length = max context; entry ``pos`` is written.
+    Sliding window: cache is a ring buffer of length ``window``; slot
+    ``pos % window`` is overwritten. Returns (y, new_cache).
+    """
+    b = x.shape[0]
+    q = _split_heads(dense(params["wq"], x), n_heads, head_dim)
+    if kv_override is not None:
+        k = _split_heads(dense(params["wk"], kv_override), n_kv_heads, head_dim)
+        v = _split_heads(dense(params["wv"], kv_override), n_kv_heads, head_dim)
+        out = _sdpa(q, k, v, None)
+        y = dense(params["wo"], out.reshape(b, 1, n_heads * head_dim))
+        return y, cache
+
+    k_new = _split_heads(dense(params["wk"], x), n_kv_heads, head_dim)
+    v_new = _split_heads(dense(params["wv"], x), n_kv_heads, head_dim)
+    if use_rope:
+        posv = jnp.full((b, 1), pos)
+        if m_rope:
+            posv3 = jnp.broadcast_to(posv, (3,) + posv.shape)
+            q = apply_mrope(q, posv3, rope_theta, mrope_sections)
+            k_new = apply_mrope(k_new, posv3, rope_theta, mrope_sections)
+        else:
+            q = apply_rope(q, posv, rope_theta)
+            k_new = apply_rope(k_new, posv, rope_theta)
+
+    cache_len = cache["k"].shape[1]
+    slot = (pos % cache_len) if window > 0 else pos
+    # Keep every cache operand on ONE sharding (batch on data, head_dim on
+    # model) across the dynamic-update — otherwise GSPMD replicates the
+    # full cache (f32!) around the DUS: measured 68.7 GB of all-gather per
+    # decode step on minitron decode_32k (EXPERIMENTS.md §Perf, climb 2).
+    cache_spec = (("pod", "data"), None, None, "model")
+    # q on the same (batch, …, head_dim) split: the q·K contraction over
+    # head_dim then stays local per shard (tiny logits all-reduce) instead
+    # of all-gathering K (34 GB/step measured).
+    q = maybe_shard(q, ("pod", "data"), None, None, "model")
+    k_new = maybe_shard(k_new, *cache_spec)
+    v_new = maybe_shard(v_new, *cache_spec)
+    k_in = maybe_shard(cache["k"], *cache_spec)
+    v_in = maybe_shard(cache["v"], *cache_spec)
+    k_cache = maybe_shard(
+        jax.lax.dynamic_update_slice_in_dim(k_in, k_new, slot, axis=1),
+        *cache_spec)
+    v_cache = maybe_shard(
+        jax.lax.dynamic_update_slice_in_dim(v_in, v_new, slot, axis=1),
+        *cache_spec)
+
+    # Validity of cache slots: absolute position of slot j.
+    j = jnp.arange(cache_len)
+    if window > 0:
+        # Ring buffer: slot j holds absolute position with (abs % L == j),
+        # the latest such ≤ pos. Valid iff abs > pos − window and abs ≥ 0.
+        abs_pos = pos - ((pos - j) % cache_len)
+        valid = (abs_pos >= 0) & (abs_pos >= pos - window + 1)
+    else:
+        valid = j <= pos
+    mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)[None, :]  # (1, T)
+    out = _sdpa(q, k_cache, v_cache, mask)
+    y = dense(params["wo"], out.reshape(b, 1, n_heads * head_dim))
+    y = maybe_shard(y, ("pod", "data"), None, None)
+    return y, {"k": k_cache, "v": v_cache}

@@ -1,0 +1,66 @@
+"""The paper's experiment model: the McMahan et al. CIFAR CNN (~10⁶ params).
+
+Paper §V: "the convolutional neural network architecture from [25]
+(about 10^6 model parameters)" — two 5×5 conv layers (32, 64 channels)
+with 2×2 max-pool, then dense 64 → 10 head. Implemented with
+``lax.conv_general_dilated`` (NHWC).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense, dense_init, normal_init
+
+
+def init_cnn(key, *, in_channels=3, n_classes=10, image_hw=32,
+             dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    flat = (image_hw // 4) * (image_hw // 4) * 64
+    return {
+        "conv1": {"w": normal_init(k1, (5, 5, in_channels, 32), dtype,
+                                   (5 * 5 * in_channels) ** -0.5),
+                  "b": jnp.zeros((32,), dtype)},
+        "conv2": {"w": normal_init(k2, (5, 5, 32, 64), dtype,
+                                   (5 * 5 * 32) ** -0.5),
+                  "b": jnp.zeros((64,), dtype)},
+        "fc1": dense_init(k3, flat, 64, dtype, use_bias=True),
+        "head": dense_init(k4, 64, n_classes, dtype, use_bias=True),
+    }
+
+
+def _conv(p, x):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_forward(params, images):
+    """images: (B, H, W, C) -> logits (B, n_classes)."""
+    x = jax.nn.relu(_conv(params["conv1"], images))
+    x = _maxpool2(x)
+    x = jax.nn.relu(_conv(params["conv2"], x))
+    x = _maxpool2(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(dense(params["fc1"], x))
+    return dense(params["head"], x)
+
+
+def cnn_loss(params, images, labels):
+    """Mean cross-entropy over the batch (scalar)."""
+    logits = cnn_forward(params, images).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def cnn_accuracy(params, images, labels):
+    logits = cnn_forward(params, images)
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

@@ -1,0 +1,336 @@
+"""State-space / recurrent blocks: Mamba2 (SSD), mLSTM, sLSTM.
+
+Mamba2 and mLSTM are both *scalar-decay gated linear recurrences* on a
+matrix state,
+
+    H_t = a_t · H_{t-1} + k_t v_tᵀ,      y_t = q_tᵀ H_t
+
+so they share one engine: :func:`chunked_gla` — a chunked
+(intra-chunk-quadratic + inter-chunk-scan) evaluation that is
+sub-quadratic in sequence length, TPU-friendly (chunk matmuls hit the
+MXU), and exact (not an approximation). Decode is the O(1) single-step
+update :func:`gla_step`. This is the hardware adaptation of the papers'
+CUDA kernels (Mamba2's SSD / xLSTM's fused scan) to TPU: chunk matmuls
+replace warp-level scans.
+
+Numerical notes: the recurrence runs in float32; decays are handled in
+log-space. Gates use sigmoid (not exp with max-stabilizer as in xLSTM) —
+a documented simplification (DESIGN.md) that keeps the state bounded.
+
+sLSTM has a true hidden-to-hidden recurrent matrix (non-associative), so
+it runs as a ``lax.scan`` over time — also the honest TPU answer, since
+the original's speed relies on GPU register-level tricks with no MXU
+analogue.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_norm, dense, dense_init, maybe_shard, norm_init
+
+_LOG_EPS = 1e-12
+
+
+# ===================================================================== GLA
+
+def chunked_gla(a, k, v, q, h0=None, chunk: int = 64):
+    """Chunked gated linear recurrence.
+
+    a: (B,S,H) decay in (0,1];   k,q: (B,S,H,Dk);   v: (B,S,H,Dv)
+    Returns y: (B,S,H,Dv) and final state (B,H,Dk,Dv).
+    """
+    b, s, h = a.shape
+    dk, dv = k.shape[-1], v.shape[-1]
+    if s % chunk != 0:
+        pad = chunk - s % chunk
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = a.shape[1]
+    nc = sp // chunk
+
+    f32 = lambda x: x.astype(jnp.float32)
+    a, k, v, q = f32(a), f32(k), f32(v), f32(q)
+    # (nc, B, chunk, H, ...) for scan.
+    resh = lambda x: x.reshape((b, nc, chunk) + x.shape[2:]).swapaxes(0, 1)
+    a_c, k_c, v_c, q_c = resh(a), resh(k), resh(v), resh(q)
+    la = jnp.cumsum(jnp.log(jnp.maximum(a_c, _LOG_EPS)), axis=2)  # (nc,B,c,H)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+
+    def body(hstate, xs):
+        la_i, k_i, v_i, q_i = xs  # (B,c,H,...)
+        # inter-chunk: y += decay(start→t) · qᵀ H_prev
+        qd = q_i * jnp.exp(la_i)[..., None]
+        y_inter = jnp.einsum("bthd,bhdv->bthv", qd, hstate)
+        # intra-chunk (quadratic in `chunk` only)
+        ratio = jnp.exp(la_i[:, :, None, :] - la_i[:, None, :, :])  # (B,t,s,H)
+        scores = jnp.einsum("bthd,bshd->btsh", q_i, k_i) * ratio
+        scores = scores * tri[None, :, :, None]
+        y_intra = jnp.einsum("btsh,bshv->bthv", scores, v_i)
+        # carry: H ← decay(chunk)·H + Σ_s decay(s→end)·k_s v_sᵀ
+        dec_end = jnp.exp(la_i[:, -1:, :] - la_i)  # (B,c,H)
+        h_new = (jnp.exp(la_i[:, -1])[..., None, None] * hstate
+                 + jnp.einsum("bshd,bshv,bsh->bhdv", k_i, v_i, dec_end))
+        return h_new, y_inter + y_intra
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    h_fin, ys = jax.lax.scan(body, f32(h0), (la, k_c, v_c, q_c))
+    y = ys.swapaxes(0, 1).reshape(b, sp, h, dv)[:, :s]
+    return y, h_fin
+
+
+def gla_step(hstate, a_t, k_t, v_t, q_t):
+    """One decode step. hstate: (B,H,Dk,Dv); a_t: (B,H); k/q: (B,H,Dk);
+    v: (B,H,Dv). Returns (y (B,H,Dv), new_state)."""
+    f32 = lambda x: x.astype(jnp.float32)
+    h_new = (f32(a_t)[..., None, None] * f32(hstate)
+             + f32(k_t)[..., :, None] * f32(v_t)[..., None, :])
+    y = jnp.einsum("bhd,bhdv->bhv", f32(q_t), h_new)
+    return y, h_new
+
+
+# ============================================================== causal conv
+
+def init_causal_conv(key, channels, width, dtype):
+    return {"w": (jax.random.normal(key, (width, channels)) * (width ** -0.5)
+                  ).astype(dtype),
+            "b": jnp.zeros((channels,), dtype)}
+
+
+def causal_conv(params, x, state=None):
+    """Depthwise causal conv. x: (B,S,C). state: (B,width-1,C) or None.
+    Returns (y, new_state) — new_state holds the trailing width-1 inputs."""
+    width = params["w"].shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * params["w"][i] for i in range(width))
+    y = y + params["b"]
+    new_state = xp[:, -(width - 1):] if width > 1 else state
+    return y, new_state
+
+
+# ================================================================== Mamba2
+
+def mamba2_dims(d_model, head_dim=64, expand=2):
+    d_inner = expand * d_model
+    return d_inner, d_inner // head_dim
+
+
+def init_mamba2(key, d_model, d_state, dtype, head_dim=64, expand=2,
+                conv_width=4):
+    d_inner, n_heads = mamba2_dims(d_model, head_dim, expand)
+    ks = jax.random.split(key, 5)
+    conv_ch = d_inner + 2 * d_state
+    return {
+        "in_proj": dense_init(
+            ks[0], d_model, 2 * d_inner + 2 * d_state + n_heads, dtype),
+        "conv": init_causal_conv(ks[1], conv_ch, conv_width, dtype),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),         # A = −exp(a_log)
+        "dt_bias": jnp.full((n_heads,), -2.0, jnp.float32),  # softplus ≈ 0.13
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "gate_norm": norm_init(d_inner, dtype),
+        "out_proj": dense_init(ks[4], d_inner, d_model, dtype),
+    }
+
+
+def _mamba2_preact(params, x, d_state, head_dim, conv_state=None):
+    """Shared by train & decode paths: projections, conv, gates."""
+    b, s, d_model = x.shape
+    d_inner, n_heads = mamba2_dims(d_model, head_dim)
+    zxbcdt = dense(params["in_proj"], x)
+    z, xin, bmat, cmat, dt_raw = jnp.split(
+        zxbcdt,
+        [d_inner, 2 * d_inner, 2 * d_inner + d_state, 2 * d_inner + 2 * d_state],
+        axis=-1)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_out, conv_state = causal_conv(params["conv"], conv_in, conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = jnp.exp(-jnp.exp(params["a_log"]) * dt)                            # decay
+    xh = xin.reshape(b, s, n_heads, head_dim)
+    k = jnp.broadcast_to(bmat[:, :, None, :], (b, s, n_heads, d_state))
+    v = xh.astype(jnp.float32) * dt[..., None]
+    q = jnp.broadcast_to(cmat[:, :, None, :], (b, s, n_heads, d_state))
+    return z, xh, a, k, v, q, conv_state, d_inner, n_heads
+
+
+def apply_mamba2(params, x, *, d_state, head_dim=64, chunk=64):
+    """Training / prefill path. x: (B,S,D) -> y (B,S,D)."""
+    b, s, d_model = x.shape
+    z, xh, a, k, v, q, _, d_inner, n_heads = _mamba2_preact(
+        params, x, d_state, head_dim)
+    y, _ = chunked_gla(a, k, v, q, chunk=chunk)          # (B,S,H,hd)
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = apply_norm(params["gate_norm"], y * jax.nn.silu(z))
+    return dense(params["out_proj"], y)
+
+
+def init_mamba2_state(batch, d_model, d_state, dtype, head_dim=64,
+                      conv_width=4):
+    d_inner, n_heads = mamba2_dims(d_model, head_dim)
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, d_inner + 2 * d_state), dtype),
+        "ssm": jnp.zeros((batch, n_heads, d_state, head_dim), jnp.float32),
+    }
+
+
+def decode_mamba2(params, x, state, *, d_state, head_dim=64):
+    """One-token decode. x: (B,1,D) -> (y (B,1,D), new state)."""
+    b, _, d_model = x.shape
+    z, xh, a, k, v, q, conv_state, d_inner, n_heads = _mamba2_preact(
+        params, x, d_state, head_dim, conv_state=state["conv"])
+    y, ssm = gla_step(state["ssm"], a[:, 0], k[:, 0], v[:, 0], q[:, 0])
+    y = y[:, None] + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = apply_norm(params["gate_norm"], y * jax.nn.silu(z))
+    return dense(params["out_proj"], y), {"conv": conv_state, "ssm": ssm}
+
+
+# =================================================================== mLSTM
+
+def init_mlstm(key, d_model, n_heads, dtype, expand=2, conv_width=4):
+    d_inner = expand * d_model
+    dh = d_inner // n_heads
+    ks = jax.random.split(key, 7)
+    # q/k/v are per-head block-diagonal (xLSTM's proj_blocksize): each head
+    # mixes only its own channels — H·dh² params instead of d_inner².
+    blockdiag = lambda k: (jax.random.normal(k, (n_heads, dh, dh))
+                           * (dh ** -0.5)).astype(dtype)
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * d_inner, dtype),
+        "conv": init_causal_conv(ks[1], d_inner, conv_width, dtype),
+        "wq": blockdiag(ks[2]),
+        "wk": blockdiag(ks[3]),
+        "wv": blockdiag(ks[4]),
+        "w_gates": dense_init(ks[5], d_model, 2 * n_heads, jnp.float32,
+                              use_bias=True),
+        "out_norm": norm_init(d_inner, dtype),
+        "out_proj": dense_init(ks[6], d_inner, d_model, dtype),
+    }
+
+
+def _mlstm_preact(params, x, n_heads, conv_state=None):
+    b, s, d_model = x.shape
+    up = dense(params["in_proj"], x)
+    xin, z = jnp.split(up, 2, axis=-1)
+    conv_out, conv_state = causal_conv(params["conv"], xin, conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    d_inner = conv_out.shape[-1]
+    dh = d_inner // n_heads
+    hs = lambda t: t.reshape(b, s, n_heads, dh)
+    bd = lambda w, t: jnp.einsum("bshd,hde->bshe", hs(t), w)
+    q = bd(params["wq"], conv_out) * (dh ** -0.5)
+    k = bd(params["wk"], conv_out) * (dh ** -0.5)
+    v = bd(params["wv"], xin)
+    gates = dense(params["w_gates"], x.astype(jnp.float32))
+    i_g, f_g = jnp.split(gates, 2, axis=-1)               # (B,S,H)
+    i_g = jax.nn.sigmoid(i_g)
+    f_g = jax.nn.sigmoid(f_g + 3.0)                       # bias toward remember
+    # Normalizer trick: v' = [v, 1]; the extra column accumulates n_t.
+    v_ext = jnp.concatenate(
+        [v.astype(jnp.float32), jnp.ones(v.shape[:-1] + (1,), jnp.float32)],
+        axis=-1)
+    k_in = k.astype(jnp.float32) * i_g[..., None]
+    return z, q, k_in, v_ext, f_g, conv_state, d_inner, dh
+
+
+def _mlstm_out(params, y_ext, z, b, s, d_inner, dtype):
+    num, den = y_ext[..., :-1], y_ext[..., -1:]
+    h = num / (jnp.abs(den) + 1.0)
+    h = h.reshape(b, s, d_inner).astype(dtype)
+    h = apply_norm(params["out_norm"], h) * jax.nn.silu(z)
+    return dense(params["out_proj"], h)
+
+
+def apply_mlstm(params, x, *, n_heads, chunk=64):
+    b, s, _ = x.shape
+    z, q, k_in, v_ext, f_g, _, d_inner, dh = _mlstm_preact(params, x, n_heads)
+    y_ext, _ = chunked_gla(f_g, k_in, v_ext, q.astype(jnp.float32), chunk=chunk)
+    return _mlstm_out(params, y_ext, z, b, s, d_inner, x.dtype)
+
+
+def init_mlstm_state(batch, d_model, n_heads, dtype, expand=2, conv_width=4):
+    d_inner = expand * d_model
+    dh = d_inner // n_heads
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, d_inner), dtype),
+        "ssm": jnp.zeros((batch, n_heads, dh, dh + 1), jnp.float32),
+    }
+
+
+def decode_mlstm(params, x, state, *, n_heads):
+    b, _, _ = x.shape
+    z, q, k_in, v_ext, f_g, conv_state, d_inner, dh = _mlstm_preact(
+        params, x, n_heads, conv_state=state["conv"])
+    y, ssm = gla_step(state["ssm"], f_g[:, 0], k_in[:, 0], v_ext[:, 0],
+                      q[:, 0].astype(jnp.float32))
+    y = _mlstm_out(params, y[:, None], z, b, 1, d_inner, x.dtype)
+    return y, {"conv": conv_state, "ssm": ssm}
+
+
+# =================================================================== sLSTM
+
+def init_slstm(key, d_model, n_heads, dtype):
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(ks[0], d_model, 4 * d_model, dtype, use_bias=True),
+        # Block-diagonal recurrence: per-head (dh, 4*dh).
+        "r": (jax.random.normal(ks[1], (n_heads, dh, 4 * dh)) * (dh ** -0.5)
+              ).astype(dtype),
+        "out_proj": dense_init(ks[2], d_model, d_model, dtype),
+    }
+
+
+def slstm_cell(params, xt, state, n_heads):
+    """xt: (B, D) pre-projected NOT — raw input at one step. state: dict of
+    (B, H, dh) tensors c, n, h. Returns (h_flat (B,D), new_state)."""
+    b, d_model = xt.shape
+    dh = d_model // n_heads
+    pre = dense(params["w_in"], xt).reshape(b, n_heads, 4 * dh)
+    rec = jnp.einsum("bhd,hde->bhe", state["h"], params["r"])
+    i_r, f_r, z_r, o_r = jnp.split((pre + rec).astype(jnp.float32), 4, axis=-1)
+    i_g = jax.nn.sigmoid(i_r)
+    f_g = jax.nn.sigmoid(f_r + 1.0)
+    z_g = jnp.tanh(z_r)
+    o_g = jax.nn.sigmoid(o_r)
+    c = f_g * state["c"] + i_g * z_g
+    n = f_g * state["n"] + i_g
+    h = o_g * c / jnp.maximum(n, 1.0)          # f32 carry (scan-stable)
+    new = {"c": c, "n": n, "h": h}
+    return h.reshape(b, d_model).astype(xt.dtype), new
+
+
+def init_slstm_state(batch, d_model, n_heads):
+    dh = d_model // n_heads
+    zeros = jnp.zeros((batch, n_heads, dh), jnp.float32)
+    return {"c": zeros, "n": zeros, "h": zeros.astype(jnp.float32)}
+
+
+def apply_slstm(params, x, *, n_heads):
+    """Sequential scan over time (non-associative recurrence)."""
+    b, s, d_model = x.shape
+    state0 = init_slstm_state(b, d_model, n_heads)
+    state0 = {k: v.astype(jnp.float32) for k, v in state0.items()}
+
+    def body(state, xt):
+        h, new = slstm_cell(params, xt, state, n_heads)
+        return new, h
+
+    _, hs = jax.lax.scan(body, state0, x.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1)
+    return dense(params["out_proj"], y)
+
+
+def decode_slstm(params, x, state, *, n_heads):
+    h, new = slstm_cell(params, x[:, 0], state, n_heads)
+    return dense(params["out_proj"], h[:, None]), new

@@ -1,0 +1,405 @@
+"""Language-model stacks: init / forward / loss / decode for every arch.
+
+The stack is declared by ``cfg.resolved_superblock`` — an ordered tuple of
+``(block_kind, count, shared)`` segments repeated ``cfg.n_super`` times —
+and executed with ``jax.lax.scan`` over both the super-block axis and the
+per-segment layer axis, so the lowered HLO is O(1) in depth (critical for
+compiling 62-layer configs on the dry-run host). Shared segments (zamba2's
+shared attention block) keep ONE parameter set reused every super-block,
+while their decode state (KV cache) is still per-invocation.
+
+Public entry points:
+  init_lm / forward / per_example_loss      — training & prefill
+  init_decode_state / decode_step           — serving (1 token, KV cache)
+  encode                                    — whisper encoder
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.blocks import BLOCKS
+from repro.models.common import (
+    apply_norm,
+    dense_init,
+    maybe_shard,
+    norm_init,
+    normal_init,
+)
+
+
+# ---------------------------------------------------------------- helpers
+
+def sinusoidal(positions, d_model):
+    """positions: (...,) int -> (..., d_model) float32 sinusoidal embeds."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _default_positions(cfg: ArchConfig, b, s):
+    if cfg.pos_embed != "rope":
+        return None
+    pos = jnp.arange(s)[None, :]
+    pos = jnp.broadcast_to(pos, (b, s))
+    if cfg.m_rope:
+        return jnp.broadcast_to(pos[None], (3, b, s))
+    return pos
+
+
+def _seg_key(idx: int) -> str:
+    return f"seg{idx}"
+
+
+# ------------------------------------------------------------------- init
+
+def _init_segments(key, cfg: ArchConfig, superblock, n_super):
+    params = {}
+    keys = jax.random.split(key, len(superblock))
+    for idx, (kind, count, shared) in enumerate(superblock):
+        bdef = BLOCKS[kind]
+        init_one = functools.partial(bdef.init, cfg=cfg)
+        if shared:
+            params[_seg_key(idx)] = init_one(keys[idx])
+        elif n_super > 1:
+            ks = jax.random.split(keys[idx], (n_super, count))
+            params[_seg_key(idx)] = jax.vmap(jax.vmap(init_one))(ks)
+        else:
+            ks = jax.random.split(keys[idx], count)
+            params[_seg_key(idx)] = jax.vmap(init_one)(ks)
+    return params
+
+
+def init_lm(key, cfg: ArchConfig):
+    k_embed, k_stack, k_head, k_enc = jax.random.split(key, 4)
+    params = {
+        "embed": {"w": normal_init(k_embed, (cfg.vocab, cfg.d_model),
+                                   cfg.dtype, cfg.d_model ** -0.5)},
+        "stack": _init_segments(k_stack, cfg, cfg.resolved_superblock,
+                                cfg.n_super),
+        "final_norm": norm_init(cfg.d_model, cfg.dtype, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab,
+                                       cfg.dtype)
+    if cfg.enc_dec:
+        params["encoder"] = {
+            "stack": _init_segments(
+                k_enc, cfg, (("enc_attn_mlp", cfg.n_enc_layers, False),), 1),
+            "final_norm": norm_init(cfg.d_model, cfg.dtype, cfg.norm),
+        }
+    return params
+
+
+# ------------------------------------------------------------------ apply
+
+def _tree_index(tree, i):
+    return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+
+def _remat(cfg, fn):
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _apply_segment_scan(bdef, cfg, stacked_params, x, aux, ctx):
+    """Run one non-shared segment's layers (scan, or unrolled for the
+    dry-run so cost_analysis counts every layer)."""
+
+    def layer(p, x):
+        return bdef.apply(p, x, ctx, cfg)
+
+    layer = _remat(cfg, layer)
+
+    if cfg.unroll_layers:
+        count = jax.tree_util.tree_leaves(stacked_params)[0].shape[0]
+        for i in range(count):
+            x, a = layer(_tree_index(stacked_params, i), x)
+            aux = aux + a
+        return x, aux
+
+    def body(carry, p):
+        x, aux = carry
+        x, a = layer(p, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, aux), stacked_params)
+    return x, aux
+
+
+def apply_stack(params, cfg: ArchConfig, x, ctx, superblock=None,
+                n_super=None):
+    superblock = superblock or cfg.resolved_superblock
+    n_super = n_super or cfg.n_super
+    aux = jnp.zeros((), jnp.float32)
+
+    if n_super == 1:
+        for idx, (kind, count, shared) in enumerate(superblock):
+            bdef = BLOCKS[kind]
+            p = params[_seg_key(idx)]
+            if shared:
+                x, a = bdef.apply(p, x, ctx, cfg)
+                aux = aux + a
+            else:
+                x, aux = _apply_segment_scan(bdef, cfg, p, x, aux, ctx)
+        return x, aux
+
+    shared_params = {_seg_key(i): params[_seg_key(i)]
+                     for i, (_, _, sh) in enumerate(superblock) if sh}
+    scanned_params = {_seg_key(i): params[_seg_key(i)]
+                      for i, (_, _, sh) in enumerate(superblock) if not sh}
+
+    def super_body(carry, xs):
+        x, aux = carry
+        for idx, (kind, count, shared) in enumerate(superblock):
+            bdef = BLOCKS[kind]
+            if shared:
+                fn = _remat(cfg, functools.partial(bdef.apply, ctx=ctx,
+                                                   cfg=cfg))
+                x, a = fn(shared_params[_seg_key(idx)], x)
+                aux = aux + a
+            else:
+                x, aux = _apply_segment_scan(bdef, cfg, xs[_seg_key(idx)],
+                                             x, aux, ctx)
+        return (x, aux), None
+
+    if cfg.unroll_layers:
+        carry = (x, aux)
+        for i in range(n_super):
+            carry, _ = super_body(carry, _tree_index(scanned_params, i))
+        return carry
+
+    (x, aux), _ = jax.lax.scan(super_body, (x, aux), scanned_params)
+    return x, aux
+
+
+def _make_ctx(cfg: ArchConfig, positions, memory=None, window=None):
+    return {
+        "positions": positions,
+        "memory": memory,
+        "window": cfg.sliding_window if window is None else window,
+        "use_flash": cfg.use_flash,
+    }
+
+
+def encode(params, cfg: ArchConfig, audio_feats):
+    """Whisper encoder over stub frontend features (B, enc_len, d_model)."""
+    x = audio_feats.astype(cfg.dtype)
+    pos = sinusoidal(jnp.arange(x.shape[1]), cfg.d_model).astype(cfg.dtype)
+    x = x + pos[None]
+    x, _ = apply_stack(params["encoder"]["stack"], cfg, x,
+                       _make_ctx(cfg, None),
+                       superblock=(("enc_attn_mlp", cfg.n_enc_layers, False),),
+                       n_super=1)
+    return apply_norm(params["encoder"]["final_norm"], x, cfg.norm)
+
+
+def _embed(params, cfg, tokens):
+    x = jnp.take(params["embed"]["w"], tokens, axis=0)
+    return maybe_shard(x, ("pod", "data"), None, None)
+
+
+def _head(params, cfg, x):
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    w = (params["embed"]["w"].T if cfg.tie_embeddings
+         else params["lm_head"]["w"])
+    logits = x @ w
+    return maybe_shard(logits, ("pod", "data"), None, "model")
+
+
+def hidden_states(params, cfg: ArchConfig, tokens, *, vision_embeds=None,
+                  audio_feats=None, positions=None, window=None):
+    """tokens: (B, S) -> (hidden (B,S,D), aux) — stack output, pre-head."""
+    b, s = tokens.shape
+    x = _embed(params, cfg, tokens)
+    if cfg.n_vision_tokens and vision_embeds is not None:
+        nv = vision_embeds.shape[1]
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x[:, nv:]], axis=1)
+    if cfg.pos_embed == "sinusoidal":
+        x = x + sinusoidal(jnp.arange(s), cfg.d_model).astype(x.dtype)[None]
+    memory = None
+    if cfg.enc_dec:
+        memory = encode(params, cfg, audio_feats)
+    if positions is None:
+        positions = _default_positions(cfg, b, s)
+    ctx = _make_ctx(cfg, positions, memory=memory, window=window)
+    x, aux = apply_stack(params["stack"], cfg, x, ctx)
+    return x, aux
+
+
+def forward(params, cfg: ArchConfig, tokens, *, vision_embeds=None,
+            audio_feats=None, positions=None, window=None):
+    """tokens: (B, S) -> (logits (B,S,V), aux)."""
+    x, aux = hidden_states(params, cfg, tokens, vision_embeds=vision_embeds,
+                           audio_feats=audio_feats, positions=positions,
+                           window=window)
+    return _head(params, cfg, x), aux
+
+
+def _ce_from_logits(logits, labels):
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return lse - gold
+
+
+def _chunked_ce(params, cfg, hidden, labels, chunk):
+    """CE by scanning sequence chunks of the LM head: live logits are
+    (B, chunk, V) instead of (B, S, V) — the §Perf 3.3 memory lever."""
+    b, s, d = hidden.shape
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xs = (hidden.reshape(b, nc, chunk, d).swapaxes(0, 1),
+          labels.reshape(b, nc, chunk).swapaxes(0, 1))
+
+    def body(_, xs):
+        xc, lc = xs
+        ce = _ce_from_logits(_head(params, cfg, xc), lc)  # (B, chunk)
+        return None, jnp.sum(ce, axis=-1)
+
+    _, sums = jax.lax.scan(body, None, xs)  # (nc, B)
+    return jnp.sum(sums, axis=0) / s        # (B,) mean over positions
+
+
+def per_example_loss(params, cfg: ArchConfig, batch, window=None):
+    """Causal-LM cross entropy -> ((B,) per-example losses, aux)."""
+    labels = batch["labels"]
+    if cfg.loss_chunk and labels.shape[1] % cfg.loss_chunk == 0 \
+            and "loss_mask" not in batch:
+        hidden, aux = hidden_states(
+            params, cfg, batch["tokens"],
+            vision_embeds=batch.get("vision_embeds"),
+            audio_feats=batch.get("audio_feats"),
+            window=window)
+        return _chunked_ce(params, cfg, hidden, labels, cfg.loss_chunk), aux
+    logits, aux = forward(
+        params, cfg, batch["tokens"],
+        vision_embeds=batch.get("vision_embeds"),
+        audio_feats=batch.get("audio_feats"),
+        window=window)
+    ce = _ce_from_logits(logits, labels)  # (B, S)
+    if "loss_mask" in batch:
+        m = batch["loss_mask"].astype(jnp.float32)
+        return jnp.sum(ce * m, axis=-1) / jnp.maximum(jnp.sum(m, -1), 1.0), aux
+    return jnp.mean(ce, axis=-1), aux
+
+
+# ----------------------------------------------------------------- decode
+
+def _state_lead_dims(superblock, n_super, idx):
+    kind, count, shared = superblock[idx]
+    if n_super > 1:
+        return (n_super,) if shared else (n_super, count)
+    return () if shared else (count,)
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int, dtype=None):
+    """Zero-initialized decode state mirroring the stack layout."""
+    dtype = dtype or cfg.dtype
+    superblock = cfg.resolved_superblock
+    states = {}
+    for idx, (kind, count, shared) in enumerate(superblock):
+        bdef = BLOCKS[kind]
+        if bdef.state is None:
+            continue
+        base = bdef.state(cfg, batch, cache_len, dtype)
+        lead = _state_lead_dims(superblock, cfg.n_super, idx)
+        states[_seg_key(idx)] = jax.tree_util.tree_map(
+            lambda l: jnp.zeros(lead + l.shape, l.dtype), base)
+    return states
+
+
+def _tree_stack(trees):
+    return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *trees)
+
+
+def decode_stack(params, cfg: ArchConfig, x, states, pos, ctx):
+    superblock = cfg.resolved_superblock
+
+    def seg_scan(bdef, p_stacked, s_stacked, x):
+        if cfg.unroll_layers:
+            count = jax.tree_util.tree_leaves(p_stacked)[0].shape[0]
+            news = []
+            for i in range(count):
+                x, s = bdef.decode(_tree_index(p_stacked, i), x,
+                                   _tree_index(s_stacked, i), pos, ctx, cfg)
+                news.append(s)
+            return x, _tree_stack(news)
+
+        def body(x, ps):
+            p, s = ps
+            x, s = bdef.decode(p, x, s, pos, ctx, cfg)
+            return x, s
+
+        return jax.lax.scan(body, x, (p_stacked, s_stacked))
+
+    if cfg.n_super == 1:
+        new_states = {}
+        for idx, (kind, count, shared) in enumerate(superblock):
+            bdef = BLOCKS[kind]
+            key = _seg_key(idx)
+            if shared:
+                x, s = bdef.decode(params[key], x, states[key], pos, ctx, cfg)
+                new_states[key] = s
+            else:
+                x, s = seg_scan(bdef, params[key], states[key], x)
+                new_states[key] = s
+        return x, new_states
+
+    shared_params = {_seg_key(i): params[_seg_key(i)]
+                     for i, (_, _, sh) in enumerate(superblock) if sh}
+    scanned_params = {_seg_key(i): params[_seg_key(i)]
+                      for i, (_, _, sh) in enumerate(superblock) if not sh}
+
+    def super_body(x, xs):
+        seg_ps, seg_ss = xs
+        new_ss = {}
+        for idx, (kind, count, shared) in enumerate(superblock):
+            bdef = BLOCKS[kind]
+            key = _seg_key(idx)
+            if shared:
+                x, s = bdef.decode(shared_params[key], x, seg_ss[key], pos,
+                                   ctx, cfg)
+            else:
+                x, s = seg_scan(bdef, seg_ps[key], seg_ss[key], x)
+            new_ss[key] = s
+        return x, new_ss
+
+    if cfg.unroll_layers:
+        outs = []
+        for i in range(cfg.n_super):
+            x, ns = super_body(x, (_tree_index(scanned_params, i),
+                                   _tree_index(states, i)))
+            outs.append(ns)
+        return x, _tree_stack(outs)
+
+    x, new_states = jax.lax.scan(super_body, x, (scanned_params, states))
+    return x, new_states
+
+
+def decode_step(params, cfg: ArchConfig, tokens, states, pos, *,
+                memory=None, window=None):
+    """One serving step. tokens: (B, 1); pos: scalar absolute position.
+    Returns (logits (B, vocab), new states)."""
+    x = _embed(params, cfg, tokens)
+    if cfg.pos_embed == "sinusoidal":
+        x = x + sinusoidal(jnp.asarray(pos)[None], cfg.d_model).astype(x.dtype)[None]
+    ctx = _make_ctx(cfg, None, memory=memory, window=window)
+    x, new_states = decode_stack(params["stack"], cfg, x, states, pos, ctx)
+    logits = _head(params, cfg, x)
+    return logits[:, 0], new_states
+
+
+def decode_cache_len(cfg: ArchConfig, seq_len: int, window=None) -> int:
+    """Cache length: ring-buffer window for SWA, else the full context."""
+    w = cfg.sliding_window if window is None else window
+    return min(seq_len, w) if w and w > 0 else seq_len

@@ -1,0 +1,39 @@
+"""Pytree-native optimizers (no external deps).
+
+API mirrors the usual gradient-transformation style:
+
+    opt = adam(3e-4)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+
+from repro.optim.optimizers import (
+    Optimizer,
+    adam,
+    adamw,
+    apply_updates,
+    chain_clip,
+    momentum,
+    sgd,
+)
+from repro.optim.schedules import (
+    constant_schedule,
+    cosine_schedule,
+    inverse_time_schedule,
+    warmup_cosine_schedule,
+)
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "momentum",
+    "adam",
+    "adamw",
+    "apply_updates",
+    "chain_clip",
+    "constant_schedule",
+    "cosine_schedule",
+    "inverse_time_schedule",
+    "warmup_cosine_schedule",
+]

@@ -1,0 +1,141 @@
+"""SGD / momentum / Adam(W) as pure pytree gradient transformations.
+
+The learning rate may be a float or a ``schedule(step) -> lr`` callable
+(see :mod:`repro.optim.schedules`). All states are pytrees, so optimizer
+state shards with the parameters under pjit (same PartitionSpec as the
+corresponding parameter leaf — see ``repro.sharding.rules``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]  # (grads, state, params) -> (updates, state)
+
+
+def _resolve_lr(lr, step):
+    if callable(lr):
+        return lr(step)
+    return jnp.asarray(lr, jnp.float32)
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+
+
+def sgd(lr) -> Optimizer:
+    def init(params):
+        del params
+        return SGDState(step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        del params
+        eta = _resolve_lr(lr, state.step)
+        updates = jax.tree_util.tree_map(lambda g: -eta * g, grads)
+        return updates, SGDState(step=state.step + 1)
+
+    return Optimizer(init, update)
+
+
+class MomentumState(NamedTuple):
+    step: jax.Array
+    velocity: Any
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return MomentumState(
+            step=jnp.zeros((), jnp.int32),
+            velocity=jax.tree_util.tree_map(jnp.zeros_like, params),
+        )
+
+    def update(grads, state, params=None):
+        del params
+        eta = _resolve_lr(lr, state.step)
+        vel = jax.tree_util.tree_map(lambda v, g: beta * v + g, state.velocity, grads)
+        if nesterov:
+            updates = jax.tree_util.tree_map(lambda v, g: -eta * (beta * v + g), vel, grads)
+        else:
+            updates = jax.tree_util.tree_map(lambda v: -eta * v, vel)
+        return updates, MomentumState(step=state.step + 1, velocity=vel)
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0, decoupled: bool = True) -> Optimizer:
+    """Adam; with ``weight_decay > 0`` and ``decoupled=True`` this is AdamW.
+
+    Moments are kept in float32 regardless of param dtype (the standard
+    mixed-precision recipe: bf16 params / f32 optimizer state).
+    """
+
+    def init(params):
+        f32zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(f32zeros, params),
+            nu=jax.tree_util.tree_map(f32zeros, params),
+        )
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        eta = _resolve_lr(lr, state.step)
+        g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, g32)
+        nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, g32)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def _upd(m, v, p):
+            u = -(eta * (m / bc1) / (jnp.sqrt(v / bc2) + eps))
+            if weight_decay > 0.0 and decoupled and p is not None:
+                u = u - eta * weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype if p is not None else u.dtype)
+
+        if params is None:
+            params = jax.tree_util.tree_map(lambda m: None, mu)
+        updates = jax.tree_util.tree_map(_upd, mu, nu, params)
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, decoupled=True, **kw)
+
+
+def chain_clip(opt: Optimizer, max_norm: float) -> Optimizer:
+    """Global-norm gradient clipping wrapped around another optimizer."""
+
+    def init(params):
+        return opt.init(params)
+
+    def update(grads, state, params=None):
+        leaves = jax.tree_util.tree_leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+        scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+        clipped = jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads)
+        return opt.update(clipped, state, params)
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)), params, updates
+    )

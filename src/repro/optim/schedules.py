@@ -1,0 +1,43 @@
+"""Learning-rate schedules as ``step -> lr`` callables."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    def fn(step):
+        del step
+        return jnp.asarray(lr, jnp.float32)
+
+    return fn
+
+
+def inverse_time_schedule(lr0: float, decay: float):
+    """η_t = η₀ / (1 + decay·t) — the decreasing-step recipe of Remark 1
+    (makes the Theorem-1 error floor vanish as T→∞)."""
+
+    def fn(step):
+        return jnp.asarray(lr0, jnp.float32) / (1.0 + decay * step.astype(jnp.float32))
+
+    return fn
+
+
+def cosine_schedule(lr0: float, total_steps: int, lr_min: float = 0.0):
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        return lr_min + 0.5 * (lr0 - lr_min) * (1.0 + jnp.cos(jnp.pi * frac))
+
+    return fn
+
+
+def warmup_cosine_schedule(lr0: float, warmup_steps: int, total_steps: int,
+                           lr_min: float = 0.0):
+    cos = cosine_schedule(lr0, max(total_steps - warmup_steps, 1), lr_min)
+
+    def fn(step):
+        step_f = step.astype(jnp.float32)
+        warm = lr0 * step_f / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return fn

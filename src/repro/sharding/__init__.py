@@ -1,0 +1,10 @@
+from repro.sharding.rules import (
+    auto_spec,
+    batch_specs,
+    param_specs,
+    state_specs,
+    tree_shardings,
+)
+
+__all__ = ["param_specs", "batch_specs", "state_specs", "auto_spec",
+           "tree_shardings"]

@@ -1,0 +1,206 @@
+"""Parameter / activation / state PartitionSpec rules.
+
+Strategy (MaxText-style FSDP + TP):
+  * ``data``  — batch dimension of activations; FSDP dimension of weights
+  * ``model`` — tensor parallel: attention heads & FFN columns & experts
+  * ``pod``   — pure data parallel across pods (weights replicated
+                pod-wise; gradients all-reduce over pod)
+
+Rules are *suffix-matched* on the parameter tree path so the same table
+covers stacked (scan) parameters — leading (n_super, count) axes are
+padded with None. Every named axis is divisibility-checked against the
+actual mesh and dropped when it doesn't divide (e.g. whisper's odd 51865
+vocab stays replicated; xlstm's 4 heads skip TP).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (path-suffix, spec for the TRAILING dims of the leaf)
+# Suffixes are matched against the end of the '/'-joined leaf path.
+SUFFIX_RULES: list[tuple[str, tuple]] = [
+    # attention
+    ("attn/wq/w", ("data", "model")),
+    ("attn/wk/w", ("data", "model")),
+    ("attn/wv/w", ("data", "model")),
+    ("attn/wo/w", ("model", "data")),
+    ("self/wq/w", ("data", "model")),
+    ("self/wk/w", ("data", "model")),
+    ("self/wv/w", ("data", "model")),
+    ("self/wo/w", ("model", "data")),
+    ("cross/wq/w", ("data", "model")),
+    ("cross/wk/w", ("data", "model")),
+    ("cross/wv/w", ("data", "model")),
+    ("cross/wo/w", ("model", "data")),
+    # dense FFN
+    ("mlp/gate/w", ("data", "model")),
+    ("mlp/up/w", ("data", "model")),
+    ("mlp/down/w", ("model", "data")),
+    # MoE: experts on the model axis (expert parallelism)
+    ("moe/router/w", (None, None)),
+    ("moe/w_gate", ("model", "data", None)),
+    ("moe/w_up", ("model", "data", None)),
+    ("moe/w_down", ("model", None, "data")),
+    ("moe/shared/gate/w", ("data", "model")),
+    ("moe/shared/up/w", ("data", "model")),
+    ("moe/shared/down/w", ("model", "data")),
+    # SSM mixers
+    ("mixer/in_proj/w", ("data", "model")),
+    ("mixer/out_proj/w", ("model", "data")),
+    ("mixer/wq", ("model", None, None)),
+    ("mixer/wk", ("model", None, None)),
+    ("mixer/wv", ("model", None, None)),
+    ("mixer/w_in/w", ("data", "model")),
+    ("mixer/r", ("model", None, None)),
+    # embeddings / head
+    ("embed/w", ("model", "data")),
+    ("lm_head/w", ("data", "model")),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _axis_size(mesh_shape: dict, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh_shape.get(a, 1)
+        return n
+    return mesh_shape.get(entry, 1)
+
+
+def _fit_spec(shape, trailing_spec, mesh_shape) -> P:
+    """Pad leading Nones and divisibility-check every named axis."""
+    ndim = len(shape)
+    k = len(trailing_spec)
+    lead = (None,) * (ndim - k)
+    fitted = []
+    for dim, entry in zip(shape[ndim - k:], trailing_spec):
+        size = _axis_size(mesh_shape, entry)
+        present = entry is not None and all(
+            a in mesh_shape for a in (entry if isinstance(entry, tuple) else (entry,)))
+        fitted.append(entry if (present and size > 1 and dim % size == 0) else None)
+    return P(*(lead + tuple(fitted)))
+
+
+def param_specs(params: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching ``params`` (suffix rules + checks)."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        for suffix, spec in SUFFIX_RULES:
+            if ps.endswith(suffix):
+                return _fit_spec(leaf.shape, spec, mesh_shape)
+        return P()  # norms, biases, gates, scalars: replicated
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def auto_spec(shape, mesh: Mesh, batch_axis: int | None = 0) -> P:
+    """Heuristic spec for activations / decode state leaves.
+
+    Axis ``batch_axis`` shards over ("pod","data") (with fallbacks to
+    whichever divides); the first later axis divisible by the model-axis
+    size gets "model" (for KV caches this lands on the sequence axis —
+    context-parallel cache — or the head axis, whichever divides first).
+    """
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ndim = len(shape)
+    entries: list = [None] * ndim
+    if batch_axis is not None and ndim > 0:
+        b = shape[batch_axis]
+        for cand in (("pod", "data"), ("data",), ("pod",)):
+            if all(a in mesh_shape for a in cand):
+                size = _axis_size(mesh_shape, tuple(cand))
+                if size > 1 and b % size == 0:
+                    entries[batch_axis] = cand if len(cand) > 1 else cand[0]
+                    break
+    msize = mesh_shape.get("model", 1)
+    if msize > 1:
+        for ax in range(ndim):
+            if ax == batch_axis or entries[ax] is not None:
+                continue
+            if shape[ax] % msize == 0 and shape[ax] >= msize:
+                entries[ax] = "model"
+                break
+    return P(*entries)
+
+
+def batch_specs(batch: Any, mesh: Mesh) -> Any:
+    """Specs for a training/prefill batch: leading axis = global batch."""
+
+    def one(leaf):
+        return auto_spec(leaf.shape, mesh, batch_axis=0)
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+import os
+
+# Perf-iteration toggle (EXPERIMENTS.md §Perf): which axis of a decode
+# state leaf gets the "model" mesh axis. "trailing" (default) walks axes
+# from the END — landing on head_dim/feature axes; "leading" walks from
+# the batch axis forward — landing on the KV-cache *sequence* axis, which
+# forces GSPMD to re-materialize the cache at every dynamic-index write
+# (measured: the phi3.5 decode_32k collective term).
+_STATE_AXIS_ORDER = os.environ.get("REPRO_STATE_SPEC_ORDER", "trailing")
+
+
+def state_specs(states: Any, mesh: Mesh) -> Any:
+    """Specs for decode state pytrees.
+
+    Leaves carry leading (n_super[, count]) stacking axes before the batch
+    axis; the first axis divisible by the (pod×data) size is treated as
+    batch, and one later axis (order per _STATE_AXIS_ORDER) divisible by
+    the model-axis size gets "model".
+    """
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = _axis_size(mesh_shape, ("pod", "data")) if "pod" in mesh_shape \
+        else _axis_size(mesh_shape, ("data",))
+    msize = mesh_shape.get("model", 1)
+    dp_axes = ("pod", "data") if "pod" in mesh_shape else "data"
+
+    def one(leaf):
+        shape = leaf.shape
+        entries: list = [None] * len(shape)
+        batch_axis = None
+        for ax, dim in enumerate(shape):
+            if dim % dp == 0 and dim >= dp:
+                batch_axis = ax
+                entries[ax] = dp_axes
+                break
+        if msize > 1 and _STATE_AXIS_ORDER != "none":
+            start = (batch_axis + 1) if batch_axis is not None else 0
+            order = range(len(shape) - 1, start - 1, -1) \
+                if _STATE_AXIS_ORDER == "trailing" else range(start, len(shape))
+            for ax in order:
+                if entries[ax] is None and shape[ax] % msize == 0 \
+                        and shape[ax] >= msize:
+                    entries[ax] = "model"
+                    break
+        return P(*entries)
+
+    return jax.tree_util.tree_map(one, states)
+
+
+def tree_shardings(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

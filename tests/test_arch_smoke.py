@@ -1,0 +1,115 @@
+"""Per-architecture smoke tests: REDUCED variant of each assigned config
+(≤2 layers, d_model ≤ 512, ≤4 experts) — one forward/train step + one
+decode step on CPU, asserting output shapes and no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import REGISTRY, arch_names, get_config
+from repro.launch.steps import make_serve_step, make_train_step
+from repro.models import encode, init_decode_state, init_lm
+from repro.models.transformer import decode_cache_len
+
+B, S = 2, 16
+N_CLIENTS = 2
+
+
+def make_batch(cfg):
+    batch = {
+        "tokens": jnp.full((B, S), 3, jnp.int32),
+        "labels": jnp.ones((B, S), jnp.int32),
+        "client_ids": jnp.asarray([0, 1], jnp.int32),
+    }
+    if cfg.n_vision_tokens:
+        batch["vision_embeds"] = jnp.ones(
+            (B, cfg.n_vision_tokens, cfg.d_model), cfg.dtype)
+    if cfg.enc_dec:
+        batch["audio_feats"] = jnp.ones((B, cfg.enc_len, cfg.d_model),
+                                        cfg.dtype)
+    return batch
+
+
+@pytest.fixture(scope="module", params=arch_names())
+def arch(request):
+    return request.param
+
+
+def test_reduced_config_limits(arch):
+    red = get_config(arch).reduced()
+    assert red.d_model <= 512
+    assert red.total_layers <= 4 or red.n_super <= 2
+    assert red.n_experts <= 4
+    assert red.vocab <= 512
+
+
+def test_train_step_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    init_state, train_step = make_train_step(cfg, N_CLIENTS, lr=1e-3)
+    state = init_state(params)
+    batch = make_batch(cfg)
+    mask = jnp.asarray([1.0, 0.0])
+    scale = jnp.asarray([2.0, 2.0])
+    state2, metrics = jax.jit(train_step)(state, batch, mask, scale)
+    assert jnp.isfinite(metrics["loss"])
+    assert jnp.isfinite(metrics["weighted_loss"])
+    assert float(metrics["active_clients"]) == 1.0
+    # params changed
+    before = jax.tree_util.tree_leaves(state.params)[1]
+    after = jax.tree_util.tree_leaves(state2.params)[1]
+    assert before.shape == after.shape
+    finite = [bool(jnp.all(jnp.isfinite(l.astype(jnp.float32))))
+              for l in jax.tree_util.tree_leaves(state2.params)]
+    assert all(finite)
+
+
+def test_serve_step_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    cache_len = decode_cache_len(cfg, 32)
+    states = init_decode_state(cfg, B, cache_len)
+    serve = make_serve_step(cfg)
+    memory = None
+    if cfg.enc_dec:
+        memory = encode(params, cfg,
+                        jnp.ones((B, cfg.enc_len, cfg.d_model), cfg.dtype))
+    tok = jnp.full((B, 1), 3, jnp.int32)
+    next_tok, logits, states2 = jax.jit(
+        lambda p, t, s: serve(p, t, s, jnp.asarray(5), memory=memory)
+    )(params, tok, states)
+    assert next_tok.shape == (B,)
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+def test_full_configs_match_assignment():
+    """Exact dims from the assignment table."""
+    expect = {
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "minitron-4b": (32, 3072, 24, 8, 9216, 256000),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "deepseek-coder-33b": (62, 7168, 56, 8, 19200, 32256),
+        "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+        "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+        "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+    }
+    assert set(expect) == set(REGISTRY)
+    for name, (nl, dm, nh, kv, ff, vocab) in expect.items():
+        cfg = REGISTRY[name]
+        assert cfg.n_layers == nl, name
+        assert cfg.d_model == dm, name
+        assert cfg.n_heads == nh, name
+        assert cfg.n_kv_heads == kv, name
+        assert cfg.d_ff == ff, name
+        assert cfg.vocab == vocab, name
+        assert cfg.citation, name
+    assert REGISTRY["phi3.5-moe-42b-a6.6b"].n_experts == 16
+    assert REGISTRY["phi3.5-moe-42b-a6.6b"].top_k == 2
+    assert REGISTRY["llama4-scout-17b-a16e"].top_k == 1
+    assert REGISTRY["zamba2-2.7b"].ssm_state == 64
+    assert REGISTRY["zamba2-2.7b"].total_layers == 54
+    assert REGISTRY["xlstm-1.3b"].total_layers == 48

@@ -1,0 +1,66 @@
+"""Checkpoint roundtrip / retention / validation tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    restore_pytree,
+    save_pytree,
+)
+
+
+def tree():
+    return {
+        "params": {"w": jnp.arange(6.0).reshape(2, 3),
+                   "b": jnp.ones((3,), jnp.bfloat16)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip(tmp_path):
+    p = str(tmp_path / "ck.npz")
+    t = tree()
+    save_pytree(p, t)
+    got = restore_pytree(p, jax.tree_util.tree_map(jnp.zeros_like, t))
+    np.testing.assert_allclose(got["params"]["w"], t["params"]["w"])
+    assert got["params"]["b"].dtype == np.dtype(jnp.bfloat16)
+    assert int(got["step"]) == 7
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    p = str(tmp_path / "ck.npz")
+    save_pytree(p, {"w": jnp.ones((2, 2))})
+    with pytest.raises(ValueError):
+        restore_pytree(p, {"w": jnp.ones((3, 2))})
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    p = str(tmp_path / "ck.npz")
+    save_pytree(p, {"w": jnp.ones((2,))})
+    with pytest.raises(KeyError):
+        restore_pytree(p, {"w": jnp.ones((2,)), "extra": jnp.ones((1,))})
+
+
+def test_manager_retention_and_latest(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    for s in (10, 20, 30):
+        cm.save(s, tree())
+    assert latest_step(str(tmp_path)) == 30
+    files = sorted(os.listdir(str(tmp_path)))
+    assert files == ["step_20.npz", "step_30.npz"]
+    got, step = cm.restore(tree())
+    assert step == 30
+    got20, step20 = cm.restore(tree(), step=20)
+    assert step20 == 20
+
+
+def test_manager_empty_raises(tmp_path):
+    cm = CheckpointManager(str(tmp_path / "none"))
+    with pytest.raises(FileNotFoundError):
+        cm.restore(tree())

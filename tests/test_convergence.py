@@ -1,0 +1,129 @@
+"""Theorem 1 / convergence behaviour on closed-form quadratics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClientSimulator,
+    biased_fixed_point,
+    error_floor,
+    make_quadratic,
+    make_scheduler,
+    max_step_size,
+    theorem1_bound,
+    variance_constant,
+)
+from repro.core.energy import DeterministicArrivals
+from repro.optim import sgd
+
+TAUS = [1, 2, 4, 8]
+
+
+def simulate(problem, scheduler_name, steps, eta, seed=0, noise=0.0,
+             w0_scale=0.0):
+    n = problem.n_clients
+    det = DeterministicArrivals.periodic(
+        [TAUS[i % 4] for i in range(n)], horizon=steps + 1)
+    sch = make_scheduler(scheduler_name, n)
+
+    def grads_fn(params, key, t):
+        return problem.all_grads(params, key=key, noise=noise)
+
+    sim = ClientSimulator(grads_fn=grads_fn, scheduler=sch, energy=det,
+                          p=problem.p, optimizer=sgd(eta),
+                          loss_fn=problem.suboptimality)
+    w0 = jnp.full((problem.dim,), w0_scale)
+    wT, hist = sim.run(jax.random.PRNGKey(seed), w0, steps)
+    return np.asarray(wT), np.asarray(hist.loss)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_quadratic(jax.random.PRNGKey(7), n_clients=8, dim=6,
+                          hetero=1.0, cond=8.0)
+
+
+def test_alg1_converges_to_global_optimum(problem):
+    """Theorem 1 behaviour: geometric decay to the ηLC/(2μ) floor. With a
+    far initialization the decay phase dominates and the floor is ≪ F(w⁰);
+    shrinking η must shrink the floor (Remark 1)."""
+    eta = 0.2 * max_step_size(problem.mu, problem.lsmooth)
+    wT, loss = simulate(problem, "alg1", steps=3000, eta=eta, w0_scale=10.0)
+    floor = loss[-500:].mean()
+    assert floor < 0.02 * loss[0]
+    _, loss_small = simulate(problem, "alg1", steps=6000, eta=eta / 4,
+                             w0_scale=10.0)
+    assert loss_small[-500:].mean() < 0.5 * floor
+
+
+def test_oracle_reaches_optimum(problem):
+    eta = 0.5 * max_step_size(problem.mu, problem.lsmooth)
+    wT, loss = simulate(problem, "oracle", steps=2000, eta=eta)
+    assert loss[-1] < 1e-5 * loss[0]
+    np.testing.assert_allclose(wT, problem.w_star, atol=1e-3)
+
+
+def test_benchmark1_converges_to_biased_point(problem):
+    """Closed-form verification of the paper's bias claim."""
+    eta = 0.5 * max_step_size(problem.mu, problem.lsmooth)
+    wT, _ = simulate(problem, "benchmark1", steps=4000, eta=eta)
+    q = np.array([1.0 / TAUS[i % 4] for i in range(problem.n_clients)])
+    w_biased = np.asarray(biased_fixed_point(problem, q))
+    d_biased = np.linalg.norm(wT - w_biased)
+    d_star = np.linalg.norm(wT - np.asarray(problem.w_star))
+    assert d_biased < 0.2 * d_star  # lands on the biased optimum
+    # and the biased optimum is genuinely different
+    assert np.linalg.norm(w_biased - np.asarray(problem.w_star)) > 0.1
+
+
+def test_benchmark2_slow_but_unbiased(problem):
+    """Benchmark 2 updates once per max(τ)=8 steps: during the decay phase
+    Algorithm 1 (one noisy update every step) is far ahead — the paper's
+    Fig-1 'slow convergence' effect."""
+    eta = 0.2 * max_step_size(problem.mu, problem.lsmooth)
+    _, loss_b2 = simulate(problem, "benchmark2", steps=400, eta=eta,
+                          w0_scale=10.0)
+    _, loss_a1 = simulate(problem, "alg1", steps=400, eta=eta, w0_scale=10.0)
+    assert loss_a1[60:140].mean() < 0.2 * loss_b2[60:140].mean()
+
+
+def test_theorem1_bound_holds(problem):
+    """E[F(w^T)] − F* ≤ eq. (20) for η ≤ min{1/(2μ), 1/L}."""
+    eta = 0.5 * max_step_size(problem.mu, problem.lsmooth)
+    steps = 1200
+    reps = 8
+    finals = []
+    for r in range(reps):
+        _, loss = simulate(problem, "alg1", steps=steps, eta=eta, seed=r)
+        finals.append(loss[-1])
+    emp = float(np.mean(finals))
+
+    t_max = np.array([TAUS[i % 4] for i in range(problem.n_clients)],
+                     dtype=np.float32)
+    radius = float(np.linalg.norm(problem.w_star)) * 1.5
+    g2 = problem.grad_second_moment_bound(radius)
+    c = float(variance_constant(problem.p, t_max, g2))
+    f0_gap = float(problem.suboptimality(jnp.zeros(problem.dim)))
+    bound = float(theorem1_bound(steps, f0_gap, problem.mu,
+                                 problem.lsmooth, eta, c))
+    assert emp <= bound
+    assert bound > 0
+
+
+def test_error_floor_scales_linearly_with_eta(problem):
+    c = 1.0
+    f1 = error_floor(problem.mu, problem.lsmooth, 0.01, c)
+    f2 = error_floor(problem.mu, problem.lsmooth, 0.02, c)
+    np.testing.assert_allclose(f2, 2 * f1)
+
+
+def test_variance_constant_structure():
+    """C (eq. 21) reduces to the G²·(Σp)² baseline when all T=1 and grows
+    linearly in (T−1)·p²."""
+    p = jnp.asarray([0.5, 0.5])
+    base = float(variance_constant(p, jnp.asarray([1.0, 1.0]), 4.0))
+    np.testing.assert_allclose(base, 4.0)  # (Σp)²·G²
+    grown = float(variance_constant(p, jnp.asarray([5.0, 1.0]), 4.0))
+    np.testing.assert_allclose(grown, 4.0 + 4 * 0.25 * 4.0)

@@ -1,0 +1,92 @@
+"""Energy-arrival process tests (paper §II-B)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.energy import (
+    BinaryArrivals,
+    DeterministicArrivals,
+    UniformArrivals,
+    expected_participation,
+)
+
+
+def collect(process, horizon, seed=0):
+    key = jax.random.PRNGKey(seed)
+    state = process.init(key)
+
+    def body(carry, t):
+        state, key = carry
+        key, k = jax.random.split(key)
+        state, arr = process.arrivals(state, t, k)
+        return (state, key), (arr.energy, arr.gap)
+
+    (_, _), (energy, gap) = jax.lax.scan(
+        body, (state, key), jnp.arange(horizon))
+    return np.asarray(energy), np.asarray(gap)  # (T, N)
+
+
+def test_periodic_schedule_matches_eq37():
+    taus = [1, 5, 10, 20]
+    det = DeterministicArrivals.periodic(taus, horizon=100)
+    energy, gap = collect(det, 100)
+    for i, tau in enumerate(taus):
+        expect = (np.arange(100) % tau == 0).astype(np.float32)
+        np.testing.assert_array_equal(energy[:, i], expect)
+        # T_i^t equals tau everywhere inside the horizon interior
+        assert np.all(gap[: 100 - tau, i] == tau)
+
+
+def test_gap_table_irregular_schedule():
+    sched = np.zeros((1, 12))
+    sched[0, [2, 5, 11]] = 1  # gaps: 3 (t∈[2,5)), 6 (t∈[5,11)), 1 (t=11)
+    det = DeterministicArrivals(sched)
+    _, gap = collect(det, 12)
+    assert gap[2, 0] == 3 and gap[4, 0] == 3
+    assert gap[5, 0] == 6 and gap[10, 0] == 6
+    assert gap[11, 0] == 1  # truncated at horizon
+    assert np.all(gap[:2, 0] == 0)  # before first arrival
+
+
+def test_binary_arrival_rate():
+    betas = jnp.asarray([0.1, 0.5, 0.9])
+    proc = BinaryArrivals(betas)
+    energy, gap = collect(proc, 4000)
+    np.testing.assert_allclose(energy.mean(0), betas, atol=0.03)
+    np.testing.assert_allclose(gap[0], 1.0 / np.asarray(betas), rtol=1e-6)
+
+
+def test_uniform_exactly_one_arrival_per_window():
+    periods = np.array([4, 7])
+    proc = UniformArrivals(periods)
+    energy, gap = collect(proc, 28 * 10)
+    for i, t in enumerate(periods):
+        per_window = energy[: (280 // t) * t, i].reshape(-1, t).sum(1)
+        np.testing.assert_array_equal(per_window, 1.0)
+        assert np.all(gap[:, i] == t)
+
+
+def test_uniform_offset_is_uniform():
+    proc = UniformArrivals(np.array([8]))
+    energy, _ = collect(proc, 8 * 500, seed=3)
+    hist = energy[:, 0].reshape(-1, 8).sum(0)
+    # each in-window slot hit ~500/8 = 62.5 times
+    assert hist.sum() == 500
+    assert hist.min() > 30 and hist.max() < 95
+
+
+def test_expected_participation():
+    det = DeterministicArrivals.periodic([2, 4], horizon=100)
+    np.testing.assert_allclose(expected_participation(det), [0.5, 0.25])
+    np.testing.assert_allclose(
+        expected_participation(BinaryArrivals([0.3])), [0.3])
+    np.testing.assert_allclose(
+        expected_participation(UniformArrivals([5])), [0.2])
+
+
+def test_past_horizon_no_arrivals():
+    det = DeterministicArrivals.periodic([2], horizon=10)
+    _, arr = det.arrivals((), jnp.asarray(50), None)
+    assert float(arr.energy[0]) == 0.0 and float(arr.gap[0]) == 0.0

@@ -1,0 +1,132 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.aggregate import (
+    masked_scaled_aggregate,
+    masked_scaled_aggregate_ref,
+)
+from repro.kernels.aggregate.aggregate import masked_scaled_aggregate_kernel
+from repro.kernels.flash_attention.flash_attention import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.ssm_scan.ops import gla_scan
+from repro.kernels.ssm_scan.ref import gla_scan_ref
+from repro.kernels.ssm_scan.ssm_scan import gla_scan_kernel
+
+
+# ------------------------------------------------------------- aggregate
+
+@pytest.mark.parametrize("n,p,block_p", [
+    (8, 64, 32), (40, 1000, 256), (3, 130, 128), (129, 257, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_aggregate_sweep(n, p, block_p, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    g = jax.random.normal(k1, (n, p)).astype(dtype)
+    w = jax.random.uniform(k2, (n,))
+    out = masked_scaled_aggregate_kernel(g, w, block_p=block_p,
+                                         interpret=True)
+    ref = masked_scaled_aggregate_ref(g, w)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_aggregate_masking_zeroes_clients():
+    g = jnp.ones((4, 16))
+    w = jnp.asarray([0.0, 2.0, 0.0, 1.0])
+    out = masked_scaled_aggregate(g, w)
+    np.testing.assert_allclose(out, 3.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 33), p=st.integers(1, 300),
+       seed=st.integers(0, 2**30))
+def test_aggregate_property(n, p, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    g = jax.random.normal(k1, (n, p))
+    w = jax.random.normal(k2, (n,))
+    out = masked_scaled_aggregate_kernel(g, w, block_p=64, interpret=True)
+    np.testing.assert_allclose(out, masked_scaled_aggregate_ref(g, w),
+                               rtol=2e-5, atol=2e-5)
+
+
+# -------------------------------------------------------- flash attention
+
+@pytest.mark.parametrize("b,h,hkv,s,dh,causal,window,bq,bk", [
+    (1, 2, 1, 64, 16, True, 0, 16, 16),
+    (2, 4, 2, 128, 32, True, 0, 32, 32),
+    (1, 2, 2, 128, 16, True, 32, 32, 32),
+    (1, 8, 1, 64, 64, True, 0, 16, 16),      # extreme GQA
+    (1, 2, 1, 64, 16, False, 0, 16, 16),     # bidirectional
+    (1, 1, 1, 256, 16, True, 64, 64, 64),    # long + window
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, h, hkv, s, dh, causal, window, bq, bk,
+                               dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (b, h, s, dh)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, hkv, s, dh)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, hkv, s, dh)).astype(dtype)
+    out = flash_attention_kernel(q, k, v, causal=causal, window=window,
+                                 block_q=bq, block_k=bk, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-3 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_matches_model_attention():
+    """Kernel result == the model's _sdpa reference path."""
+    from repro.models.attention import _sdpa, causal_mask
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    b, s, h, hkv, dh = 2, 64, 4, 2, 16
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, hkv, dh))
+    v = jax.random.normal(ks[2], (b, s, hkv, dh))
+    out_k = flash_attention_kernel(
+        q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+        causal=True, window=0, block_q=16, block_k=16,
+        interpret=True).swapaxes(1, 2)
+    out_m = _sdpa(q, k, v, causal_mask(s))
+    np.testing.assert_allclose(out_k, out_m, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------- ssm scan
+
+@pytest.mark.parametrize("b,s,h,dk,dv,chunk", [
+    (1, 32, 2, 8, 8, 8), (2, 64, 3, 16, 32, 16), (1, 50, 1, 4, 4, 16),
+])
+def test_gla_scan_sweep(b, s, h, dk, dv, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    a = jax.random.uniform(ks[0], (b, s, h), minval=0.6, maxval=1.0)
+    k = jax.random.normal(ks[1], (b, s, h, dk)) * 0.3
+    v = jax.random.normal(ks[2], (b, s, h, dv))
+    q = jax.random.normal(ks[3], (b, s, h, dk)) * 0.3
+    y = gla_scan(a, k, v, q, chunk=chunk)
+    fold = lambda x: x.swapaxes(1, 2).reshape((b * h, s) + x.shape[3:])
+    ref = gla_scan_ref(fold(a), fold(k), fold(v), fold(q)) \
+        .reshape(b, h, s, dv).swapaxes(1, 2)
+    np.testing.assert_allclose(y, ref, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(2, 40), chunk=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 2**30))
+def test_gla_scan_property_chunk_invariance(s, chunk, seed):
+    """Output must be independent of the chunk size (exact algorithm)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    b, h, dk, dv = 1, 2, 4, 4
+    a = jax.random.uniform(ks[0], (b, s, h), minval=0.5, maxval=1.0)
+    k = jax.random.normal(ks[1], (b, s, h, dk))
+    v = jax.random.normal(ks[2], (b, s, h, dv))
+    q = jax.random.normal(ks[3], (b, s, h, dk))
+    y1 = gla_scan(a, k, v, q, chunk=chunk)
+    y2 = gla_scan(a, k, v, q, chunk=s)  # single chunk
+    np.testing.assert_allclose(y1, y2, rtol=5e-4, atol=5e-4)

@@ -1,0 +1,91 @@
+"""Scheduler tests: Algorithm 1/2 + paper benchmarks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.energy import BinaryArrivals, DeterministicArrivals
+from repro.core.scheduling import make_scheduler, scheduler_names
+
+
+def run(scheduler, process, horizon, seed=0):
+    key = jax.random.PRNGKey(seed)
+    sstate = scheduler.init(key)
+    estate = process.init(key)
+
+    def body(carry, t):
+        sstate, estate, key = carry
+        key, k1, k2 = jax.random.split(key, 3)
+        estate, arr = process.arrivals(estate, t, k1)
+        sstate, dec = scheduler.step(sstate, t, k2, arr)
+        return (sstate, estate, key), (dec.mask, dec.scale)
+
+    _, (mask, scale) = jax.lax.scan(
+        body, (sstate, estate, key), jnp.arange(horizon))
+    return np.asarray(mask), np.asarray(scale)
+
+
+def test_alg1_participation_rate_is_inverse_gap():
+    taus = [1, 5, 10, 20]
+    det = DeterministicArrivals.periodic(taus, horizon=4000)
+    sch = make_scheduler("alg1", 4)
+    mask, scale = run(sch, det, 4000)
+    np.testing.assert_allclose(mask.mean(0), 1.0 / np.asarray(taus),
+                               atol=0.01)
+    # scale equals the gap captured at booking (tau for periodic)
+    for i, tau in enumerate(taus):
+        on = mask[:, i] > 0
+        np.testing.assert_allclose(scale[on, i], tau)
+
+
+def test_alg1_exactly_one_participation_per_interval():
+    tau = 6
+    det = DeterministicArrivals.periodic([tau], horizon=6 * 50)
+    sch = make_scheduler("alg1", 1)
+    mask, _ = run(sch, det, 6 * 50, seed=4)
+    per_interval = mask[:, 0].reshape(-1, tau).sum(1)
+    np.testing.assert_array_equal(per_interval, 1.0)
+
+
+def test_benchmark1_is_unscaled_arrivals():
+    det = DeterministicArrivals.periodic([3], horizon=30)
+    sch = make_scheduler("benchmark1", 1)
+    mask, scale = run(sch, det, 30)
+    np.testing.assert_array_equal(mask[:, 0],
+                                  (np.arange(30) % 3 == 0).astype(float))
+    np.testing.assert_array_equal(scale, 1.0)
+
+
+def test_benchmark2_fires_at_slowest_period():
+    det = DeterministicArrivals.periodic([1, 5, 10, 20], horizon=100)
+    sch = make_scheduler("benchmark2", 4)
+    mask, scale = run(sch, det, 100)
+    fires = np.flatnonzero(mask[:, 0])
+    # all clients step together, once per 20 iterations (paper §V)
+    np.testing.assert_array_equal(mask[fires].min(1), 1.0)
+    assert len(fires) == 5
+    assert np.all(np.diff(fires) == 20)
+    np.testing.assert_array_equal(scale, 1.0)
+
+
+def test_alg2_scaling_matches_gamma():
+    betas = jnp.asarray([0.25, 0.5])
+    proc = BinaryArrivals(betas)
+    sch = make_scheduler("alg2", 2)
+    mask, scale = run(sch, proc, 2000)
+    np.testing.assert_allclose(mask.mean(0), betas, atol=0.04)
+    np.testing.assert_allclose(scale[0], [4.0, 2.0])
+
+
+def test_oracle_always_on():
+    det = DeterministicArrivals.periodic([20], horizon=10)
+    sch = make_scheduler("oracle", 1)
+    mask, scale = run(sch, det, 10)
+    np.testing.assert_array_equal(mask, 1.0)
+    np.testing.assert_array_equal(scale, 1.0)
+
+
+def test_registry():
+    assert set(scheduler_names()) == {
+        "alg1", "alg2", "benchmark1", "benchmark2", "oracle",
+        "battery_adaptive"}

@@ -1,0 +1,88 @@
+"""Input-shape / input_specs tests (pure eval_shape — no compilation)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import (
+    INPUT_SHAPES,
+    arch_names,
+    effective_window,
+    get_config,
+    input_specs,
+)
+
+
+def test_shape_table_matches_assignment():
+    t = INPUT_SHAPES
+    assert (t["train_4k"].seq_len, t["train_4k"].global_batch) == (4096, 256)
+    assert (t["prefill_32k"].seq_len, t["prefill_32k"].global_batch) == (32768, 32)
+    assert (t["decode_32k"].seq_len, t["decode_32k"].global_batch) == (32768, 128)
+    assert (t["long_500k"].seq_len, t["long_500k"].global_batch) == (524288, 1)
+
+
+def test_train_specs_shapes():
+    cfg = get_config("minitron-4b")
+    (batch, sched), mode = input_specs(cfg, "train_4k")
+    assert mode == "train"
+    assert batch["tokens"].shape == (256, 4096)
+    assert batch["labels"].shape == (256, 4096)
+    assert batch["client_ids"].shape == (256,)
+    assert sched["mask"].shape == sched["scale"].shape == (32,)
+
+
+def test_decode_specs_have_full_length_cache():
+    cfg = get_config("stablelm-1.6b")
+    specs, mode = input_specs(cfg, "decode_32k")
+    assert mode == "decode"
+    assert specs["tokens"].shape == (128, 1)
+    caches = jax.tree_util.tree_leaves(specs["states"])
+    # full (non-windowed) KV cache: (layers, B, 32768, Hkv, Dh)
+    assert any(l.shape[-3] == 32768 for l in caches)
+
+
+def test_long500k_dense_uses_ring_buffer():
+    cfg = get_config("command-r-35b")
+    assert effective_window(cfg, INPUT_SHAPES["long_500k"]) == \
+        cfg.long_context_window
+    specs, _ = input_specs(cfg, "long_500k")
+    caches = jax.tree_util.tree_leaves(specs["states"])
+    for l in caches:
+        assert l.shape[-3] == cfg.long_context_window  # window, not 524288
+
+
+def test_long500k_ssm_state_is_constant_size():
+    cfg = get_config("xlstm-1.3b")
+    specs, _ = input_specs(cfg, "long_500k")
+    total = sum(l.size for l in jax.tree_util.tree_leaves(specs["states"]))
+    # state size independent of the 524288 context (sub-quadratic family)
+    assert total < 2e9
+
+
+def test_whisper_skips_long500k():
+    cfg = get_config("whisper-tiny")
+    assert not cfg.supports_shape("long_500k")
+    with pytest.raises(ValueError):
+        input_specs(cfg, "long_500k")
+    specs, _ = input_specs(cfg, "decode_32k")
+    assert "memory" in specs  # encoder memory is a serve-step input
+
+
+def test_modality_stub_inputs():
+    vlm = get_config("qwen2-vl-2b")
+    (batch, _), _ = input_specs(vlm, "train_4k")
+    assert batch["vision_embeds"].shape == (256, 256, 1536)
+    aud = get_config("whisper-tiny")
+    (batch, _), _ = input_specs(aud, "train_4k")
+    assert batch["audio_feats"].shape == (256, 1500, 384)
+
+
+def test_every_supported_pair_produces_specs():
+    count = 0
+    for name in arch_names():
+        cfg = get_config(name)
+        for sn in INPUT_SHAPES:
+            if cfg.supports_shape(sn):
+                input_specs(cfg, sn)
+                count += 1
+    assert count == 39  # 10×4 − whisper long_500k

@@ -1,0 +1,121 @@
+"""Lemma 1 (unbiasedness) — Monte-Carlo + hypothesis property tests.
+
+The paper's central lemma: E[Σ_{i∈S_t} p_i·scale_i·g_i] = Σ_i p_i·g_i.
+We verify it for all three arrival models, over random schedules/weights
+(hypothesis), by checking the *expected aggregation weight* per client is
+exactly p_i.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import client_weights
+from repro.core.energy import (
+    BinaryArrivals,
+    DeterministicArrivals,
+    UniformArrivals,
+)
+from repro.core.scheduling import make_scheduler
+
+
+def mean_weights(scheduler, process, p, horizon, seed=0):
+    """Time-average of ω_i = p_i·mask_i·scale_i over the run."""
+    key = jax.random.PRNGKey(seed)
+    sstate, estate = scheduler.init(key), process.init(key)
+    p = jnp.asarray(p, jnp.float32)
+
+    def body(carry, t):
+        sstate, estate, key = carry
+        key, k1, k2 = jax.random.split(key, 3)
+        estate, arr = process.arrivals(estate, t, k1)
+        sstate, dec = scheduler.step(sstate, t, k2, arr)
+        return (sstate, estate, key), client_weights(p, dec)
+
+    _, w = jax.lax.scan(body, (sstate, estate, key), jnp.arange(horizon))
+    return np.asarray(w).mean(0)
+
+
+def test_alg1_unbiased_periodic():
+    taus = [1, 4, 8]
+    p = np.array([0.5, 0.3, 0.2])
+    det = DeterministicArrivals.periodic(taus, horizon=8 * 400)
+    w = mean_weights(make_scheduler("alg1", 3), det, p, 8 * 400)
+    np.testing.assert_allclose(w, p, rtol=0.08)
+
+
+def test_alg2_unbiased_binary():
+    p = np.array([0.25, 0.25, 0.5])
+    proc = BinaryArrivals([0.2, 0.5, 0.9])
+    w = mean_weights(make_scheduler("alg2", 3), proc, p, 5000)
+    np.testing.assert_allclose(w, p, rtol=0.08)
+
+
+def test_alg2_unbiased_uniform():
+    p = np.array([0.6, 0.4])
+    proc = UniformArrivals([3, 9])
+    w = mean_weights(make_scheduler("alg2", 2), proc, p, 9 * 400)
+    np.testing.assert_allclose(w, p, rtol=0.08)
+
+
+def test_benchmark1_is_biased():
+    """The failure mode the paper highlights: without scaling, expected
+    weights are p_i/τ_i — biased toward energy-rich clients."""
+    taus = np.array([1, 10])
+    p = np.array([0.5, 0.5])
+    det = DeterministicArrivals.periodic(taus, horizon=2000)
+    w = mean_weights(make_scheduler("benchmark1", 2), det, p, 2000)
+    np.testing.assert_allclose(w, p / taus, rtol=0.05)
+    assert w[0] > 5 * w[1]  # strong bias
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    taus=st.lists(st.integers(1, 12), min_size=2, max_size=5),
+    seed=st.integers(0, 2**30),
+)
+def test_alg1_unbiased_random_periods(taus, seed):
+    n = len(taus)
+    horizon = int(np.lcm.reduce(taus)) * 60
+    horizon = min(max(horizon, 600), 6000)
+    p = np.random.default_rng(seed).dirichlet([2.0] * n)
+    det = DeterministicArrivals.periodic(taus, horizon=horizon)
+    w = mean_weights(make_scheduler("alg1", n), det, p, horizon, seed=seed)
+    np.testing.assert_allclose(w, p, rtol=0.35, atol=5e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    schedule=st.lists(
+        st.lists(st.booleans(), min_size=24, max_size=24),
+        min_size=1, max_size=4),
+    seed=st.integers(0, 2**30),
+)
+def test_alg1_unbiased_arbitrary_schedules(schedule, seed):
+    """Arbitrary deterministic arrival patterns (not just periodic): the
+    time-summed weight over the run must equal p_i × (#covered steps),
+    because Alg-1 books exactly one appointment per inter-arrival interval
+    with scale = interval length.
+
+    Steps before a client's first arrival are uncovered by construction —
+    the expectation identity holds per covered interval [I_i, Ī_i)."""
+    sched = np.asarray(schedule, dtype=np.float32)
+    n, horizon = sched.shape
+    if sched.sum() == 0:
+        return
+    p = np.full((n,), 1.0 / n, dtype=np.float32)
+    det = DeterministicArrivals(sched)
+    reps = 40
+    acc = np.zeros(n)
+    for r in range(reps):
+        w = mean_weights(make_scheduler("alg1", n), det, p, horizon,
+                         seed=seed + r)
+        acc += w * horizon
+    acc /= reps
+    covered = np.zeros(n)
+    for i in range(n):
+        ts = np.flatnonzero(sched[i])
+        if len(ts):
+            covered[i] = horizon - ts[0]
+    np.testing.assert_allclose(acc, p * covered, rtol=0.25, atol=0.15)
