@@ -1,34 +1,72 @@
 """Benchmark harness — one module per paper table/figure.
 
-  fig1           paper Figure 1 (accuracy vs iteration, 4 schedulers)
+  fig1           paper Figure 1 grid (schedulers x arrivals x seeds)
   theory         Theorem 1 bound vs empirical (+ error-floor sweep)
   kernels_bench  kernel-adjacent micro-benchmarks
   roofline_table dry-run roofline terms per (arch x shape x mesh)
 
-Prints ``name,us_per_call,derived`` CSV. Select with ``--only``.
+Prints ``name,us_per_call,derived`` CSV. Select with ``--only``. With
+``--json PATH`` the rows are additionally written as structured JSON
+(suite, name, us_per_call, parsed derived fields) so perf-trajectory
+``BENCH_*.json`` files can accumulate across PRs.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig1,theory] [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,theory] [--fast] \
+        [--json BENCH_out.json]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
+
+
+def _parse_derived(derived: str) -> dict:
+    """``k1=v1;k2=v2`` -> dict with numeric/bool values where possible."""
+    out: dict = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            if part:
+                out.setdefault("notes", []).append(part)
+            continue
+        k, v = part.split("=", 1)
+        if v in ("True", "False"):
+            out[k] = v == "True"
+        else:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def _parse_row(suite: str, row: str) -> dict:
+    name, us, derived = row.split(",", 2)
+    try:
+        us_val = float(us)
+    except ValueError:
+        us_val = None
+    return {"suite": suite, "name": name, "us_per_call": us_val,
+            "derived": _parse_derived(derived)}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--fast", action="store_true",
-                    help="shrink fig1 iterations for CI-speed runs")
+                    help="shrink grid sizes (iterations/seeds) for CI-speed runs")
+    ap.add_argument("--json", default="",
+                    help="also write structured results to this JSON path")
     args = ap.parse_args()
 
     sys.path.insert(0, ".")  # examples/ imports
     from benchmarks import fig1, kernels_bench, roofline_table, theory
 
+    fig1_kw = (dict(iters=40, seeds=8, n_clients=8) if args.fast
+               else dict(iters=100, seeds=8, n_clients=8))
     suites = {
-        "fig1": lambda: fig1.run(iters=100 if args.fast else 250),
+        "fig1": lambda: fig1.run(**fig1_kw),
         "theory": theory.run,
         "kernels_bench": kernels_bench.run,
         "roofline_table": roofline_table.run,
@@ -37,14 +75,23 @@ def main() -> None:
         or list(suites)
 
     print("name,us_per_call,derived")
-    failed = []
+    records, failed = [], []
     for name in selected:
         try:
             for row in suites[name]():
                 print(row, flush=True)
+                records.append(_parse_row(name, row))
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             failed.append(name)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"suites": selected, "fast": args.fast,
+                       "failed": failed, "results": records}, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json}", file=sys.stderr)
+
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
         raise SystemExit(1)

@@ -16,6 +16,7 @@ from repro.core.energy import (
 )
 from repro.core.scheduling import (
     AlwaysOnScheduler,
+    BatteryAdaptiveScheduler,
     BestEffortScheduler,
     Decision,
     EHAppointmentScheduler,
@@ -43,7 +44,8 @@ from repro.core.trainer import ClientSimulator, build_energy_train_step
 __all__ = [
     "Arrivals", "BinaryArrivals", "DeterministicArrivals", "UniformArrivals",
     "expected_participation",
-    "AlwaysOnScheduler", "BestEffortScheduler", "Decision",
+    "AlwaysOnScheduler", "BatteryAdaptiveScheduler", "BestEffortScheduler",
+    "Decision",
     "EHAppointmentScheduler", "WaitForAllScheduler", "make_scheduler",
     "scheduler_names",
     "aggregate_client_grads", "client_weights", "per_example_coefficients",

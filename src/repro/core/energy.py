@@ -1,14 +1,25 @@
-"""Energy-arrival processes (paper §II-B).
+"""Energy-arrival processes (paper §II-B), as registered JAX pytrees.
 
 Each process models ``E_i^t`` — whether client ``i`` harvests a unit of
 energy at step ``t`` — for ``n_clients`` clients, vectorized and
 scan-friendly so the whole training loop can live under ``jax.jit`` /
 ``jax.lax.scan``.
 
-Protocol (duck-typed; all methods pure):
+Every process is a ``jax.tree_util.register_dataclass`` pytree: its
+array-valued hyperparameters (the schedule/gap tables, β_i, T_i) are
+*leaves*, so a process can cross ``jit`` / ``vmap`` boundaries as an
+ordinary argument, and a whole family of processes (e.g. one per
+scenario in a sweep) can be stacked leaf-wise and executed by a single
+compiled computation (see :mod:`repro.experiments`). Shapes are static
+metadata by construction — ``n_clients`` / ``horizon`` derive from leaf
+shapes, which jax specializes on. Registration rules are documented in
+DESIGN.md §3.
+
+Protocol (structural; all methods pure):
 
     init(key)              -> state                     (pytree)
     arrivals(state, t, key)-> (state, Arrivals)
+    expected_participation() -> (N,) long-run participation probability
 
 ``Arrivals`` carries:
     energy : (N,) float32 in {0,1}   -- E_i^t
@@ -31,6 +42,7 @@ Three concrete processes, mirroring the paper exactly:
 
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
@@ -45,6 +57,42 @@ class Arrivals(NamedTuple):
     gap: jax.Array     # (N,) float32 — T_i^t (det.) or γ_i (stochastic)
 
 
+def _concrete(x):
+    """``x`` as a host ndarray if it holds concrete values, else None.
+
+    Pytree unflattening re-invokes the dataclass constructor — sometimes
+    with tracers (under jit/vmap) or opaque placeholder objects (during
+    tree-structure manipulation) — so ``__post_init__`` validation must
+    only fire on concrete inputs (DESIGN.md §3).
+    """
+    if isinstance(x, jax.core.Tracer):
+        return None
+    try:
+        return np.asarray(x, np.float64)
+    except (TypeError, ValueError):
+        return None
+
+
+def _gap_table(schedule: np.ndarray) -> np.ndarray:
+    """Vectorized T[i, t] = Ī_i^t − I_i^t over an (N, H) 0/1 schedule.
+
+    For each arrival at t0 with next arrival t1 (horizon if none),
+    T[i, t] = t1 − t0 on t ∈ [t0, t1); 0 before the first arrival.
+    """
+    n, h = schedule.shape
+    arr = schedule > 0
+    idx = np.arange(h)[None, :]
+    # I_i^t: most recent arrival at or before t (−1: none yet).
+    last = np.maximum.accumulate(np.where(arr, idx, -1), axis=1)
+    # First arrival at or after t (h: none); padded at index h so the
+    # lookup below stays in-bounds for the final interval.
+    next_ge = np.minimum.accumulate(np.where(arr, idx, h)[:, ::-1], axis=1)[:, ::-1]
+    next_ge = np.concatenate([next_ge, np.full((n, 1), h)], axis=1)
+    ibar = np.take_along_axis(next_ge, np.clip(last + 1, 0, h), axis=1)
+    return np.where(last >= 0, ibar - last, 0).astype(np.float32)
+
+
+@dataclasses.dataclass(eq=False)
 class DeterministicArrivals:
     """Deterministic energy arrivals known in advance (paper §II-B-1).
 
@@ -52,31 +100,39 @@ class DeterministicArrivals:
     ----------
     schedule : (N, horizon) 0/1 array of arrival indicators. Arrival times
         for client i are ``I_i = {t : schedule[i, t] == 1}``.
+    gaps : precomputed gap table; leave as None (the default) and it is
+        derived from ``schedule`` on the host — the schedule is known in
+        advance by assumption. Pytree unflattening supplies both leaves,
+        so no recomputation happens across jit/vmap boundaries.
 
-    Precomputes, on the host (the schedule is known in advance by
-    assumption), the gap table ``T[i, t] = Ī_i^t − I_i^t`` used by
-    Algorithm 1. At an arrival time ``t`` this is the distance to the next
-    arrival; the final interval is truncated at the horizon so the run
-    stays self-contained (and the scheme stays unbiased within the run).
-    Steps before a client's first arrival have gap 0 (the client cannot
+    The gap table ``T[i, t] = Ī_i^t − I_i^t`` is what Algorithm 1 uses. At
+    an arrival time ``t`` this is the distance to the next arrival; the
+    final interval is truncated at the horizon so the run stays
+    self-contained (and the scheme stays unbiased within the run). Steps
+    before a client's first arrival have gap 0 (the client cannot
     participate yet).
     """
 
-    def __init__(self, schedule):
-        schedule = np.asarray(schedule)
-        if schedule.ndim != 2:
-            raise ValueError(f"schedule must be (N, horizon), got {schedule.shape}")
-        self.n_clients, self.horizon = schedule.shape
-        self._np_schedule = (schedule != 0).astype(np.float32)
+    schedule: jax.Array        # (N, horizon) float32 in {0, 1} — leaf
+    gaps: jax.Array = None     # (N, horizon) float32 — leaf
 
-        gaps = np.zeros_like(self._np_schedule)
-        for i in range(self.n_clients):
-            ts = np.flatnonzero(self._np_schedule[i])
-            for k, t0 in enumerate(ts):
-                t1 = ts[k + 1] if k + 1 < len(ts) else self.horizon
-                gaps[i, t0:t1] = t1 - t0  # T_i^t constant over [I, Ī)
-        self.schedule = jnp.asarray(self._np_schedule)
-        self.gaps = jnp.asarray(gaps)
+    def __post_init__(self):
+        if self.gaps is None:
+            schedule = np.asarray(self.schedule)
+            if schedule.ndim != 2:
+                raise ValueError(
+                    f"schedule must be (N, horizon), got {schedule.shape}")
+            sched01 = (schedule != 0).astype(np.float32)
+            self.gaps = jnp.asarray(_gap_table(sched01))
+            self.schedule = jnp.asarray(sched01)
+
+    @property
+    def n_clients(self) -> int:
+        return self.schedule.shape[-2]
+
+    @property
+    def horizon(self) -> int:
+        return self.schedule.shape[-1]
 
     @classmethod
     def periodic(cls, taus, horizon: int, offsets=None) -> "DeterministicArrivals":
@@ -103,13 +159,41 @@ class DeterministicArrivals:
         gap = self.gaps[:, tc] * valid
         return state, Arrivals(energy=energy, gap=gap)
 
+    def expected_participation(self) -> jax.Array:
+        # Trailing (horizon) axis so stacked (S, N, H) instances batch too.
+        return jnp.mean(self.schedule, axis=-1)
 
+
+@dataclasses.dataclass(eq=False)
 class BinaryArrivals:
-    """E_i^t ~ Bern(β_i), iid across steps and clients (paper eq. 9)."""
+    """E_i^t ~ Bern(β_i), iid across steps and clients (paper eq. 9).
 
-    def __init__(self, betas):
-        self.betas = jnp.asarray(betas, jnp.float32)
-        self.n_clients = self.betas.shape[0]
+    Requires β_i ∈ (0, 1]: the unbiased scaling γ_i = 1/β_i (Alg. 2 /
+    Corollary 1) is infinite for β_i = 0 — a client that never harvests
+    cannot be scheduled — so zero/negative rates are rejected at
+    construction rather than silently producing ``inf`` scales.
+    """
+
+    betas: jax.Array  # (N,) float32 — leaf
+
+    def __post_init__(self):
+        betas = _concrete(self.betas)
+        if betas is not None:
+            if betas.ndim < 1:
+                raise ValueError(f"betas must be (N,), got {betas.shape}")
+            if betas.size and not (np.all(np.isfinite(betas))
+                                   and np.all(betas > 0.0)
+                                   and np.all(betas <= 1.0)):
+                raise ValueError(
+                    "BinaryArrivals requires finite betas in (0, 1]; got "
+                    f"min={betas.min():g}, max={betas.max():g} "
+                    "(β_i = 0 would make the 1/β_i scaling infinite)")
+            self.betas = jnp.asarray(betas, jnp.float32)
+
+    @property
+    def n_clients(self) -> int:
+        # Trailing axis so stacked (scenario-batched) instances resolve too.
+        return self.betas.shape[-1]
 
     def init(self, key):
         del key
@@ -122,11 +206,15 @@ class BinaryArrivals:
         gap = 1.0 / self.betas  # γ_i = 1/β_i (Alg. 2 / Corollary 1)
         return state, Arrivals(energy=energy, gap=gap)
 
+    def expected_participation(self) -> jax.Array:
+        return self.betas
+
 
 class UniformArrivalsState(NamedTuple):
     offset: jax.Array  # (N,) int32 — arrival position inside current window
 
 
+@dataclasses.dataclass(eq=False)
 class UniformArrivals:
     """One arrival per window of length T_i, uniformly placed (paper §II-B-2).
 
@@ -136,9 +224,23 @@ class UniformArrivals:
     different times.
     """
 
-    def __init__(self, periods):
-        self.periods = jnp.asarray(periods, jnp.int32)
-        self.n_clients = self.periods.shape[0]
+    periods: jax.Array  # (N,) int32 — leaf
+
+    def __post_init__(self):
+        periods = _concrete(self.periods)
+        if periods is not None:
+            if periods.ndim < 1:
+                raise ValueError(f"periods must be (N,), got {periods.shape}")
+            if periods.size and not (np.all(np.isfinite(periods))
+                                     and np.all(periods >= 1)):
+                raise ValueError(
+                    "UniformArrivals requires finite periods >= 1; "
+                    f"got min={periods.min():g}")
+            self.periods = jnp.asarray(periods, jnp.int32)
+
+    @property
+    def n_clients(self) -> int:
+        return self.periods.shape[-1]
 
     def init(self, key):
         # Offsets for the first window (the t=0 step rolls them anyway if
@@ -155,16 +257,30 @@ class UniformArrivals:
         gap = self.periods.astype(jnp.float32)  # γ_i = T_i (Corollary 1)
         return UniformArrivalsState(offset=offset), Arrivals(energy=energy, gap=gap)
 
+    def expected_participation(self) -> jax.Array:
+        return 1.0 / self.periods.astype(jnp.float32)
+
+
+jax.tree_util.register_dataclass(
+    DeterministicArrivals, data_fields=["schedule", "gaps"], meta_fields=[])
+jax.tree_util.register_dataclass(
+    BinaryArrivals, data_fields=["betas"], meta_fields=[])
+jax.tree_util.register_dataclass(
+    UniformArrivals, data_fields=["periods"], meta_fields=[])
+
 
 def expected_participation(process) -> jax.Array:
     """Long-run participation probability per client under best-effort.
 
+    Delegates to the process's protocol method — any object implementing
+    ``expected_participation()`` works; no type dispatch.
+
     Used by tests and by the theory module (Corollary 1 constants).
     """
-    if isinstance(process, BinaryArrivals):
-        return process.betas
-    if isinstance(process, UniformArrivals):
-        return 1.0 / process.periods.astype(jnp.float32)
-    if isinstance(process, DeterministicArrivals):
-        return jnp.mean(process.schedule, axis=1)
-    raise TypeError(f"unknown process {type(process)!r}")
+    try:
+        method = process.expected_participation
+    except AttributeError:
+        raise TypeError(
+            f"{type(process)!r} does not implement the energy-process "
+            "protocol (missing expected_participation())") from None
+    return method()

@@ -1,4 +1,4 @@
-"""User-scheduling policies (paper §III + §V benchmarks).
+"""User-scheduling policies (paper §III + §V benchmarks), as JAX pytrees.
 
 Every scheduler is a pure-jax state machine:
 
@@ -15,6 +15,15 @@ The server-side weight for client i at step t is then
 ``p_i · mask_i · scale_i`` (paper eq. 11/12), assembled by
 :mod:`repro.core.aggregation`.
 
+Like the energy processes, every scheduler is a registered pytree
+dataclass (``jax.tree_util.register_dataclass``): array-valued
+hyperparameters (battery capacity, EMA rate, warmup) are leaves, while
+shape-determining fields (``n_clients``) and python-level branches
+(``scaled``) are static metadata. A scheduler therefore passes through
+``jit`` / ``vmap`` / ``lax.scan`` as a plain argument, and a family of
+schedulers (e.g. a capacity sweep) stacks leaf-wise into one batched
+computation. See DESIGN.md §3 for the registration rules.
+
 Schedulers
 ----------
 * ``EHAppointmentScheduler`` — **Algorithm 1** (deterministic arrivals):
@@ -29,16 +38,19 @@ Schedulers
   full.
 * ``AlwaysOnScheduler`` — the full-participation oracle (conventional
   distributed SGD with all users available, paper §V "target").
+* ``BatteryAdaptiveScheduler`` — beyond-paper energy accumulation with
+  adaptive inverse-rate scaling (paper §VI future work).
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.energy import Arrivals
+from repro.core.energy import Arrivals, _concrete
 
 
 class Decision(NamedTuple):
@@ -51,11 +63,11 @@ class AppointmentState(NamedTuple):
     appt_scale: jax.Array  # (N,) float32 — T_i^t captured at booking time
 
 
+@dataclasses.dataclass(eq=False)
 class EHAppointmentScheduler:
     """Algorithm 1 — unbiased scheduling for deterministic arrivals."""
 
-    def __init__(self, n_clients: int):
-        self.n_clients = n_clients
+    n_clients: int  # static
 
     def init(self, key):
         del key
@@ -81,12 +93,12 @@ class EHAppointmentScheduler:
         return new_state, Decision(mask=mask, scale=appt_scale)
 
 
+@dataclasses.dataclass(eq=False)
 class BestEffortScheduler:
     """Algorithm 2 (scaled=True) / paper Benchmark 1 (scaled=False)."""
 
-    def __init__(self, n_clients: int, scaled: bool = True):
-        self.n_clients = n_clients
-        self.scaled = scaled
+    n_clients: int       # static
+    scaled: bool = True  # static — selects which algorithm is traced
 
     def init(self, key):
         del key
@@ -106,11 +118,11 @@ class WaitForAllState(NamedTuple):
     battery: jax.Array  # (N,) float32 in {0,1} — unit battery
 
 
+@dataclasses.dataclass(eq=False)
 class WaitForAllScheduler:
     """Benchmark 2 — synchronous step only when every battery is full."""
 
-    def __init__(self, n_clients: int):
-        self.n_clients = n_clients
+    n_clients: int  # static
 
     def init(self, key):
         del key
@@ -127,11 +139,11 @@ class WaitForAllScheduler:
         )
 
 
+@dataclasses.dataclass(eq=False)
 class AlwaysOnScheduler:
     """Full-participation oracle (conventional distributed SGD)."""
 
-    def __init__(self, n_clients: int):
-        self.n_clients = n_clients
+    n_clients: int  # static
 
     def init(self, key):
         del key
@@ -149,6 +161,7 @@ class BatteryState(NamedTuple):
     steps: jax.Array    # () int32
 
 
+@dataclasses.dataclass(eq=False)
 class BatteryAdaptiveScheduler:
     """Beyond-paper: energy ACCUMULATION (the paper's §VI future work).
 
@@ -159,14 +172,23 @@ class BatteryAdaptiveScheduler:
     "requires only local estimation of the energy statistics" (abstract).
     With capacity 1 and Bernoulli arrivals this converges to Algorithm 2's
     1/β_i scaling without knowing β_i.
+
+    ``capacity`` / ``ema`` / ``warmup`` are array leaves, so a sweep over
+    battery capacities is a leaf-stacked batch of schedulers — one
+    compiled computation for the whole sweep.
     """
 
-    def __init__(self, n_clients: int, capacity: float = 2.0,
-                 ema: float = 0.05, warmup: int = 20):
-        self.n_clients = n_clients
-        self.capacity = capacity
-        self.ema = ema
-        self.warmup = warmup
+    n_clients: int            # static
+    capacity: jax.Array = 2.0  # () float32 — leaf
+    ema: jax.Array = 0.05      # () float32 — leaf
+    warmup: jax.Array = 20     # () int32 — leaf
+
+    def __post_init__(self):
+        for name, dtype in (("capacity", jnp.float32), ("ema", jnp.float32),
+                            ("warmup", jnp.int32)):
+            val = _concrete(getattr(self, name))
+            if val is not None:
+                setattr(self, name, jnp.asarray(val, dtype))
 
     def init(self, key):
         del key
@@ -191,12 +213,38 @@ class BatteryAdaptiveScheduler:
         return new, Decision(mask=mask, scale=scale)
 
 
+jax.tree_util.register_dataclass(
+    EHAppointmentScheduler, data_fields=[], meta_fields=["n_clients"])
+jax.tree_util.register_dataclass(
+    BestEffortScheduler, data_fields=[], meta_fields=["n_clients", "scaled"])
+jax.tree_util.register_dataclass(
+    WaitForAllScheduler, data_fields=[], meta_fields=["n_clients"])
+jax.tree_util.register_dataclass(
+    AlwaysOnScheduler, data_fields=[], meta_fields=["n_clients"])
+jax.tree_util.register_dataclass(
+    BatteryAdaptiveScheduler,
+    data_fields=["capacity", "ema", "warmup"], meta_fields=["n_clients"])
+
+
+def _strict(ctor, name, n, kw, **fixed):
+    """Registry entries whose identity admits no extra hyperparameters
+    must reject them — silently swallowing `scaled=False` (or a typo'd
+    kwarg) would run a different algorithm than requested."""
+    if kw:
+        raise TypeError(f"scheduler {name!r} takes no extra kwargs; "
+                        f"got {sorted(kw)}")
+    return ctor(n, **fixed)
+
+
 _REGISTRY = {
-    "alg1": lambda n, **kw: EHAppointmentScheduler(n),
-    "alg2": lambda n, **kw: BestEffortScheduler(n, scaled=True),
-    "benchmark1": lambda n, **kw: BestEffortScheduler(n, scaled=False),
-    "benchmark2": lambda n, **kw: WaitForAllScheduler(n),
-    "oracle": lambda n, **kw: AlwaysOnScheduler(n),
+    "alg1": lambda n, **kw: _strict(EHAppointmentScheduler, "alg1", n, kw),
+    "alg2": lambda n, **kw: _strict(BestEffortScheduler, "alg2", n, kw,
+                                    scaled=True),
+    "benchmark1": lambda n, **kw: _strict(BestEffortScheduler, "benchmark1",
+                                          n, kw, scaled=False),
+    "benchmark2": lambda n, **kw: _strict(WaitForAllScheduler, "benchmark2",
+                                          n, kw),
+    "oracle": lambda n, **kw: _strict(AlwaysOnScheduler, "oracle", n, kw),
     "battery_adaptive": lambda n, **kw: BatteryAdaptiveScheduler(n, **kw),
 }
 
@@ -204,7 +252,7 @@ _REGISTRY = {
 def make_scheduler(name: str, n_clients: int, **kw):
     """Scheduler factory — names used across configs/CLI/benchmarks."""
     try:
-        return _REGISTRY[name](n_clients, **kw)
+        return _REGISTRY[name](int(n_clients), **kw)
     except KeyError:
         raise ValueError(f"unknown scheduler {name!r}; have {sorted(_REGISTRY)}") from None
 

@@ -49,7 +49,11 @@ class ClientSimulator:
     ----------
     grads_fn : (params, key, t) -> (N,)-stacked gradient pytree.
         Owns data sampling (eq. 4); must return *local* gradients g_i.
-    scheduler, energy : repro.core.scheduling / repro.core.energy objects.
+    scheduler, energy : repro.core.scheduling / repro.core.energy pytrees.
+        Optional at construction — every method also accepts them as
+        explicit (traced) arguments, so a single simulator can execute a
+        whole leaf-stacked family of scenarios under ``vmap``
+        (:func:`repro.experiments.run_grid`).
     p : (N,) data weights p_i = D_i / D.
     optimizer : repro.optim.Optimizer applied to the aggregated update.
         For exact paper semantics use ``sgd(eta)``.
@@ -57,7 +61,8 @@ class ClientSimulator:
     use_kernel : route aggregation through the Pallas kernel path.
     """
 
-    def __init__(self, *, grads_fn, scheduler, energy, p, optimizer: Optimizer,
+    def __init__(self, *, grads_fn, p, optimizer: Optimizer,
+                 scheduler=None, energy=None,
                  loss_fn=None, use_kernel: bool = False):
         self.grads_fn = grads_fn
         self.scheduler = scheduler
@@ -67,21 +72,33 @@ class ClientSimulator:
         self.loss_fn = loss_fn
         self.use_kernel = use_kernel
 
-    def init(self, key, params) -> SimCarry:
+    def _components(self, scheduler, energy):
+        scheduler = self.scheduler if scheduler is None else scheduler
+        energy = self.energy if energy is None else energy
+        if scheduler is None or energy is None:
+            raise ValueError(
+                "scheduler/energy must be given either at construction or "
+                "as arguments to init/step/run")
+        return scheduler, energy
+
+    def init(self, key, params, *, scheduler=None, energy=None) -> SimCarry:
+        scheduler, energy = self._components(scheduler, energy)
         k_sched, k_energy, k_run = jax.random.split(key, 3)
         return SimCarry(
             params=params,
             opt_state=self.optimizer.init(params),
-            sched_state=self.scheduler.init(k_sched),
-            energy_state=self.energy.init(k_energy),
+            sched_state=scheduler.init(k_sched),
+            energy_state=energy.init(k_energy),
             key=k_run,
             t=jnp.zeros((), jnp.int32),
         )
 
-    def step(self, carry: SimCarry) -> tuple[SimCarry, dict]:
+    def step(self, carry: SimCarry, scheduler=None,
+             energy=None) -> tuple[SimCarry, dict]:
+        scheduler, energy = self._components(scheduler, energy)
         key, k_arr, k_sched, k_grad = jax.random.split(carry.key, 4)
-        energy_state, arr = self.energy.arrivals(carry.energy_state, carry.t, k_arr)
-        sched_state, dec = self.scheduler.step(carry.sched_state, carry.t, k_sched, arr)
+        energy_state, arr = energy.arrivals(carry.energy_state, carry.t, k_arr)
+        sched_state, dec = scheduler.step(carry.sched_state, carry.t, k_sched, arr)
         stacked = self.grads_fn(carry.params, k_grad, carry.t)
         weights = aggregation.client_weights(self.p, dec)
         if self.use_kernel:
@@ -102,17 +119,49 @@ class ClientSimulator:
                              key=key, t=carry.t + 1)
         return new_carry, out
 
-    def run(self, key, params, num_steps: int) -> tuple[Any, SimHistory]:
-        carry = self.init(key, params)
+    def run(self, key, params, num_steps: int, *, scheduler=None, energy=None,
+            eval_fn=None, eval_every: int = 0):
+        """Run the whole loop as one (or a few) ``lax.scan`` computations.
+
+        Without ``eval_fn``: returns ``(final_params, SimHistory)``.
+
+        With ``eval_fn`` (params -> metric pytree): the scan runs in
+        ``num_steps // eval_every`` chunks, evaluating after each chunk,
+        and returns ``(final_params, SimHistory, evals)`` where every
+        ``evals`` leaf has leading axis ``num_steps // eval_every``. This
+        keeps evaluation *inside* the compiled computation so grid
+        engines can vmap it (DESIGN.md §1).
+        """
+        scheduler, energy = self._components(scheduler, energy)
+        carry = self.init(key, params, scheduler=scheduler, energy=energy)
 
         def body(c, _):
-            c, out = self.step(c)
-            return c, out
+            return self.step(c, scheduler, energy)
 
-        carry, outs = jax.lax.scan(body, carry, None, length=num_steps)
-        hist = SimHistory(loss=outs["loss"], participation=outs["participation"],
+        if eval_fn is None:
+            carry, outs = jax.lax.scan(body, carry, None, length=num_steps)
+            return carry.params, self._history(outs)
+
+        if eval_every <= 0:
+            eval_every = num_steps
+        if num_steps % eval_every != 0:
+            raise ValueError(
+                f"num_steps={num_steps} must divide by eval_every={eval_every}")
+
+        def chunk(c, _):
+            c, outs = jax.lax.scan(body, c, None, length=eval_every)
+            return c, (outs, eval_fn(c.params))
+
+        carry, (outs, evals) = jax.lax.scan(
+            chunk, carry, None, length=num_steps // eval_every)
+        outs = jax.tree_util.tree_map(
+            lambda x: x.reshape((num_steps,) + x.shape[2:]), outs)
+        return carry.params, self._history(outs), evals
+
+    @staticmethod
+    def _history(outs) -> SimHistory:
+        return SimHistory(loss=outs["loss"], participation=outs["participation"],
                           weight_sum=outs["weight_sum"])
-        return carry.params, hist
 
 
 class TrainState(NamedTuple):

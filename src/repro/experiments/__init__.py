@@ -1,0 +1,37 @@
+"""Scenario engine: declarative experiment grids, batched execution.
+
+* :mod:`repro.experiments.scenario` — :class:`Scenario` specs, the
+  energy-profile factory, and the named-grid registry.
+* :mod:`repro.experiments.engine` — :func:`run_grid`, which executes a
+  whole scheduler × arrival × seed grid as one compiled computation per
+  component structure (vmap over stacked pytree leaves), plus the
+  sequential per-cell baseline for cross-checks and benchmarking.
+"""
+
+from repro.experiments.engine import (
+    CellResult,
+    clear_cache,
+    grid_summary,
+    run_grid,
+    run_grid_sequential,
+)
+from repro.experiments.scenario import (
+    ARRIVAL_KINDS,
+    FIG1_SCHEDULERS,
+    PAPER_TAUS,
+    Scenario,
+    default_taus,
+    get_grid,
+    grid_names,
+    make_energy_process,
+    register_grid,
+    scenario_grid,
+)
+
+__all__ = [
+    "ARRIVAL_KINDS", "FIG1_SCHEDULERS", "PAPER_TAUS",
+    "CellResult", "Scenario", "clear_cache", "default_taus", "get_grid",
+    "grid_names",
+    "grid_summary", "make_energy_process", "register_grid", "run_grid",
+    "run_grid_sequential", "scenario_grid",
+]

@@ -1,0 +1,222 @@
+"""Grid-batched scenario execution: one compiled computation per group.
+
+The paper's headline evidence is a *grid* of runs — schedulers × arrival
+processes × seeds. Because schedulers and energy processes are
+registered pytrees (see :mod:`repro.core.energy` /
+:mod:`repro.core.scheduling`), a whole grid collapses into a handful of
+compiled computations:
+
+1. Scenarios are grouped by the **pytree structure** of their built
+   (scheduler, energy) pair — same dataclass types, same static
+   metadata, same leaf shapes/dtypes.
+2. Each group's component leaves are stacked along a new scenario axis.
+3. One jitted function (:data:`_run_group`) runs
+   ``vmap(scenarios) ∘ vmap(seeds)`` over :meth:`ClientSimulator.run`'s
+   ``lax.scan`` — so XLA traces and compiles **once per group**, not
+   once per (scenario, seed) cell.
+
+:func:`run_grid_sequential` executes the identical cells one traced scan
+at a time — the pre-refactor execution model — and exists for numerical
+cross-checks and wall-clock comparison (``benchmarks/fig1.py`` times
+both).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.trainer import ClientSimulator, SimHistory
+from repro.experiments.scenario import Scenario
+
+
+class CellResult(NamedTuple):
+    """Per-scenario result; every leaf carries a leading seed axis R.
+
+    params  : final model parameters, leaves (R, ...)
+    history : SimHistory with leaves (R, T, ...)
+    evals   : eval_fn outputs with leaves (R, num_evals, ...), or None
+    """
+
+    params: Any
+    history: SimHistory
+    evals: Any = None
+
+
+def _group_key(scheduler, energy):
+    """Hashable trace signature: pytree structure + leaf shapes/dtypes."""
+    leaves, treedef = jax.tree_util.tree_flatten((scheduler, energy))
+    return treedef, tuple((l.shape, str(l.dtype)) for l in leaves)
+
+
+def _stack(components):
+    """Leaf-wise stack of same-structure pytrees along a new scenario axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *components)
+
+
+@partial(jax.jit, static_argnames=("sim", "num_steps", "eval_fn", "eval_every"))
+def _run_group(scheduler, energy, params0, keys, *, sim: ClientSimulator,
+               num_steps: int, eval_fn=None, eval_every: int = 0):
+    """vmap(scenario axis) ∘ vmap(seed axis) over one simulator scan.
+
+    ``scheduler`` / ``energy`` leaves carry a leading scenario axis S;
+    ``keys`` is (R, 2). Compiled once per (sim, group structure) — probe
+    ``_run_group._cache_size()`` to assert trace counts.
+
+    The static ``sim`` / ``eval_fn`` are hashed by identity, so each
+    distinct closure (and the datasets it captures) stays referenced by
+    the jit cache for process lifetime. Benchmarks and tests are short
+    lived; a long-running service issuing many distinct grids should
+    call :func:`clear_cache` between sweeps.
+    """
+
+    def one(sch, en, key):
+        out = sim.run(key, params0, num_steps, scheduler=sch, energy=en,
+                      eval_fn=eval_fn, eval_every=eval_every)
+        return CellResult(*out) if eval_fn is not None else CellResult(*out, None)
+
+    over_seeds = jax.vmap(one, in_axes=(None, None, 0))
+    over_scenarios = jax.vmap(over_seeds, in_axes=(0, 0, None))
+    return over_scenarios(scheduler, energy, keys)
+
+
+def clear_cache() -> None:
+    """Drop compiled grid executables (and the sim/eval_fn closures —
+    with their captured datasets — that the jit cache keeps alive)."""
+    _run_group.clear_cache()
+
+
+def _seed_keys(seeds):
+    if isinstance(seeds, int):
+        seeds = range(seeds)
+    seeds = list(seeds)
+    if not seeds:
+        raise ValueError("need at least one seed")
+    return seeds, jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+
+
+def run_grid(
+    scenarios: Sequence[Scenario],
+    *,
+    grads_fn=None,
+    p=None,
+    optimizer=None,
+    params0,
+    num_steps: int,
+    seeds: int | Sequence[int] = 8,
+    loss_fn=None,
+    use_kernel: bool = False,
+    eval_fn=None,
+    eval_every: int = 0,
+    sim: ClientSimulator | None = None,
+) -> dict[str, CellResult]:
+    """Execute every scenario × seed cell, batched per component structure.
+
+    ``seeds`` is either a count (seeds 0..R−1) or an explicit list; seed
+    ``s`` runs under ``jax.random.PRNGKey(s)``, bit-identical to a
+    standalone ``ClientSimulator.run(PRNGKey(s), ...)`` of the same cell
+    (up to float reassociation introduced by batching).
+
+    The jit cache is keyed on ``sim`` by identity, so repeated calls
+    with a fresh simulator (or fresh grads_fn/eval_fn lambdas) re-trace
+    every group. A driver issuing the same grid many times should build
+    the simulator once and pass it via ``sim`` (then grads_fn/p/
+    optimizer/loss_fn/use_kernel are taken from it and the keyword
+    values are ignored).
+
+    Returns ``{scenario.name: CellResult}`` in input order.
+    """
+    scenarios = list(scenarios)
+    names = [sc.name for sc in scenarios]
+    if len(set(names)) != len(names):
+        raise ValueError(f"scenario names must be unique, got {names}")
+    _, keys = _seed_keys(seeds)
+
+    if sim is None:
+        if grads_fn is None or p is None or optimizer is None:
+            raise ValueError(
+                "either pass a prebuilt sim= or all of grads_fn/p/optimizer")
+        sim = ClientSimulator(grads_fn=grads_fn, p=p, optimizer=optimizer,
+                              loss_fn=loss_fn, use_kernel=use_kernel)
+
+    built = [sc.build() for sc in scenarios]
+    groups: dict[Any, list[int]] = {}
+    for idx, (sch, en) in enumerate(built):
+        groups.setdefault(_group_key(sch, en), []).append(idx)
+
+    results: list[CellResult | None] = [None] * len(scenarios)
+    for members in groups.values():
+        sch_batch = _stack([built[i][0] for i in members])
+        en_batch = _stack([built[i][1] for i in members])
+        out = _run_group(sch_batch, en_batch, params0, keys, sim=sim,
+                         num_steps=num_steps, eval_fn=eval_fn,
+                         eval_every=eval_every)
+        for j, idx in enumerate(members):
+            results[idx] = jax.tree_util.tree_map(lambda x: x[j], out)
+    return dict(zip(names, results))
+
+
+def run_grid_sequential(
+    scenarios: Sequence[Scenario],
+    *,
+    grads_fn=None,
+    p=None,
+    optimizer=None,
+    params0,
+    num_steps: int,
+    seeds: int | Sequence[int] = 8,
+    loss_fn=None,
+    use_kernel: bool = False,
+    eval_fn=None,
+    eval_every: int = 0,
+    sim: ClientSimulator | None = None,
+) -> dict[str, CellResult]:
+    """The pre-refactor execution model: one traced scan per cell.
+
+    Numerically equivalent to :func:`run_grid` (same per-seed keys);
+    kept as the baseline for correctness cross-checks and for the
+    batched-vs-sequential wall-clock comparison in ``benchmarks/fig1.py``.
+    """
+    scenarios = list(scenarios)
+    seed_list, _ = _seed_keys(seeds)
+    if sim is None:
+        if grads_fn is None or p is None or optimizer is None:
+            raise ValueError(
+                "either pass a prebuilt sim= or all of grads_fn/p/optimizer")
+        sim = ClientSimulator(grads_fn=grads_fn, p=p, optimizer=optimizer,
+                              loss_fn=loss_fn, use_kernel=use_kernel)
+    results = {}
+    for sc in scenarios:
+        scheduler, energy = sc.build()
+        per_seed = []
+        for s in seed_list:
+            out = sim.run(jax.random.PRNGKey(int(s)), params0, num_steps,
+                          scheduler=scheduler, energy=energy,
+                          eval_fn=eval_fn, eval_every=eval_every)
+            cell = CellResult(*out) if eval_fn is not None \
+                else CellResult(*out, None)
+            per_seed.append(cell)
+        results[sc.name] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *per_seed)
+    return results
+
+
+def grid_summary(results: dict[str, CellResult], reducer=None) -> dict[str, dict]:
+    """Per-scenario mean±std over the seed axis of a scalar metric.
+
+    ``reducer(cell) -> (R,)`` extracts one scalar per seed; default is
+    the mean loss over the final 10% of steps.
+    """
+    if reducer is None:
+        def reducer(cell):
+            tail = max(1, cell.history.loss.shape[-1] // 10)
+            return cell.history.loss[..., -tail:].mean(axis=-1)
+    out = {}
+    for name, cell in results.items():
+        vals = jnp.asarray(reducer(cell))
+        out[name] = {"mean": float(vals.mean()), "std": float(vals.std()),
+                     "n_seeds": int(vals.shape[0])}
+    return out

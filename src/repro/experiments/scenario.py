@@ -1,0 +1,165 @@
+"""Scenario specs: one declarative cell of an experiment grid.
+
+A :class:`Scenario` names a (scheduler × energy-process) pair plus the
+shape of the client population; :meth:`Scenario.build` materializes the
+two pytree components. Scenarios are *host-side specs* (plain
+dataclasses, not pytrees) — the pytrees they build are what crosses
+``jit`` / ``vmap`` boundaries.
+
+The module also owns:
+
+* :func:`make_energy_process` — the paper-§V energy-profile factory
+  (previously a private helper of ``repro.launch.train``; it lives here
+  so drivers, benchmarks, examples and tests all build arrival processes
+  from one registry).
+* a **grid registry** of named scenario lists (``fig1``,
+  ``fig1_grid``, …) so benchmarks/examples refer to whole experiment
+  grids by name: ``get_grid("fig1_grid", n_clients=40, horizon=1001)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Sequence
+
+import numpy as np
+
+from repro.core.energy import (
+    BinaryArrivals,
+    DeterministicArrivals,
+    UniformArrivals,
+)
+from repro.core.scheduling import make_scheduler
+
+#: Paper §V experimental profile: 4 client groups with periods (1, 5, 10, 20).
+PAPER_TAUS = (1, 5, 10, 20)
+
+ARRIVAL_KINDS = ("periodic", "binary", "uniform")
+
+
+def default_taus(n_clients: int) -> np.ndarray:
+    """Paper §V grouping generalized to N clients: client i ∈ group i mod 4."""
+    return np.array([PAPER_TAUS[i % len(PAPER_TAUS)] for i in range(n_clients)])
+
+
+def make_energy_process(kind: str, n_clients: int, horizon: int, taus=None):
+    """Paper §V profile: 4 groups, periods (1, 5, 10, 20) — generalized to
+    N clients by cycling the group periods (client i ∈ group i mod 4).
+
+    The same per-client period vector τ parameterizes all three arrival
+    families so a kind-sweep holds the mean energy rate fixed:
+    ``periodic`` arrivals every τ_i steps, ``binary`` Bern(1/τ_i), and
+    ``uniform`` one arrival per τ_i-window.
+    """
+    taus = default_taus(n_clients) if taus is None else np.asarray(taus)
+    if kind == "periodic":
+        return DeterministicArrivals.periodic(taus, horizon)
+    if kind == "binary":
+        return BinaryArrivals(1.0 / taus)
+    if kind == "uniform":
+        return UniformArrivals(taus)
+    raise ValueError(f"unknown arrival kind {kind!r}; have {ARRIVAL_KINDS}")
+
+
+@dataclasses.dataclass
+class Scenario:
+    """One experiment-grid cell: scheduler × arrival process × population.
+
+    ``scheduler`` / ``arrivals`` are registry names; ``taus`` is the
+    per-client period vector shared across arrival kinds (None → the
+    paper's cycling (1, 5, 10, 20) profile); ``scheduler_kwargs`` feeds
+    extra hyperparameters (e.g. battery capacity) to the scheduler
+    factory.
+    """
+
+    name: str
+    scheduler: str
+    arrivals: str
+    n_clients: int
+    horizon: int
+    taus: Sequence[int] | None = None
+    scheduler_kwargs: dict = dataclasses.field(default_factory=dict)
+
+    def build(self):
+        """Materialize the (scheduler, energy) pytree pair."""
+        scheduler = make_scheduler(self.scheduler, self.n_clients,
+                                   **self.scheduler_kwargs)
+        energy = make_energy_process(self.arrivals, self.n_clients,
+                                     self.horizon, taus=self.taus)
+        return scheduler, energy
+
+
+def scenario_grid(
+    schedulers: Iterable[str],
+    arrivals: Iterable[str],
+    n_clients: int,
+    horizon: int,
+    taus=None,
+    scheduler_kwargs: dict | None = None,
+) -> list[Scenario]:
+    """Cross product of scheduler × arrival-kind names as Scenario cells."""
+    return [
+        Scenario(name=f"{s}_{a}", scheduler=s, arrivals=a,
+                 n_clients=n_clients, horizon=horizon, taus=taus,
+                 scheduler_kwargs=dict(scheduler_kwargs or {}))
+        for s in schedulers
+        for a in arrivals
+    ]
+
+
+#: Paper Figure-1 methods, in presentation order.
+FIG1_SCHEDULERS = ("alg1", "benchmark1", "benchmark2", "oracle")
+
+_GRID_REGISTRY: dict[str, Callable[..., list[Scenario]]] = {}
+
+
+def register_grid(name: str):
+    """Decorator: register a named scenario-grid factory."""
+
+    def deco(fn):
+        _GRID_REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_grid(name: str, **kw) -> list[Scenario]:
+    try:
+        factory = _GRID_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scenario grid {name!r}; have {sorted(_GRID_REGISTRY)}"
+        ) from None
+    return factory(**kw)
+
+
+def grid_names() -> list[str]:
+    return sorted(_GRID_REGISTRY)
+
+
+@register_grid("fig1")
+def _fig1(n_clients: int = 40, horizon: int = 1001, taus=None) -> list[Scenario]:
+    """Paper Figure 1 verbatim: 4 methods on periodic (eq. 37) arrivals."""
+    return scenario_grid(FIG1_SCHEDULERS, ("periodic",), n_clients, horizon,
+                         taus=taus)
+
+
+@register_grid("fig1_grid")
+def _fig1_grid(n_clients: int = 40, horizon: int = 1001, taus=None) -> list[Scenario]:
+    """Scenario-diversity extension: 4 methods × all 3 arrival families."""
+    return scenario_grid(FIG1_SCHEDULERS, ARRIVAL_KINDS, n_clients, horizon,
+                         taus=taus)
+
+
+@register_grid("capacity_sweep")
+def _capacity_sweep(n_clients: int = 8, horizon: int = 2001,
+                    capacities: Sequence[float] = (1.0, 2.0, 4.0),
+                    taus=None) -> list[Scenario]:
+    """Battery-capacity sweep for the beyond-paper adaptive scheduler —
+    one leaf-stacked compiled computation for the whole sweep."""
+    return [
+        Scenario(name=f"battery_c{c:g}", scheduler="battery_adaptive",
+                 arrivals="binary", n_clients=n_clients, horizon=horizon,
+                 taus=taus, scheduler_kwargs={"capacity": float(c)})
+        for c in capacities
+    ]

@@ -21,6 +21,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 names this TPUCompilerParams; newer releases renamed it.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 _LOG_EPS = 1e-12
 
 
@@ -82,7 +86,7 @@ def gla_scan_kernel(a, k, v, q, *, chunk=64, interpret=False):
         out_specs=pl.BlockSpec((1, chunk, dv), lambda i, j: (i, j, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, s, dv), jnp.float32),
         scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(a, k, v, q)

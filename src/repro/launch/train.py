@@ -24,29 +24,12 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
-from repro.core.energy import (
-    BinaryArrivals,
-    DeterministicArrivals,
-    UniformArrivals,
-)
 from repro.core.scheduling import make_scheduler
 from repro.data import GlobalBatcher, make_lm_tokens
+from repro.experiments import make_energy_process
 from repro.launch.steps import make_train_step
 from repro.models import count_params, init_lm
 from repro.optim import adamw
-
-
-def make_energy_process(kind: str, n_clients: int, horizon: int):
-    """Paper §V profile: 4 groups, periods (1, 5, 10, 20) — generalized to
-    N clients by cycling the group periods (client i ∈ group i mod 4)."""
-    taus = np.array([(1, 5, 10, 20)[i % 4] for i in range(n_clients)])
-    if kind == "periodic":
-        return DeterministicArrivals.periodic(taus, horizon)
-    if kind == "binary":
-        return BinaryArrivals(1.0 / taus)
-    if kind == "uniform":
-        return UniformArrivals(taus)
-    raise ValueError(kind)
 
 
 def default_scheduler_for(arrivals: str, requested: str) -> str:
@@ -103,10 +86,12 @@ def main(argv=None):
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
 
     @jax.jit
-    def sched_step(sstate, estate, t, k):
+    def sched_step(sched, en, sstate, estate, t, k):
+        # Scheduler + energy process are pytrees: traced arguments, not
+        # closed-over Python objects.
         k1, k2 = jax.random.split(k)
-        estate, arr = energy.arrivals(estate, t, k1)
-        sstate, dec = scheduler.step(sstate, t, k2, arr)
+        estate, arr = en.arrivals(estate, t, k1)
+        sstate, dec = sched.step(sstate, t, k2, arr)
         return sstate, estate, dec.mask, dec.scale
 
     t_start = time.time()
@@ -127,7 +112,7 @@ def main(argv=None):
             batch["audio_feats"] = jnp.zeros(
                 (args.global_batch, cfg.enc_len, cfg.d_model), cfg.dtype)
         sched_state, energy_state, mask, scale = sched_step(
-            sched_state, energy_state, jnp.asarray(step), ks)
+            scheduler, energy, sched_state, energy_state, jnp.asarray(step), ks)
         state, metrics = train_step(state, batch, mask, scale)
         losses.append(float(metrics["loss"]))
         if step % args.log_every == 0 or step == args.steps - 1:

@@ -90,3 +90,40 @@ def test_past_horizon_no_arrivals():
     det = DeterministicArrivals.periodic([2], horizon=10)
     _, arr = det.arrivals((), jnp.asarray(50), None)
     assert float(arr.energy[0]) == 0.0 and float(arr.gap[0]) == 0.0
+
+
+def test_binary_rejects_nonpositive_beta():
+    """Regression: β_i = 0 used to silently produce gap = 1/β = inf."""
+    with pytest.raises(ValueError, match="0, 1"):
+        BinaryArrivals([0.5, 0.0])
+    with pytest.raises(ValueError):
+        BinaryArrivals([-0.1])
+    with pytest.raises(ValueError):
+        BinaryArrivals([1.5])
+    with pytest.raises(ValueError):
+        BinaryArrivals(np.zeros((3,)))
+    with pytest.raises(ValueError):  # NaN must not slip through the range check
+        BinaryArrivals([0.5, np.nan])
+
+
+def test_uniform_rejects_nonpositive_period():
+    with pytest.raises(ValueError):
+        UniformArrivals([4, 0])
+    with pytest.raises(ValueError):
+        UniformArrivals([4.0, np.nan])
+
+
+def test_gap_table_vectorized_matches_reference():
+    """The vectorized gap-table builder vs the obvious double loop."""
+    rng = np.random.default_rng(0)
+    sched = (rng.random((7, 50)) < 0.2).astype(np.float32)
+    sched[3] = 0.0  # a client with no arrivals at all
+    det = DeterministicArrivals(sched)
+
+    ref = np.zeros_like(sched)
+    for i in range(sched.shape[0]):
+        ts = np.flatnonzero(sched[i])
+        for k, t0 in enumerate(ts):
+            t1 = ts[k + 1] if k + 1 < len(ts) else sched.shape[1]
+            ref[i, t0:t1] = t1 - t0
+    np.testing.assert_array_equal(np.asarray(det.gaps), ref)

@@ -1,0 +1,318 @@
+"""Scenario engine tests: pytree contracts, grid ≡ per-cell equivalence,
+and the one-trace-per-group compile-count guarantee."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_quadratic, make_scheduler, scheduler_names
+from repro.core.energy import (
+    BinaryArrivals,
+    DeterministicArrivals,
+    UniformArrivals,
+    expected_participation,
+)
+from repro.core.trainer import ClientSimulator
+from repro.experiments import (
+    Scenario,
+    get_grid,
+    grid_names,
+    make_energy_process,
+    run_grid,
+    run_grid_sequential,
+)
+from repro.experiments import engine
+from repro.optim import sgd
+
+
+def all_processes():
+    return [
+        DeterministicArrivals.periodic([1, 4, 8], horizon=32),
+        BinaryArrivals([0.2, 0.5, 1.0]),
+        UniformArrivals([2, 5, 9]),
+    ]
+
+
+def all_schedulers():
+    return [make_scheduler(name, 3) for name in scheduler_names()]
+
+
+# ------------------------------------------------------------ pytree laws
+
+@pytest.mark.parametrize("obj", all_processes() + all_schedulers(),
+                         ids=lambda o: type(o).__name__)
+def test_components_roundtrip_tree_flatten(obj):
+    leaves, treedef = jax.tree_util.tree_flatten(obj)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert type(rebuilt) is type(obj)
+    assert jax.tree_util.tree_structure(rebuilt) == treedef
+    for a, b in zip(leaves, jax.tree_util.tree_leaves(rebuilt)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("process", all_processes(),
+                         ids=lambda o: type(o).__name__)
+def test_process_passes_through_jit(process):
+    """An energy process is an ordinary jit argument (no static closure)."""
+
+    @jax.jit
+    def first_arrivals(proc, key):
+        state = proc.init(key)
+        _, arr = proc.arrivals(state, jnp.asarray(0), key)
+        return arr.energy, arr.gap, proc.expected_participation()
+
+    energy, gap, part = first_arrivals(process, jax.random.PRNGKey(0))
+    assert energy.shape == gap.shape == (3,)
+    np.testing.assert_allclose(part, expected_participation(process))
+
+
+@pytest.mark.parametrize("scheduler", all_schedulers(),
+                         ids=lambda o: type(o).__name__)
+def test_scheduler_passes_through_jit(scheduler):
+    proc = BinaryArrivals([0.5, 0.5, 0.5])
+
+    @jax.jit
+    def one_step(sch, en, key):
+        sstate, estate = sch.init(key), en.init(key)
+        estate, arr = en.arrivals(estate, jnp.asarray(0), key)
+        sstate, dec = sch.step(sstate, jnp.asarray(0), key, arr)
+        return dec.mask, dec.scale
+
+    mask, scale = one_step(scheduler, proc, jax.random.PRNGKey(1))
+    assert mask.shape == scale.shape == (3,)
+
+
+def test_no_isinstance_dispatch_for_unknown_process():
+    class Custom:
+        def expected_participation(self):
+            return jnp.asarray([0.25])
+
+    np.testing.assert_allclose(expected_participation(Custom()), [0.25])
+    with pytest.raises(TypeError, match="protocol"):
+        expected_participation(object())
+
+
+def test_stacked_expected_participation_batches():
+    """expected_participation() follows the trailing-axis convention, so
+    a scenario-stacked process yields an (S, N) participation matrix."""
+    procs = [DeterministicArrivals.periodic([1, 2, 4], horizon=8),
+             DeterministicArrivals.periodic([2, 4, 8], horizon=8)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *procs)
+    part = stacked.expected_participation()
+    assert part.shape == (2, 3)
+    np.testing.assert_allclose(
+        part, np.stack([p.expected_participation() for p in procs]))
+
+
+def test_scheduler_registry_rejects_unknown_kwargs():
+    """Regression: extra kwargs used to be silently swallowed for every
+    scheduler but battery_adaptive — a Scenario with typo'd (or
+    identity-changing, e.g. scaled=False) scheduler_kwargs would run a
+    different algorithm than requested."""
+    with pytest.raises(TypeError, match="alg2.*scaled"):
+        make_scheduler("alg2", 3, scaled=False)
+    with pytest.raises(TypeError, match="capcity|capacity"):
+        make_scheduler("oracle", 3, capcity=2.0)
+    # battery_adaptive legitimately takes hyperparameters …
+    assert float(make_scheduler("battery_adaptive", 3, capacity=4.0).capacity) == 4.0
+    # … but still rejects typos via the dataclass constructor.
+    with pytest.raises(TypeError):
+        make_scheduler("battery_adaptive", 3, capcity=4.0)
+
+
+def test_battery_capacity_sweep_stacks_leafwise():
+    """Array hyperparameters are leaves: a capacity sweep is one stacked
+    scheduler pytree, vmappable in a single computation."""
+    scheds = [make_scheduler("battery_adaptive", 3, capacity=c)
+              for c in (1.0, 2.0, 4.0)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *scheds)
+    np.testing.assert_allclose(np.asarray(stacked.capacity), [1.0, 2.0, 4.0])
+
+    proc = BinaryArrivals([0.5, 0.5, 0.5])
+
+    def mean_mask(sch):
+        def body(carry, t):
+            sstate, estate, key = carry
+            key, k1, k2 = jax.random.split(key, 3)
+            estate, arr = proc.arrivals(estate, t, k1)
+            sstate, dec = sch.step(sstate, t, k2, arr)
+            return (sstate, estate, key), dec.mask
+
+        key = jax.random.PRNGKey(0)
+        init = (sch.init(key), proc.init(key), key)
+        _, masks = jax.lax.scan(body, init, jnp.arange(200))
+        return masks.mean()
+
+    rates = jax.vmap(mean_mask)(stacked)
+    # Energy conservation: participation rate ≈ arrival rate ∀ capacity.
+    np.testing.assert_allclose(np.asarray(rates), 0.5, atol=0.1)
+
+
+# ------------------------------------------------------- scenario registry
+
+def test_registry_grids():
+    assert {"fig1", "fig1_grid", "capacity_sweep"} <= set(grid_names())
+    scens = get_grid("fig1_grid", n_clients=4, horizon=11)
+    assert len(scens) == 12
+    names = [s.name for s in scens]
+    assert len(set(names)) == len(names)
+    for sc in scens:
+        scheduler, process = sc.build()
+        assert scheduler.n_clients == 4
+        assert process.n_clients == 4
+
+
+def test_make_energy_process_kinds():
+    det = make_energy_process("periodic", 4, 21)
+    # Arrivals at multiples of τ inside [0, 21): 21, 5, 3, 2 of them.
+    np.testing.assert_allclose(expected_participation(det),
+                               [1.0, 5 / 21, 3 / 21, 2 / 21])
+    binary = make_energy_process("binary", 4, 21)
+    np.testing.assert_allclose(expected_participation(binary),
+                               [1.0, 0.2, 0.1, 0.05])
+    uniform = make_energy_process("uniform", 4, 21)
+    np.testing.assert_allclose(expected_participation(uniform),
+                               [1.0, 0.2, 0.1, 0.05])
+    with pytest.raises(ValueError):
+        make_energy_process("fluvial", 4, 21)
+
+
+# ------------------------------------------------------------ grid engine
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_quadratic(jax.random.PRNGKey(2), n_clients=6, dim=5,
+                          hetero=1.0)
+
+
+def _grid_kwargs(problem, steps):
+    return dict(
+        grads_fn=lambda p, k, t: problem.all_grads(p, key=k, noise=0.05),
+        p=problem.p, optimizer=sgd(0.02),
+        params0=jnp.full((5,), 4.0), num_steps=steps,
+        loss_fn=problem.suboptimality)
+
+
+def test_run_grid_matches_single_seed_runs(problem):
+    """run_grid over seeds ≡ a loop of single-seed ClientSimulator.run
+    calls given the same per-seed PRNG keys (float32 tolerance)."""
+    steps, seeds = 150, [0, 1, 2, 3]
+    scenarios = [
+        Scenario("alg1_periodic", "alg1", "periodic", 6, steps + 1),
+        Scenario("alg2_binary", "alg2", "binary", 6, steps + 1),
+        Scenario("b2_uniform", "benchmark2", "uniform", 6, steps + 1),
+    ]
+    kw = _grid_kwargs(problem, steps)
+    grid = run_grid(scenarios, seeds=seeds, **kw)
+
+    sim = ClientSimulator(grads_fn=kw["grads_fn"], p=kw["p"],
+                          optimizer=kw["optimizer"], loss_fn=kw["loss_fn"])
+    for sc in scenarios:
+        scheduler, energy = sc.build()
+        for r, seed in enumerate(seeds):
+            w, hist = sim.run(jax.random.PRNGKey(seed), kw["params0"], steps,
+                              scheduler=scheduler, energy=energy)
+            cell = grid[sc.name]
+            np.testing.assert_allclose(
+                np.asarray(cell.params[r]), np.asarray(w),
+                rtol=2e-4, atol=1e-5)
+            np.testing.assert_allclose(
+                np.asarray(cell.history.loss[r]), np.asarray(hist.loss),
+                rtol=2e-4, atol=1e-5)
+            np.testing.assert_array_equal(
+                np.asarray(cell.history.participation[r]),
+                np.asarray(hist.participation))
+
+
+def test_run_grid_compiles_once_per_group(problem):
+    """4 schedulers × 2 arrival kinds × 6 seeds = 48 cells must trace the
+    batched runner exactly once per (scheduler, energy) structure."""
+    steps = 40
+    scenarios = [
+        Scenario(f"{s}_{a}", s, a, 6, steps + 1)
+        for s in ("alg1", "benchmark1", "benchmark2", "oracle")
+        for a in ("periodic", "binary")
+    ]
+    before = engine._run_group._cache_size()
+    run_grid(scenarios, seeds=6, **_grid_kwargs(problem, steps))
+    after = engine._run_group._cache_size()
+    assert after - before == len(scenarios)  # == #groups, NOT #cells (×6 seeds)
+
+
+def test_run_grid_groups_share_one_trace(problem):
+    """Scenarios with identical component structure share a single trace:
+    two same-kind cells differing only in hyperparameter *values*."""
+    steps = 40
+    scenarios = [
+        Scenario("fast", "alg2", "binary", 6, steps + 1, taus=[1, 2, 2, 4, 4, 8]),
+        Scenario("slow", "alg2", "binary", 6, steps + 1, taus=[2, 4, 4, 8, 8, 16]),
+    ]
+    before = engine._run_group._cache_size()
+    res = run_grid(scenarios, seeds=3, **_grid_kwargs(problem, steps))
+    after = engine._run_group._cache_size()
+    assert after - before == 1
+    assert set(res) == {"fast", "slow"}
+    # Different β values really flowed through the shared trace.
+    fast = np.asarray(res["fast"].history.participation).mean()
+    slow = np.asarray(res["slow"].history.participation).mean()
+    assert fast > slow
+
+
+def test_run_grid_matches_sequential_baseline(problem):
+    steps = 100
+    scenarios = get_grid("fig1", n_clients=6, horizon=steps + 1)
+    kw = _grid_kwargs(problem, steps)
+    batched = run_grid(scenarios, seeds=3, **kw)
+    sequential = run_grid_sequential(scenarios, seeds=3, **kw)
+    assert set(batched) == set(sequential)
+    for name in batched:
+        np.testing.assert_allclose(
+            np.asarray(batched[name].history.loss),
+            np.asarray(sequential[name].history.loss),
+            rtol=2e-4, atol=1e-5)
+
+
+def test_run_grid_eval_chunking(problem):
+    """eval_fn runs inside the compiled loop every eval_every steps and
+    the chunked history is identical to the unchunked one."""
+    steps = 60
+    scenarios = [Scenario("alg1_periodic", "alg1", "periodic", 6, steps + 1)]
+    kw = _grid_kwargs(problem, steps)
+    with_eval = run_grid(scenarios, seeds=2, eval_fn=problem.suboptimality,
+                         eval_every=20, **kw)
+    plain = run_grid(scenarios, seeds=2, **kw)
+    cell = with_eval["alg1_periodic"]
+    assert cell.evals.shape == (2, 3)  # (seeds, num_steps // eval_every)
+    np.testing.assert_allclose(
+        np.asarray(cell.history.loss), np.asarray(plain["alg1_periodic"].history.loss),
+        rtol=2e-4, atol=1e-5)
+    # Eval at chunk k == logged loss at step (k+1)*eval_every − 1 (both
+    # computed from the post-update params of that step).
+    np.testing.assert_allclose(
+        np.asarray(cell.evals),
+        np.asarray(cell.history.loss[:, 19::20]), rtol=1e-5, atol=1e-6)
+
+
+def test_run_grid_reuses_prebuilt_sim_trace(problem):
+    """A prebuilt sim= makes repeated identical grids hit the jit cache
+    (fresh per-call simulators would re-trace every group)."""
+    steps = 30
+    scenarios = [Scenario("alg1_periodic", "alg1", "periodic", 6, steps + 1)]
+    kw = _grid_kwargs(problem, steps)
+    sim = ClientSimulator(grads_fn=kw["grads_fn"], p=kw["p"],
+                          optimizer=kw["optimizer"], loss_fn=kw["loss_fn"])
+    run_grid(scenarios, seeds=2, sim=sim, params0=kw["params0"],
+             num_steps=steps)
+    before = engine._run_group._cache_size()
+    out = run_grid(scenarios, seeds=2, sim=sim, params0=kw["params0"],
+                   num_steps=steps)
+    assert engine._run_group._cache_size() == before  # cache hit, no re-trace
+    assert "alg1_periodic" in out
+
+
+def test_run_grid_rejects_duplicate_names(problem):
+    steps = 10
+    scens = [Scenario("dup", "alg1", "periodic", 6, steps + 1)] * 2
+    with pytest.raises(ValueError, match="unique"):
+        run_grid(scens, seeds=2, **_grid_kwargs(problem, steps))

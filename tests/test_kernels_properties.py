@@ -1,0 +1,47 @@
+"""Property-based kernel tests (randomized shapes via hypothesis).
+
+The deterministic shape/dtype sweeps live in ``test_kernels.py`` and run
+under plain pytest; this module is skipped as a whole when ``hypothesis``
+is not installed in the container.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.kernels.aggregate import masked_scaled_aggregate_ref  # noqa: E402
+from repro.kernels.aggregate.aggregate import (  # noqa: E402
+    masked_scaled_aggregate_kernel,
+)
+from repro.kernels.ssm_scan.ops import gla_scan  # noqa: E402
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 33), p=st.integers(1, 300),
+       seed=st.integers(0, 2**30))
+def test_aggregate_property(n, p, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    g = jax.random.normal(k1, (n, p))
+    w = jax.random.normal(k2, (n,))
+    out = masked_scaled_aggregate_kernel(g, w, block_p=64, interpret=True)
+    np.testing.assert_allclose(out, masked_scaled_aggregate_ref(g, w),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(2, 40), chunk=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 2**30))
+def test_gla_scan_property_chunk_invariance(s, chunk, seed):
+    """Output must be independent of the chunk size (exact algorithm)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    b, h, dk, dv = 1, 2, 4, 4
+    a = jax.random.uniform(ks[0], (b, s, h), minval=0.5, maxval=1.0)
+    k = jax.random.normal(ks[1], (b, s, h, dk))
+    v = jax.random.normal(ks[2], (b, s, h, dv))
+    q = jax.random.normal(ks[3], (b, s, h, dk))
+    y1 = gla_scan(a, k, v, q, chunk=chunk)
+    y2 = gla_scan(a, k, v, q, chunk=s)  # single chunk
+    np.testing.assert_allclose(y1, y2, rtol=5e-4, atol=5e-4)

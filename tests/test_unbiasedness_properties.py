@@ -1,0 +1,67 @@
+"""Lemma 1 (unbiasedness) — hypothesis property tests over random
+schedules/periods. The deterministic Monte-Carlo checks live in
+``test_unbiasedness.py``; this module is skipped as a whole when
+``hypothesis`` is not installed in the container.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.energy import DeterministicArrivals  # noqa: E402
+from repro.core.scheduling import make_scheduler  # noqa: E402
+
+from test_unbiasedness import mean_weights  # noqa: E402
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    taus=st.lists(st.integers(1, 12), min_size=2, max_size=5),
+    seed=st.integers(0, 2**30),
+)
+def test_alg1_unbiased_random_periods(taus, seed):
+    n = len(taus)
+    horizon = int(np.lcm.reduce(taus)) * 60
+    horizon = min(max(horizon, 600), 6000)
+    p = np.random.default_rng(seed).dirichlet([2.0] * n)
+    det = DeterministicArrivals.periodic(taus, horizon=horizon)
+    w = mean_weights(make_scheduler("alg1", n), det, p, horizon, seed=seed)
+    np.testing.assert_allclose(w, p, rtol=0.35, atol=5e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    schedule=st.lists(
+        st.lists(st.booleans(), min_size=24, max_size=24),
+        min_size=1, max_size=4),
+    seed=st.integers(0, 2**30),
+)
+def test_alg1_unbiased_arbitrary_schedules(schedule, seed):
+    """Arbitrary deterministic arrival patterns (not just periodic): the
+    time-summed weight over the run must equal p_i × (#covered steps),
+    because Alg-1 books exactly one appointment per inter-arrival interval
+    with scale = interval length.
+
+    Steps before a client's first arrival are uncovered by construction —
+    the expectation identity holds per covered interval [I_i, Ī_i)."""
+    sched = np.asarray(schedule, dtype=np.float32)
+    n, horizon = sched.shape
+    if sched.sum() == 0:
+        return
+    p = np.full((n,), 1.0 / n, dtype=np.float32)
+    det = DeterministicArrivals(sched)
+    reps = 40
+    acc = np.zeros(n)
+    for r in range(reps):
+        w = mean_weights(make_scheduler("alg1", n), det, p, horizon,
+                         seed=seed + r)
+        acc += w * horizon
+    acc /= reps
+    covered = np.zeros(n)
+    for i in range(n):
+        ts = np.flatnonzero(sched[i])
+        if len(ts):
+            covered[i] = horizon - ts[0]
+    np.testing.assert_allclose(acc, p * covered, rtol=0.25, atol=0.15)
