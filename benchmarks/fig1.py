@@ -6,10 +6,16 @@ reduced-scale CNN image task through :func:`repro.experiments.run_grid`
 the *identical* cells through the sequential per-cell baseline
 (:func:`run_grid_sequential`, one traced scan per cell — the
 pre-scenario-engine execution model) and reports both wall-clocks.
+With ≥ 2 devices (``benchmarks/run.py`` forces 8 CPU host devices) the
+same grid also runs device-sharded (``run_grid(..., mesh=...)``,
+DESIGN.md §5); cold (compile-inclusive) and warm (steady-state,
+jit-cache-hit) wall-clocks are reported for the batched-vs-sharded
+comparison, since large-grid sweeps amortize compilation.
 
 Emits ``name,us_per_call,derived`` CSV rows: per-cell mean±std final
-test accuracy across seeds, the two grid wall-clocks, the batched
-speedup, and the paper's Fig-1 ordering check (periodic arrivals).
+test accuracy across seeds, the grid wall-clocks, batched and sharded
+speedups, and the paper's full Fig-1 ordering check
+alg1 ≥ benchmark1 ≥ benchmark2 on periodic arrivals.
 ``examples/paper_cifar.py --full`` remains the paper-exact variant.
 """
 
@@ -48,6 +54,61 @@ def _setup(n_clients: int, hw: int, batch: int, seed: int = 0):
     return grads_fn, eval_fn, batcher.p, params0
 
 
+def _quadratic_grid_rows(iters: int, seeds: int) -> list[str]:
+    """Sharded-vs-batched warm wall-clocks on the paper's quadratic cells.
+
+    Same 4-scheduler × 3-arrival × ``seeds`` grid shape as the CNN run,
+    but each cell is the Theorem-1 quadratic problem: per-step compute is
+    tiny, so single-device execution is dispatch-bound and the flattened
+    cell axis parallelizes across devices.
+    """
+    from repro.core import ClientSimulator, make_quadratic
+    from repro.experiments import (
+        ARRIVAL_KINDS,
+        FIG1_SCHEDULERS,
+        make_cell_mesh,
+        run_grid,
+        scenario_grid,
+    )
+    from repro.optim import sgd
+
+    n_clients, dim = 8, 64
+    problem = make_quadratic(jax.random.PRNGKey(2), n_clients=n_clients,
+                             dim=dim, hetero=1.0)
+    sim = ClientSimulator(
+        grads_fn=lambda p, k, t: problem.all_grads(p, key=k, noise=0.05),
+        p=problem.p, optimizer=sgd(0.02), loss_fn=problem.suboptimality)
+    scens = scenario_grid(FIG1_SCHEDULERS, ARRIVAL_KINDS, n_clients,
+                          iters + 1)
+    kw = dict(sim=sim, params0=jnp.full((dim,), 4.0), num_steps=iters,
+              seeds=seeds)
+    mesh = make_cell_mesh()
+    n_cells = len(scens) * seeds
+
+    def timed(**extra):
+        t0 = time.time()
+        res = run_grid(scens, **kw, **extra)
+        jax.block_until_ready([c.params for c in res.values()])
+        return time.time() - t0
+
+    timed()                      # compile batched
+    timed(mesh=mesh)             # compile sharded
+    dt_b = timed()
+    dt_s = timed(mesh=mesh)
+    speed = dt_b / dt_s
+    n_dev = jax.device_count()
+    print(f"quadratic grid ({n_cells} cells x {iters} steps, warm): "
+          f"batched {dt_b:.2f}s vs sharded {dt_s:.2f}s over {n_dev} devices "
+          f"-> {speed:.2f}x", file=sys.stderr)
+    return [
+        f"quadgrid_batched_warm,{dt_b * 1e6:.0f},cells={n_cells};iters={iters}",
+        f"quadgrid_sharded_warm,{dt_s * 1e6:.0f},"
+        f"cells={n_cells};iters={iters};devices={n_dev}",
+        f"quadgrid_sharded_speedup,{dt_s * 1e6:.0f},"
+        f"speedup={speed:.2f};devices={n_dev};sharded_faster={dt_s < dt_b}",
+    ]
+
+
 def run(iters: int = 100, seeds: int = 8, n_clients: int = 8) -> list[str]:
     from repro.core import ClientSimulator
     from repro.experiments import (
@@ -81,6 +142,55 @@ def run(iters: int = 100, seeds: int = 8, n_clients: int = 8) -> list[str]:
     jax.block_until_ready([c.evals for c in seq_results.values()])
     dt_seq = time.time() - t0
 
+    # Device-sharded execution: same cells, flattened cell axis across
+    # all devices. Warm timings re-run with the same sim (jit-cache hit)
+    # so the batched-vs-sharded comparison reflects steady-state
+    # large-grid throughput rather than compile time.
+    n_dev = jax.device_count()
+    sharded_rows = []
+    if n_dev >= 2:
+        from repro.experiments import make_cell_mesh
+        mesh = make_cell_mesh()
+        t0 = time.time()
+        sh_results = run_grid(scenarios, mesh=mesh, **kw)
+        jax.block_until_ready([c.evals for c in sh_results.values()])
+        dt_sharded = time.time() - t0
+        t0 = time.time()
+        sh_warm = run_grid(scenarios, mesh=mesh, **kw)
+        jax.block_until_ready([c.evals for c in sh_warm.values()])
+        dt_sharded_warm = time.time() - t0
+        t0 = time.time()
+        warm = run_grid(scenarios, **kw)
+        jax.block_until_ready([c.evals for c in warm.values()])
+        dt_batched_warm = time.time() - t0
+        sh_speed = dt_batched_warm / dt_sharded_warm
+        print(f"fig1 grid sharded over {n_dev} devices: "
+              f"cold {dt_sharded:.1f}s, warm {dt_sharded_warm:.1f}s vs "
+              f"batched warm {dt_batched_warm:.1f}s -> {sh_speed:.1f}x",
+              file=sys.stderr)
+        sharded_rows = [
+            f"fig1_grid_sharded,{dt_sharded * 1e6:.0f},"
+            f"cells={n_cells};iters={iters};devices={n_dev}",
+            f"fig1_grid_sharded_warm,{dt_sharded_warm * 1e6:.0f},"
+            f"cells={n_cells};iters={iters};devices={n_dev}",
+            f"fig1_grid_batched_warm,{dt_batched_warm * 1e6:.0f},"
+            f"cells={n_cells};iters={iters}",
+            f"fig1_grid_sharded_speedup,{dt_sharded_warm * 1e6:.0f},"
+            f"speedup={sh_speed:.2f};devices={n_dev};"
+            f"sharded_faster={dt_sharded_warm < dt_batched_warm}",
+        ]
+        # The CNN cells above are compute-bound: on a host whose cores
+        # the batched path already saturates (this CI container has 2),
+        # cell sharding cannot beat intra-op parallelism. The paper's
+        # Theorem-1 quadratic cells are the dispatch-bound regime —
+        # tiny ops, long scans — where cell sharding pays whenever
+        # devices have real parallelism and the cell count divides the
+        # device count (padding lanes do real work; see DESIGN.md §5),
+        # so the trajectory tracks that 96-cell grid as its own series.
+        sharded_rows.extend(_quadratic_grid_rows(iters=400, seeds=seeds))
+    else:
+        print("fig1 grid sharded: skipped (single device)", file=sys.stderr)
+
     # Final test accuracy per seed = the single end-of-run eval.
     acc = grid_summary(results, reducer=lambda c: c.evals[:, -1])
     rows = []
@@ -103,11 +213,26 @@ def run(iters: int = 100, seeds: int = 8, n_clients: int = 8) -> list[str]:
                 f"cells={n_cells};iters={iters}")
     rows.append(f"fig1_grid_speedup,{dt_batched * 1e6:.0f},"
                 f"speedup={speedup:.2f};batched_faster={dt_batched < dt_seq}")
+    rows.extend(sharded_rows)
 
-    # Paper ordering on the paper's (periodic) arrivals, seed-averaged.
+    # Paper ordering on the paper's (periodic) arrivals, seed-averaged:
+    # the full chain alg1 ≥ benchmark1 ≥ benchmark2 (Fig. 1), each link
+    # checked with a small tolerance so seed noise on a tie is not a
+    # failure, and the failed link (if any) named in the output. The
+    # comparisons are written so NaN (diverged run) fails the link, and
+    # non-positive accuracies are flagged as degenerate outright.
     a = {m: acc[f"{m}_periodic"]["mean"] for m in FIG1_SCHEDULERS}
-    ok = a["alg1"] > a["benchmark1"] > 0 and a["alg1"] > a["benchmark2"]
-    rows.append(f"fig1_ordering,{dt_batched * 1e6:.0f},alg1>benchmarks={ok}")
+    tol = 0.01
+    links = (("alg1", "benchmark1"), ("benchmark1", "benchmark2"))
+    failed = [f"{hi}<{lo}" for hi, lo in links
+              if not (a[hi] >= a[lo] - tol)]
+    if not all(a[m] > 0 for m in ("alg1", "benchmark1", "benchmark2")):
+        failed.append("degenerate_accuracy")
+    ok = not failed
+    rows.append(f"fig1_ordering,{dt_batched * 1e6:.0f},"
+                f"ordering_ok={ok};failed_links={'|'.join(failed) or 'none'};"
+                f"alg1={a['alg1']:.3f};benchmark1={a['benchmark1']:.3f};"
+                f"benchmark2={a['benchmark2']:.3f}")
     # Release the compiled grid + the dataset-capturing closures it pins
     # (the harness process may go on to run other suites).
     clear_cache()

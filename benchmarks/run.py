@@ -60,6 +60,21 @@ def main() -> None:
                     help="also write structured results to this JSON path")
     args = ap.parse_args()
 
+    suite_names = ("fig1", "theory", "kernels_bench", "roofline_table")
+    selected = [s.strip() for s in args.only.split(",") if s.strip()] \
+        or list(suite_names)
+    unknown = [s for s in selected if s not in suite_names]
+    if unknown:
+        raise SystemExit(f"unknown suites {unknown}; have {list(suite_names)}")
+
+    if "fig1" in selected:
+        # 8 placeholder CPU devices so fig1's sharded grid series runs.
+        # Must happen before the suite imports pull in jax, and only
+        # when fig1 is requested. The resulting device count is recorded
+        # in the JSON so BENCH_* series taken under different backends
+        # are never silently compared.
+        from repro._env import ensure_host_device_count
+        ensure_host_device_count(8)
     sys.path.insert(0, ".")  # examples/ imports
     from benchmarks import fig1, kernels_bench, roofline_table, theory
 
@@ -71,8 +86,7 @@ def main() -> None:
         "kernels_bench": kernels_bench.run,
         "roofline_table": roofline_table.run,
     }
-    selected = [s.strip() for s in args.only.split(",") if s.strip()] \
-        or list(suites)
+    assert set(suites) == set(suite_names)  # one source of suite names
 
     print("name,us_per_call,derived")
     records, failed = [], []
@@ -86,8 +100,11 @@ def main() -> None:
             failed.append(name)
 
     if args.json:
+        import jax
+
         with open(args.json, "w") as f:
             json.dump({"suites": selected, "fast": args.fast,
+                       "device_count": jax.device_count(),
                        "failed": failed, "results": records}, f, indent=2)
             f.write("\n")
         print(f"wrote {args.json}", file=sys.stderr)

@@ -1,0 +1,32 @@
+"""Pre-jax-import environment helpers.
+
+This module must stay free of jax (and jax-importing repro) imports:
+its callers run *before* the first jax import, which is the only moment
+XLA client flags can still take effect.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+
+def ensure_host_device_count(n: int = 8) -> bool:
+    """Merge ``--xla_force_host_platform_device_count=n`` into XLA_FLAGS.
+
+    Gives the CPU backend ``n`` placeholder devices so the sharded grid
+    path (DESIGN.md §5) can run on hosts without accelerators. Existing
+    ``XLA_FLAGS`` content is preserved; an explicit device-count flag
+    from the environment wins; real TPU/GPU backends ignore the flag.
+
+    Returns True if the flag was added, False if it was too late (jax
+    already imported) or a device-count flag was already present.
+    """
+    if "jax" in sys.modules:
+        return False
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return False
+    os.environ["XLA_FLAGS"] = \
+        f"{flags} --xla_force_host_platform_device_count={n}".strip()
+    return True

@@ -25,10 +25,19 @@ from repro.core.scheduling import (
     scheduler_names,
 )
 from repro.core.aggregation import (
+    RavelSpec,
     aggregate_client_grads,
+    aggregate_client_grads_flat,
+    aggregate_client_grads_kernel,
+    aggregate_client_grads_kernel_per_leaf,
     client_weights,
     per_example_coefficients,
+    ravel_pytree,
+    ravel_spec,
+    ravel_stacked,
+    reduce_flat,
     server_update,
+    unravel_pytree,
 )
 from repro.core.convergence import (
     QuadraticProblem,
@@ -48,8 +57,11 @@ __all__ = [
     "Decision",
     "EHAppointmentScheduler", "WaitForAllScheduler", "make_scheduler",
     "scheduler_names",
-    "aggregate_client_grads", "client_weights", "per_example_coefficients",
-    "server_update",
+    "RavelSpec", "aggregate_client_grads", "aggregate_client_grads_flat",
+    "aggregate_client_grads_kernel", "aggregate_client_grads_kernel_per_leaf",
+    "client_weights",
+    "per_example_coefficients", "ravel_pytree", "ravel_spec", "ravel_stacked",
+    "reduce_flat", "server_update", "unravel_pytree",
     "QuadraticProblem", "biased_fixed_point", "error_floor", "make_quadratic",
     "max_step_size", "theorem1_bound", "variance_constant",
     "ClientSimulator", "build_energy_train_step",

@@ -1,27 +1,41 @@
-"""Server-side aggregation (paper eq. 11 / 12), in three flavours.
+"""Server-side aggregation (paper eq. 11 / 12) — flat single-pass hot path.
 
 The update the paper's server performs is
 
     w ← w − η · Σ_{i∈S_t} p_i · scale_i^t · g_i(w, ξ_i)
 
 which we express as a *weighted sum over the client axis* with weights
-``ω_i = p_i · mask_i · scale_i``. Three execution paths, all algebraically
+``ω_i = p_i · mask_i · scale_i``. Execution paths, all algebraically
 identical:
 
-1. ``aggregate_client_grads`` — client-stacked gradients (leading axis N),
-   pure jnp. Used by the paper-scale simulator (vmap over clients).
-2. ``aggregate_client_grads_kernel`` — same contract, but the flat
-   parameter vector is reduced by the Pallas ``masked scaled aggregate``
-   kernel (``repro.kernels.aggregate``) — the TPU hot path for the server.
+1. ``aggregate_client_grads`` — per-leaf weighted sum over the leading
+   client axis, pure jnp. The *reference* path: no raveling, preserves
+   every leaf dtype independently. Property tests compare everything
+   else against it.
+2. ``aggregate_client_grads_flat`` / ``aggregate_client_grads_kernel``
+   — the hot path (DESIGN.md §5): the whole gradient pytree is raveled
+   into **one** ``(N, P)`` buffer (a cached :class:`RavelSpec` records
+   treedef/shapes/offsets), reduced by **one** tiled Pallas kernel or
+   jnp matvec per step — instead of one kernel launch (each with its
+   own lane padding) per parameter leaf — and unraveled by offset
+   slicing. Mixed-dtype pytrees fall back to the per-leaf path.
 3. ``per_example_coefficients`` — the *SPMD path* for framework-scale
    training: instead of materializing N per-client gradients, each example
    in the global batch carries the coefficient of its owning client, and
    the ordinary gradient of the weighted loss equals the paper's update.
    This is what the pjit train step uses; it adds **zero** collective
    traffic over plain data-parallel SGD.
+
+The raveler is shared infrastructure: :class:`repro.core.trainer.
+ClientSimulator` keeps its whole scan carry (params + optimizer state)
+in the flat space, so the per-step loop never round-trips the pytree
+leaf-by-leaf.
 """
 
 from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -34,8 +48,94 @@ def client_weights(p: jax.Array, decision: Decision) -> jax.Array:
     return p * decision.mask * decision.scale
 
 
+# --------------------------------------------------------------- raveler
+
+class RavelSpec(NamedTuple):
+    """Static flat-space layout of a pytree: where each leaf lives in P.
+
+    ``shapes`` exclude any leading batch axes (``lead_axes`` at build
+    time), so one spec describes both the stacked ``(N, P)`` gradient
+    buffer and the unbatched ``(P,)`` parameter vector of the same tree.
+    """
+
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    offsets: tuple[int, ...]
+    sizes: tuple[int, ...]
+    dtype: Any
+    total: int
+
+
+_SPEC_CACHE: dict = {}
+
+
+def ravel_spec(tree, *, lead_axes: int = 0) -> RavelSpec:
+    """Cached flat-space spec for ``tree``.
+
+    ``lead_axes`` axes are stripped from every leaf shape (1 for
+    client-stacked gradients). Raises ``ValueError`` on mixed leaf
+    dtypes — the flat buffer is a single concatenation, so callers fall
+    back to the per-leaf path (see :func:`aggregate_client_grads_flat`).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        raise ValueError("cannot ravel an empty pytree")
+    shapes = tuple(tuple(l.shape[lead_axes:]) for l in leaves)
+    dtypes = {jnp.dtype(l.dtype) for l in leaves}
+    if len(dtypes) != 1:
+        raise ValueError(
+            f"flat path needs a single leaf dtype, got {sorted(map(str, dtypes))}")
+    dtype = dtypes.pop()
+    key = (treedef, shapes, dtype)
+    spec = _SPEC_CACHE.get(key)
+    if spec is None:
+        sizes = tuple(math.prod(s) for s in shapes)
+        offsets, off = [], 0
+        for sz in sizes:
+            offsets.append(off)
+            off += sz
+        spec = RavelSpec(treedef=treedef, shapes=shapes, offsets=tuple(offsets),
+                         sizes=sizes, dtype=dtype, total=off)
+        _SPEC_CACHE[key] = spec
+    return spec
+
+
+def ravel_pytree(tree, spec: RavelSpec | None = None) -> jax.Array:
+    """Concatenate every leaf of ``tree`` into one ``(P,)`` vector."""
+    if spec is None:
+        spec = ravel_spec(tree)
+    leaves = jax.tree_util.tree_leaves(tree)
+    if len(leaves) == 1:
+        return leaves[0].reshape(-1)
+    return jnp.concatenate([l.reshape(-1) for l in leaves])
+
+
+def ravel_stacked(tree, spec: RavelSpec | None = None) -> jax.Array:
+    """Client-stacked pytree (leaves ``(N, ...)``) → one ``(N, P)`` buffer."""
+    if spec is None:
+        spec = ravel_spec(tree, lead_axes=1)
+    leaves = jax.tree_util.tree_leaves(tree)
+    n = leaves[0].shape[0]
+    if len(leaves) == 1:
+        return leaves[0].reshape(n, -1)
+    return jnp.concatenate([l.reshape(n, -1) for l in leaves], axis=1)
+
+
+def unravel_pytree(vec: jax.Array, spec: RavelSpec):
+    """``(..., P)`` flat vector → pytree with leaves ``(..., *shape)``."""
+    lead = vec.shape[:-1]
+    parts = [
+        vec[..., o:o + sz].reshape(lead + shp)
+        for o, sz, shp in zip(spec.offsets, spec.sizes, spec.shapes)
+    ]
+    return jax.tree_util.tree_unflatten(spec.treedef, parts)
+
+
+# ----------------------------------------------------- aggregation paths
+
 def aggregate_client_grads(stacked_grads, weights: jax.Array):
-    """Weighted sum over the leading (client) axis of a gradient pytree.
+    """Per-leaf weighted sum over the leading (client) axis — the
+    reference path (one reduction per leaf, leaf dtypes preserved).
 
     stacked_grads: pytree whose leaves have shape (N, ...).
     weights: (N,) float32 — ω_i.
@@ -48,12 +148,62 @@ def aggregate_client_grads(stacked_grads, weights: jax.Array):
     return jax.tree_util.tree_map(_one, stacked_grads)
 
 
-def aggregate_client_grads_kernel(stacked_grads, weights: jax.Array):
-    """Same contract as :func:`aggregate_client_grads` via the Pallas kernel.
+def reduce_flat(g: jax.Array, weights: jax.Array, *,
+                use_kernel: bool = False, out_dtype=None) -> jax.Array:
+    """``(N, P)`` flat gradient buffer → ``(P,)`` = ω @ g, in one pass.
 
-    Flattens every leaf to (N, P), reduces with the kernel, reshapes back.
-    Imported lazily so the pure-jnp path has no kernel dependency.
+    Accumulation is at least f32 (low-precision inputs are upcast; f64
+    under ``jax_enable_x64`` stays f64). ``out_dtype`` overrides the
+    result dtype — e.g. bf16 client gradients aggregated into an f32
+    server update without a round-trip through bf16. The Pallas path is
+    one tiled kernel launch over the whole parameter space (imported
+    lazily so the pure-jnp path has no kernel dependency); in-kernel
+    accumulation is f32 — the MXU contract.
     """
+    od = jnp.dtype(out_dtype) if out_dtype is not None else g.dtype
+    if use_kernel:
+        from repro.kernels.aggregate import ops as agg_ops
+
+        return agg_ops.masked_scaled_aggregate(
+            g, weights.astype(jnp.float32), out_dtype=od)
+    acc = jnp.promote_types(g.dtype, jnp.float32)
+    out = weights.astype(acc) @ g.astype(acc)
+    return out.astype(od)
+
+
+def aggregate_client_grads_flat(stacked_grads, weights: jax.Array, *,
+                                use_kernel: bool = False):
+    """Single-pass aggregation: ravel → one kernel/matvec → unravel.
+
+    Same contract as :func:`aggregate_client_grads` (float32-accumulation
+    tolerance); issues exactly **one** reduction regardless of the number
+    of parameter leaves. Mixed-dtype pytrees fall back to the per-leaf
+    path.
+    """
+    try:
+        spec = ravel_spec(stacked_grads, lead_axes=1)
+    except ValueError:
+        if use_kernel:
+            return aggregate_client_grads_kernel_per_leaf(stacked_grads, weights)
+        return aggregate_client_grads(stacked_grads, weights)
+    g = ravel_stacked(stacked_grads, spec)
+    return unravel_pytree(reduce_flat(g, weights, use_kernel=use_kernel), spec)
+
+
+def aggregate_client_grads_kernel(stacked_grads, weights: jax.Array):
+    """Kernel-path aggregation: one Pallas launch for the whole pytree.
+
+    Previously one ``masked_scaled_aggregate`` call (with its own lane
+    padding) *per leaf*; now the tree is raveled once into ``(N, P)``
+    and reduced by a single tiled kernel (DESIGN.md §5).
+    """
+    return aggregate_client_grads_flat(stacked_grads, weights, use_kernel=True)
+
+
+def aggregate_client_grads_kernel_per_leaf(stacked_grads, weights: jax.Array):
+    """One kernel launch per leaf — the pre-flat kernel path, kept as
+    the mixed-dtype fallback and the ``ClientSimulator(flat=False)``
+    legacy behavior."""
     from repro.kernels.aggregate import ops as agg_ops
 
     def _one(leaf):

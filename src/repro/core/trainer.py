@@ -59,11 +59,20 @@ class ClientSimulator:
         For exact paper semantics use ``sgd(eta)``.
     loss_fn : optional (params) -> scalar global loss, logged per step.
     use_kernel : route aggregation through the Pallas kernel path.
+    flat : run the scan loop in flat parameter space (DESIGN.md §5):
+        params and optimizer state live as single ``(P,)`` buffers in the
+        scan carry, aggregation is one kernel/matvec per step, and the
+        pytree is materialized only at the grads_fn/loss_fn/eval_fn
+        boundaries. ``None`` (default) enables it whenever every param
+        leaf shares one dtype; ``False`` restores full legacy semantics
+        (per-leaf carry *and* per-leaf aggregation in leaf dtype);
+        ``True`` raises on mixed-dtype params.
     """
 
     def __init__(self, *, grads_fn, p, optimizer: Optimizer,
                  scheduler=None, energy=None,
-                 loss_fn=None, use_kernel: bool = False):
+                 loss_fn=None, use_kernel: bool = False,
+                 flat: bool | None = None):
         self.grads_fn = grads_fn
         self.scheduler = scheduler
         self.energy = energy
@@ -71,6 +80,7 @@ class ClientSimulator:
         self.optimizer = optimizer
         self.loss_fn = loss_fn
         self.use_kernel = use_kernel
+        self.flat = flat
 
     def _components(self, scheduler, energy):
         scheduler = self.scheduler if scheduler is None else scheduler
@@ -81,8 +91,23 @@ class ClientSimulator:
                 "as arguments to init/step/run")
         return scheduler, energy
 
-    def init(self, key, params, *, scheduler=None, energy=None) -> SimCarry:
+    def _flat_spec(self, params):
+        """RavelSpec for flat-carry execution, or None for the legacy path."""
+        if self.flat is False:
+            return None
+        try:
+            return aggregation.ravel_spec(params)
+        except ValueError:
+            if self.flat:
+                raise
+            return None
+
+    def init(self, key, params, *, scheduler=None, energy=None,
+             spec=None) -> SimCarry:
+        """Build the scan carry; with ``spec`` params/opt_state are flat."""
         scheduler, energy = self._components(scheduler, energy)
+        if spec is not None:
+            params = aggregation.ravel_pytree(params, spec)
         k_sched, k_energy, k_run = jax.random.split(key, 3)
         return SimCarry(
             params=params,
@@ -95,19 +120,55 @@ class ClientSimulator:
 
     def step(self, carry: SimCarry, scheduler=None,
              energy=None) -> tuple[SimCarry, dict]:
+        """One server round on a pytree carry (public single-step API)."""
+        return self._step(carry, scheduler, energy, None)
+
+    def _step(self, carry: SimCarry, scheduler, energy,
+              spec) -> tuple[SimCarry, dict]:
+        """Shared step body; ``spec`` non-None means carry.params is the
+        raveled ``(P,)`` vector and aggregation stays in flat space."""
         scheduler, energy = self._components(scheduler, energy)
         key, k_arr, k_sched, k_grad = jax.random.split(carry.key, 4)
         energy_state, arr = energy.arrivals(carry.energy_state, carry.t, k_arr)
         sched_state, dec = scheduler.step(carry.sched_state, carry.t, k_sched, arr)
-        stacked = self.grads_fn(carry.params, k_grad, carry.t)
+        params_tree = (aggregation.unravel_pytree(carry.params, spec)
+                       if spec is not None else carry.params)
+        stacked = self.grads_fn(params_tree, k_grad, carry.t)
         weights = aggregation.client_weights(self.p, dec)
-        if self.use_kernel:
-            agg = aggregation.aggregate_client_grads_kernel(stacked, weights)
+        if spec is not None:
+            try:
+                gspec = aggregation.ravel_spec(stacked, lead_axes=1)
+            except ValueError:
+                # Mixed-dtype gradients (e.g. one layer computed in
+                # bf16) against uniform-dtype params: aggregate in the
+                # params dtype — accumulation inside reduce_flat is
+                # f32-or-better either way.
+                stacked = jax.tree_util.tree_map(
+                    lambda x: x.astype(spec.dtype), stacked)
+                gspec = aggregation.ravel_spec(stacked, lead_axes=1)
+            if gspec.shapes != spec.shapes or gspec.treedef != spec.treedef:
+                raise ValueError(
+                    "grads_fn output does not mirror the parameter pytree; "
+                    "flat-carry execution needs matching structure+shapes "
+                    f"(params {spec.shapes}, grads {gspec.shapes})")
+            g = aggregation.ravel_stacked(stacked, gspec)
+            agg = aggregation.reduce_flat(g, weights,
+                                          use_kernel=self.use_kernel)
+        elif self.flat is False:
+            # Full legacy semantics: per-leaf reductions (and per-leaf
+            # kernel launches), leaf dtypes untouched — the escape hatch
+            # and the reference the flat paths are tested against.
+            agg = (aggregation.aggregate_client_grads_kernel_per_leaf(
+                       stacked, weights) if self.use_kernel
+                   else aggregation.aggregate_client_grads(stacked, weights))
         else:
-            agg = aggregation.aggregate_client_grads(stacked, weights)
+            agg = aggregation.aggregate_client_grads_flat(
+                stacked, weights, use_kernel=self.use_kernel)
         updates, opt_state = self.optimizer.update(agg, carry.opt_state, carry.params)
         params = apply_updates(carry.params, updates)
-        loss = (self.loss_fn(params) if self.loss_fn is not None
+        loss_params = (aggregation.unravel_pytree(params, spec)
+                       if spec is not None else params)
+        loss = (self.loss_fn(loss_params) if self.loss_fn is not None
                 else jnp.zeros((), jnp.float32))
         out = {
             "loss": loss,
@@ -131,16 +192,30 @@ class ClientSimulator:
         ``evals`` leaf has leading axis ``num_steps // eval_every``. This
         keeps evaluation *inside* the compiled computation so grid
         engines can vmap it (DESIGN.md §1).
+
+        When the parameter pytree has a single leaf dtype (``flat``
+        mode, the default), the scan carry holds params and optimizer
+        state as single flat buffers: per step the loop issues exactly
+        one aggregation kernel/matvec over the whole ``(N, P)`` gradient
+        buffer and never round-trips optimizer state leaf-by-leaf; the
+        pytree view exists only at the grads_fn/loss_fn/eval_fn
+        boundaries (cheap slices/reshapes XLA fuses away). The returned
+        ``final_params`` is always the original pytree structure.
         """
         scheduler, energy = self._components(scheduler, energy)
-        carry = self.init(key, params, scheduler=scheduler, energy=energy)
+        spec = self._flat_spec(params)
+        carry = self.init(key, params, scheduler=scheduler, energy=energy,
+                          spec=spec)
 
         def body(c, _):
-            return self.step(c, scheduler, energy)
+            return self._step(c, scheduler, energy, spec)
+
+        def unflatten(p):
+            return aggregation.unravel_pytree(p, spec) if spec is not None else p
 
         if eval_fn is None:
             carry, outs = jax.lax.scan(body, carry, None, length=num_steps)
-            return carry.params, self._history(outs)
+            return unflatten(carry.params), self._history(outs)
 
         if eval_every <= 0:
             eval_every = num_steps
@@ -150,13 +225,13 @@ class ClientSimulator:
 
         def chunk(c, _):
             c, outs = jax.lax.scan(body, c, None, length=eval_every)
-            return c, (outs, eval_fn(c.params))
+            return c, (outs, eval_fn(unflatten(c.params)))
 
         carry, (outs, evals) = jax.lax.scan(
             chunk, carry, None, length=num_steps // eval_every)
         outs = jax.tree_util.tree_map(
             lambda x: x.reshape((num_steps,) + x.shape[2:]), outs)
-        return carry.params, self._history(outs), evals
+        return unflatten(carry.params), self._history(outs), evals
 
     @staticmethod
     def _history(outs) -> SimHistory:

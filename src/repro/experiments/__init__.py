@@ -6,6 +6,10 @@
   whole scheduler × arrival × seed grid as one compiled computation per
   component structure (vmap over stacked pytree leaves), plus the
   sequential per-cell baseline for cross-checks and benchmarking.
+* :mod:`repro.experiments.placement` — device placement for
+  ``run_grid(..., mesh=...)``: each group's (scenario × seed) cells are
+  flattened into one cell axis, padded to a device-divisible count, and
+  executed under ``shard_map`` (DESIGN.md §5).
 """
 
 from repro.experiments.engine import (
@@ -15,6 +19,7 @@ from repro.experiments.engine import (
     run_grid,
     run_grid_sequential,
 )
+from repro.experiments.placement import make_cell_mesh
 from repro.experiments.scenario import (
     ARRIVAL_KINDS,
     FIG1_SCHEDULERS,
@@ -31,7 +36,7 @@ from repro.experiments.scenario import (
 __all__ = [
     "ARRIVAL_KINDS", "FIG1_SCHEDULERS", "PAPER_TAUS",
     "CellResult", "Scenario", "clear_cache", "default_taus", "get_grid",
-    "grid_names",
+    "grid_names", "make_cell_mesh",
     "grid_summary", "make_energy_process", "register_grid", "run_grid",
     "run_grid_sequential", "scenario_grid",
 ]

@@ -85,8 +85,12 @@ def _run_group(scheduler, energy, params0, keys, *, sim: ClientSimulator,
 
 def clear_cache() -> None:
     """Drop compiled grid executables (and the sim/eval_fn closures —
-    with their captured datasets — that the jit cache keeps alive)."""
+    with their captured datasets — that the jit cache keeps alive),
+    for both the vmap and shard_map execution paths."""
     _run_group.clear_cache()
+    from repro.experiments import placement
+
+    placement.clear_cache()
 
 
 def _seed_keys(seeds):
@@ -112,6 +116,7 @@ def run_grid(
     eval_fn=None,
     eval_every: int = 0,
     sim: ClientSimulator | None = None,
+    mesh=None,
 ) -> dict[str, CellResult]:
     """Execute every scenario × seed cell, batched per component structure.
 
@@ -119,6 +124,12 @@ def run_grid(
     ``s`` runs under ``jax.random.PRNGKey(s)``, bit-identical to a
     standalone ``ClientSimulator.run(PRNGKey(s), ...)`` of the same cell
     (up to float reassociation introduced by batching).
+
+    ``mesh`` (a 1-D ``jax.sharding.Mesh``, e.g.
+    :func:`repro.experiments.placement.make_cell_mesh`) shards each
+    group's flattened (scenario × seed) cell axis across devices
+    (DESIGN.md §5). Without a mesh — or with a 1-device mesh — execution
+    takes the single-device vmap path, bit-for-bit as before.
 
     The jit cache is keyed on ``sim`` by identity, so repeated calls
     with a fresh simulator (or fresh grads_fn/eval_fn lambdas) re-trace
@@ -142,6 +153,10 @@ def run_grid(
         sim = ClientSimulator(grads_fn=grads_fn, p=p, optimizer=optimizer,
                               loss_fn=loss_fn, use_kernel=use_kernel)
 
+    sharded = mesh is not None and mesh.size > 1
+    if sharded:
+        from repro.experiments import placement
+
     built = [sc.build() for sc in scenarios]
     groups: dict[Any, list[int]] = {}
     for idx, (sch, en) in enumerate(built):
@@ -151,9 +166,15 @@ def run_grid(
     for members in groups.values():
         sch_batch = _stack([built[i][0] for i in members])
         en_batch = _stack([built[i][1] for i in members])
-        out = _run_group(sch_batch, en_batch, params0, keys, sim=sim,
-                         num_steps=num_steps, eval_fn=eval_fn,
-                         eval_every=eval_every)
+        if sharded:
+            out = placement.run_group_sharded(
+                sch_batch, en_batch, params0, keys, sim=sim,
+                num_steps=num_steps, n_scenarios=len(members), mesh=mesh,
+                eval_fn=eval_fn, eval_every=eval_every)
+        else:
+            out = _run_group(sch_batch, en_batch, params0, keys, sim=sim,
+                             num_steps=num_steps, eval_fn=eval_fn,
+                             eval_every=eval_every)
         for j, idx in enumerate(members):
             results[idx] = jax.tree_util.tree_map(lambda x: x[j], out)
     return dict(zip(names, results))

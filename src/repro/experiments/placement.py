@@ -1,0 +1,152 @@
+"""Placement layer: device-sharded grid execution (DESIGN.md §5).
+
+:func:`repro.experiments.run_grid` batches a structure-group's cells as
+``vmap(scenarios) ∘ vmap(seeds)`` on one device. This module places the
+same computation across a device mesh instead:
+
+1. the (scenario S × seed R) cell block is **flattened** into one cell
+   axis C = S·R (scheduler/energy leaves repeated over seeds, PRNG keys
+   tiled over scenarios),
+2. C is **padded** to a device-divisible count by repeating cell 0 — a
+   valid cell, so the padded lanes run real arithmetic instead of
+   producing NaNs — and the pad is sliced off before results are
+   reshaped back to (S, R, ...),
+3. the block executes under ``shard_map``: cells sharded along the
+   mesh's single axis, ``params0`` replicated, each device running the
+   same jitted ``vmap(ClientSimulator.run)`` over its local cells.
+
+Single-device callers never enter this module — ``run_grid`` without a
+``mesh`` (or with a 1-device mesh) takes the pure-vmap path bit-for-bit
+unchanged. CPU CI exercises the sharded path via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(``tests/conftest.py``).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec
+
+#: Default mesh-axis name for the flattened (scenario × seed) cell axis.
+CELL_AXIS = "cells"
+
+
+def make_cell_mesh(n_devices: int | None = None, *,
+                   axis_name: str = CELL_AXIS) -> Mesh:
+    """1-D mesh over the first ``n_devices`` (default: all) devices.
+
+    The cell axis is embarrassingly parallel, so grid sharding wants a
+    flat mesh regardless of how production training meshes are shaped
+    (``repro.launch.mesh`` re-exports this for drivers).
+    """
+    devices = jax.devices()
+    if n_devices is not None:
+        if not 1 <= n_devices <= len(devices):
+            raise ValueError(
+                f"n_devices={n_devices} outside [1, {len(devices)}]")
+        devices = devices[:n_devices]
+    return Mesh(np.array(devices), (axis_name,))
+
+
+def _cell_axis(mesh: Mesh) -> str:
+    if len(mesh.axis_names) != 1:
+        raise ValueError(
+            "grid sharding needs a 1-D mesh (the flattened cell axis); got "
+            f"axes {mesh.axis_names} — build one with make_cell_mesh()")
+    return mesh.axis_names[0]
+
+
+def flatten_cells(scheduler, energy, keys, *, n_scenarios: int):
+    """(S-stacked components, (R, 2) keys) → C = S·R flat cell arrays.
+
+    Cell ``c = s·R + r`` pairs scenario ``s`` with seed ``r``, matching
+    ``x.reshape(S, R, ...)`` on the way back out.
+    """
+    r = keys.shape[0]
+    rep = lambda x: jnp.repeat(x, r, axis=0)
+    sch_c = jax.tree_util.tree_map(rep, scheduler)
+    en_c = jax.tree_util.tree_map(rep, energy)
+    keys_c = jnp.tile(keys, (n_scenarios, 1))
+    return sch_c, en_c, keys_c
+
+
+def pad_cells(tree, n_cells: int, n_devices: int):
+    """Pad the leading cell axis to a multiple of ``n_devices`` by
+    repeating cell 0 (valid data — no NaN lanes); returns the padded
+    tree and the padded count."""
+    pad = (-n_cells) % n_devices
+    if pad == 0:
+        return tree, n_cells
+
+    def _pad(x):
+        return jnp.concatenate(
+            [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])])
+
+    return jax.tree_util.tree_map(_pad, tree), n_cells + pad
+
+
+@partial(jax.jit,
+         static_argnames=("sim", "num_steps", "eval_fn", "eval_every", "mesh"))
+def _run_group_sharded(scheduler, energy, params0, keys, *, sim,
+                       num_steps: int, eval_fn=None, eval_every: int = 0,
+                       mesh: Mesh):
+    """shard_map'd twin of ``engine._run_group``.
+
+    ``scheduler`` / ``energy`` / ``keys`` leaves carry a leading
+    (device-divisible) flat cell axis; ``params0`` is replicated. Each
+    device vmaps the simulator scan over its local cells. Compiled once
+    per (sim, group structure, mesh) — probe
+    ``_run_group_sharded._cache_size()`` to assert trace counts.
+    """
+    from repro.experiments.engine import CellResult
+
+    axis = _cell_axis(mesh)
+    cells, replicated = PartitionSpec(axis), PartitionSpec()
+
+    def local(sch, en, ks, p0):
+        def one(s, e, k):
+            out = sim.run(k, p0, num_steps, scheduler=s, energy=e,
+                          eval_fn=eval_fn, eval_every=eval_every)
+            return CellResult(*out) if eval_fn is not None \
+                else CellResult(*out, None)
+
+        return jax.vmap(one, in_axes=(0, 0, 0))(sch, en, ks)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(cells, cells, cells, replicated),
+                   out_specs=cells, check_rep=False)
+    return fn(scheduler, energy, keys, params0)
+
+
+def clear_cache() -> None:
+    """Drop compiled sharded-grid executables (see engine.clear_cache)."""
+    _run_group_sharded.clear_cache()
+
+
+def run_group_sharded(scheduler, energy, params0, keys, *, sim,
+                      num_steps: int, n_scenarios: int, mesh: Mesh,
+                      eval_fn=None, eval_every: int = 0):
+    """Execute one structure-group's (S × R) cell block across ``mesh``.
+
+    Flatten → pad → shard_map → slice off padding → reshape to (S, R).
+    Per-cell numerics match the vmap path to float32 reassociation
+    tolerance (each cell is the same ``ClientSimulator.run`` under the
+    same per-seed PRNG key).
+    """
+    _cell_axis(mesh)  # validate before any device work
+    r = keys.shape[0]
+    n_cells = n_scenarios * r
+    sch_c, en_c, keys_c = flatten_cells(scheduler, energy, keys,
+                                        n_scenarios=n_scenarios)
+    (sch_c, en_c, keys_c), _ = pad_cells((sch_c, en_c, keys_c), n_cells,
+                                         mesh.size)
+    out = _run_group_sharded(sch_c, en_c, params0, keys_c, sim=sim,
+                             num_steps=num_steps, eval_fn=eval_fn,
+                             eval_every=eval_every, mesh=mesh)
+    return jax.tree_util.tree_map(
+        lambda x: x[:n_cells].reshape((n_scenarios, r) + x.shape[1:]), out)

@@ -34,12 +34,18 @@ def _agg_kernel(w_ref, g_ref, o_ref):
                          preferred_element_type=jnp.float32).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_p", "interpret", "out_dtype"))
 def masked_scaled_aggregate_kernel(g, w, *, block_p: int = 2048,
-                                   interpret: bool = False):
+                                   interpret: bool = False, out_dtype=None):
     """g: (N, P); w: (N,) -> (P,) = w @ g.
 
-    P is padded to a multiple of ``block_p`` internally.
+    P is padded to a multiple of ``block_p`` internally — one padding of
+    the whole flat buffer, which is why the flat aggregation path
+    (DESIGN.md §5) ravels the gradient pytree *before* calling in rather
+    than launching per leaf. ``out_dtype`` overrides the output dtype
+    (the in-kernel accumulation is f32 regardless), e.g. f32 server
+    aggregates from bf16 client gradients.
     """
     n, p = g.shape
     bp = min(block_p, p)
@@ -55,7 +61,8 @@ def masked_scaled_aggregate_kernel(g, w, *, block_p: int = 2048,
             pl.BlockSpec((n, bp), lambda i: (0, i)),
         ],
         out_specs=pl.BlockSpec((1, bp), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, pp), g.dtype),
+        out_shape=jax.ShapeDtypeStruct(
+            (1, pp), jnp.dtype(out_dtype) if out_dtype is not None else g.dtype),
         interpret=interpret,
     )(w.reshape(1, n).astype(jnp.float32), g)
     return out[0, :p]

@@ -5,6 +5,7 @@ touches jax device state (device count locks on first jax init).
 
   single pod : (16, 16)    axes ("data", "model")   = 256 chips
   multi-pod  : (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+  cell mesh  : (D,)        axis ("cells",)   — scenario-grid sharding
 
 The dry-run launcher sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512``
 before any jax import so 512 placeholder CPU devices exist.
@@ -13,6 +14,12 @@ before any jax import so 512 placeholder CPU devices exist.
 from __future__ import annotations
 
 import jax
+
+# Grid sharding wants a flat 1-D mesh over the (scenario × seed) cell
+# axis regardless of how training meshes are shaped; the factory lives
+# with the placement layer (DESIGN.md §5) and is re-exported here so
+# drivers import every mesh from one module.
+from repro.experiments.placement import CELL_AXIS, make_cell_mesh  # noqa: F401
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -1,0 +1,68 @@
+"""Property-based flat-aggregation tests (randomized ragged pytrees).
+
+Deterministic layout sweeps live in ``test_aggregation_flat.py``; this
+module randomizes leaf count, leaf shapes (odd sizes that previously
+forced per-leaf kernel padding) and weights, and is skipped as a whole
+when ``hypothesis`` is not installed in the container.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import aggregation  # noqa: E402
+
+_leaf_shapes = st.lists(
+    st.lists(st.integers(1, 7), min_size=0, max_size=3).map(tuple),
+    min_size=1, max_size=5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shapes=_leaf_shapes, n=st.integers(1, 9), seed=st.integers(0, 2**30),
+       use_kernel=st.booleans())
+def test_flat_aggregation_matches_per_leaf(shapes, n, seed, use_kernel):
+    """ravel → one reduction → unravel ≡ per-leaf aggregate_client_grads
+    for arbitrary ragged float32 pytrees, to float32 tolerance."""
+    key = jax.random.PRNGKey(seed)
+    stacked = {
+        f"leaf{i}": jax.random.normal(jax.random.fold_in(key, i), (n,) + shp)
+        for i, shp in enumerate(shapes)
+    }
+    w = jax.random.uniform(jax.random.fold_in(key, 999), (n,))
+    ref = aggregation.aggregate_client_grads(stacked, w)
+    got = aggregation.aggregate_client_grads_flat(stacked, w,
+                                                  use_kernel=use_kernel)
+    for name in ref:
+        np.testing.assert_allclose(np.asarray(ref[name]),
+                                   np.asarray(got[name]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shapes=_leaf_shapes, n=st.integers(1, 6), seed=st.integers(0, 2**30))
+def test_ravel_unravel_roundtrip_random_trees(shapes, n, seed):
+    key = jax.random.PRNGKey(seed)
+    tree = {
+        f"leaf{i}": jax.random.normal(jax.random.fold_in(key, i), (n,) + shp)
+        for i, shp in enumerate(shapes)
+    }
+    spec = aggregation.ravel_spec(tree, lead_axes=1)
+    flat = aggregation.ravel_stacked(tree, spec)
+    assert flat.shape == (n, spec.total)
+    back = aggregation.unravel_pytree(flat, spec)
+    for name in tree:
+        np.testing.assert_array_equal(np.asarray(tree[name]),
+                                      np.asarray(back[name]))
+    # The (P,)-vector view used for the flat scan carry round-trips too.
+    one = jax.tree_util.tree_map(lambda x: x[0], tree)
+    spec0 = aggregation.ravel_spec(one)
+    vec = aggregation.ravel_pytree(one, spec0)
+    assert vec.shape == (spec0.total,)
+    back0 = aggregation.unravel_pytree(vec, spec0)
+    for name in one:
+        np.testing.assert_array_equal(np.asarray(one[name]),
+                                      np.asarray(back0[name]))

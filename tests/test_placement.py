@@ -1,0 +1,223 @@
+"""Placement-layer tests: sharded ≡ batched ≡ sequential, compile
+counts on both execution paths, and padding-cell containment
+(DESIGN.md §5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ClientSimulator, make_quadratic
+from repro.experiments import (
+    Scenario,
+    make_cell_mesh,
+    run_grid,
+    run_grid_sequential,
+)
+from repro.experiments import engine, placement
+from repro.optim import sgd
+
+multidevice = pytest.mark.multidevice
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_quadratic(jax.random.PRNGKey(2), n_clients=6, dim=5,
+                          hetero=1.0)
+
+
+def _grid_kwargs(problem, steps):
+    return dict(
+        grads_fn=lambda p, k, t: problem.all_grads(p, key=k, noise=0.05),
+        p=problem.p, optimizer=sgd(0.02),
+        params0=jnp.full((5,), 4.0), num_steps=steps,
+        loss_fn=problem.suboptimality)
+
+
+def _sim(problem, steps):
+    kw = _grid_kwargs(problem, steps)
+    return ClientSimulator(grads_fn=kw["grads_fn"], p=kw["p"],
+                           optimizer=kw["optimizer"], loss_fn=kw["loss_fn"])
+
+
+# --------------------------------------------------------- mesh factory
+
+def test_make_cell_mesh_defaults_to_all_devices():
+    mesh = make_cell_mesh()
+    assert mesh.size == jax.device_count()
+    assert mesh.axis_names == (placement.CELL_AXIS,)
+
+
+def test_make_cell_mesh_validates_device_count():
+    with pytest.raises(ValueError, match="n_devices"):
+        make_cell_mesh(jax.device_count() + 1)
+    with pytest.raises(ValueError, match="n_devices"):
+        make_cell_mesh(0)
+
+
+def test_multi_axis_mesh_rejected(problem):
+    if jax.device_count() < 2:
+        pytest.skip("requires >= 2 jax devices")
+    devs = np.array(jax.devices()[:2]).reshape(2, 1)
+    bad = jax.sharding.Mesh(devs, ("a", "b"))
+    steps = 10
+    scens = [Scenario("alg1_periodic", "alg1", "periodic", 6, steps + 1)]
+    with pytest.raises(ValueError, match="1-D mesh"):
+        run_grid(scens, seeds=2, mesh=bad, **_grid_kwargs(problem, steps))
+
+
+# ---------------------------------------------------- cell-axis algebra
+
+def test_flatten_cells_ordering():
+    """Cell c = s·R + r must pair scenario s with seed r."""
+    sch = {"x": jnp.arange(3.0)}          # S = 3 scenarios
+    en = {"y": jnp.arange(30.0, 33.0)}
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in (7, 11)])  # R = 2
+    sch_c, en_c, keys_c = placement.flatten_cells(sch, en, keys,
+                                                  n_scenarios=3)
+    np.testing.assert_array_equal(np.asarray(sch_c["x"]),
+                                  [0, 0, 1, 1, 2, 2])
+    np.testing.assert_array_equal(np.asarray(en_c["y"]),
+                                  [30, 30, 31, 31, 32, 32])
+    np.testing.assert_array_equal(np.asarray(keys_c),
+                                  np.tile(np.asarray(keys), (3, 1)))
+
+
+def test_pad_cells_repeats_first_cell():
+    tree = {"a": jnp.arange(6.0).reshape(3, 2)}
+    padded, n = placement.pad_cells(tree, 3, 4)
+    assert n == 4
+    np.testing.assert_array_equal(np.asarray(padded["a"]),
+                                  [[0, 1], [2, 3], [4, 5], [0, 1]])
+    same, n = placement.pad_cells(tree, 3, 3)
+    assert n == 3 and same is tree  # no copy when already divisible
+
+
+# ------------------------------------------------- sharded grid results
+
+@multidevice
+def test_sharded_matches_batched_and_sequential(problem):
+    """run_grid results are seed-reproducible and equal across the three
+    execution modes for the same cells (float32 tolerance)."""
+    steps = 80
+    scenarios = [
+        Scenario("alg1_periodic", "alg1", "periodic", 6, steps + 1),
+        Scenario("alg2_binary", "alg2", "binary", 6, steps + 1),
+        Scenario("b2_uniform", "benchmark2", "uniform", 6, steps + 1),
+    ]
+    kw = _grid_kwargs(problem, steps)
+    mesh = make_cell_mesh()
+    batched = run_grid(scenarios, seeds=3, **kw)
+    sharded = run_grid(scenarios, seeds=3, mesh=mesh, **kw)
+    sequential = run_grid_sequential(scenarios, seeds=3, **kw)
+    assert set(batched) == set(sharded) == set(sequential)
+    for name in batched:
+        for other in (sharded, sequential):
+            np.testing.assert_allclose(
+                np.asarray(batched[name].history.loss),
+                np.asarray(other[name].history.loss),
+                rtol=2e-4, atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(batched[name].params),
+            np.asarray(sharded[name].params), rtol=2e-4, atol=1e-5)
+        np.testing.assert_array_equal(
+            np.asarray(batched[name].history.participation),
+            np.asarray(sharded[name].history.participation))
+
+
+@multidevice
+def test_sharded_padding_cells_do_not_leak(problem):
+    """A cell count with maximal padding (C % D == 1) must yield exactly
+    (S, R)-shaped results that match the unsharded path — padded lanes
+    are sliced off before CellResult assembly."""
+    steps = 40
+    seeds = 3  # 3 scenarios x 3 seeds = 9 cells -> pad 7 on 8 devices
+    scenarios = [
+        Scenario(f"alg2_binary_{i}", "alg2", "binary", 6, steps + 1,
+                 taus=[1 + i, 2, 2, 4, 4, 8])
+        for i in range(3)
+    ]
+    kw = _grid_kwargs(problem, steps)
+    mesh = make_cell_mesh()
+    assert (len(scenarios) * seeds) % mesh.size != 0  # really exercises padding
+    sharded = run_grid(scenarios, seeds=seeds, mesh=mesh, **kw)
+    batched = run_grid(scenarios, seeds=seeds, **kw)
+    for name in sharded:
+        assert sharded[name].history.loss.shape == (seeds, steps)
+        assert sharded[name].params.shape == (seeds, 5)
+        np.testing.assert_allclose(
+            np.asarray(sharded[name].history.loss),
+            np.asarray(batched[name].history.loss), rtol=2e-4, atol=1e-5)
+
+
+@multidevice
+def test_sharded_eval_chunking(problem):
+    steps = 60
+    scenarios = [Scenario("alg1_periodic", "alg1", "periodic", 6, steps + 1)]
+    kw = _grid_kwargs(problem, steps)
+    mesh = make_cell_mesh()
+    sharded = run_grid(scenarios, seeds=2, mesh=mesh,
+                       eval_fn=problem.suboptimality, eval_every=20, **kw)
+    batched = run_grid(scenarios, seeds=2,
+                       eval_fn=problem.suboptimality, eval_every=20, **kw)
+    cell = sharded["alg1_periodic"]
+    assert cell.evals.shape == (2, 3)
+    np.testing.assert_allclose(np.asarray(cell.evals),
+                               np.asarray(batched["alg1_periodic"].evals),
+                               rtol=2e-4, atol=1e-5)
+
+
+# -------------------------------------------------------- compile counts
+
+@multidevice
+def test_compile_once_per_group_on_both_paths(problem):
+    """An S-scenario × R-seed grid traces once per component structure on
+    the vmap path AND once per structure on the shard_map path; a repeat
+    call with the same sim traces zero new computations on either."""
+    steps = 30
+    scenarios = [
+        Scenario(f"{s}_{a}", s, a, 6, steps + 1)
+        for s in ("alg1", "benchmark1")
+        for a in ("periodic", "binary")
+    ]  # 4 distinct component structures
+    kw = _grid_kwargs(problem, steps)
+    sim = _sim(problem, steps)
+    mesh = make_cell_mesh()
+    run_kw = dict(sim=sim, params0=kw["params0"], num_steps=steps, seeds=5)
+
+    vmap_before = engine._run_group._cache_size()
+    sh_before = placement._run_group_sharded._cache_size()
+
+    run_grid(scenarios, **run_kw)
+    assert engine._run_group._cache_size() - vmap_before == len(scenarios)
+    assert placement._run_group_sharded._cache_size() == sh_before
+
+    run_grid(scenarios, mesh=mesh, **run_kw)
+    assert placement._run_group_sharded._cache_size() - sh_before \
+        == len(scenarios)
+    assert engine._run_group._cache_size() - vmap_before == len(scenarios)
+
+    # Repeat calls with the same sim: zero new traces on either path.
+    run_grid(scenarios, **run_kw)
+    run_grid(scenarios, mesh=mesh, **run_kw)
+    assert engine._run_group._cache_size() - vmap_before == len(scenarios)
+    assert placement._run_group_sharded._cache_size() - sh_before \
+        == len(scenarios)
+
+
+@multidevice
+def test_one_device_mesh_takes_vmap_path(problem):
+    """mesh.size == 1 must fall back to the single-device vmap path —
+    bit-for-bit the no-mesh behavior, no shard_map trace."""
+    steps = 20
+    scenarios = [Scenario("alg1_periodic", "alg1", "periodic", 6, steps + 1)]
+    kw = _grid_kwargs(problem, steps)
+    sim = _sim(problem, steps)
+    run_kw = dict(sim=sim, params0=kw["params0"], num_steps=steps, seeds=2)
+    sh_before = placement._run_group_sharded._cache_size()
+    plain = run_grid(scenarios, **run_kw)
+    one = run_grid(scenarios, mesh=make_cell_mesh(1), **run_kw)
+    assert placement._run_group_sharded._cache_size() == sh_before
+    np.testing.assert_array_equal(
+        np.asarray(plain["alg1_periodic"].history.loss),
+        np.asarray(one["alg1_periodic"].history.loss))
