@@ -1,22 +1,24 @@
 """Benchmark: paper Figure 1 as a full scenario grid.
 
-Runs the 4 paper schedulers × 3 arrival families × ``seeds`` seeds on a
-reduced-scale CNN image task through :func:`repro.experiments.run_grid`
-(one compiled computation per scheduler × arrival structure), then runs
-the *identical* cells through the sequential per-cell baseline
-(:func:`run_grid_sequential`, one traced scan per cell — the
-pre-scenario-engine execution model) and reports both wall-clocks.
-With ≥ 2 devices (``benchmarks/run.py`` forces 8 CPU host devices) the
-same grid also runs device-sharded (``run_grid(..., mesh=...)``,
-DESIGN.md §5); cold (compile-inclusive) and warm (steady-state,
-jit-cache-hit) wall-clocks are reported for the batched-vs-sharded
-comparison, since large-grid sweeps amortize compilation.
+Runs the ``fig1_grid`` study (4 paper schedulers × 3 arrival families ×
+``seeds`` seeds) on a reduced-scale CNN image task through
+:meth:`repro.experiments.Study.run` (one compiled computation per
+scheduler × arrival structure), then runs the *identical* cells through
+the sequential per-cell baseline (``ExecutionConfig(sequential=True)``,
+one traced scan per cell — the pre-scenario-engine execution model) and
+reports both wall-clocks. With ≥ 2 devices (``benchmarks/run.py`` forces
+8 CPU host devices) the same study also runs device-sharded
+(``ExecutionConfig(mesh=...)``, DESIGN.md §5); cold (compile-inclusive)
+and warm (steady-state, jit-cache-hit) wall-clocks are reported for the
+batched-vs-sharded comparison, since large-grid sweeps amortize
+compilation.
 
 Emits ``name,us_per_call,derived`` CSV rows: per-cell mean±std final
-test accuracy across seeds, the grid wall-clocks, batched and sharded
-speedups, and the paper's full Fig-1 ordering check
-alg1 ≥ benchmark1 ≥ benchmark2 on periodic arrivals.
-``examples/paper_cifar.py --full`` remains the paper-exact variant.
+test accuracy across seeds (NaN-aware — a diverged seed surfaces as
+``n_nan``), the grid wall-clocks, batched and sharded speedups, and the
+paper's full Fig-1 ordering check alg1 ≥ benchmark1 ≥ benchmark2 on
+periodic arrivals. ``examples/paper_cifar.py --full`` remains the
+paper-exact variant.
 """
 
 from __future__ import annotations
@@ -63,13 +65,7 @@ def _quadratic_grid_rows(iters: int, seeds: int) -> list[str]:
     cell axis parallelizes across devices.
     """
     from repro.core import ClientSimulator, make_quadratic
-    from repro.experiments import (
-        ARRIVAL_KINDS,
-        FIG1_SCHEDULERS,
-        make_cell_mesh,
-        run_grid,
-        scenario_grid,
-    )
+    from repro.experiments import ExecutionConfig, get_study, make_cell_mesh
     from repro.optim import sgd
 
     n_clients, dim = 8, 64
@@ -78,23 +74,23 @@ def _quadratic_grid_rows(iters: int, seeds: int) -> list[str]:
     sim = ClientSimulator(
         grads_fn=lambda p, k, t: problem.all_grads(p, key=k, noise=0.05),
         p=problem.p, optimizer=sgd(0.02), loss_fn=problem.suboptimality)
-    scens = scenario_grid(FIG1_SCHEDULERS, ARRIVAL_KINDS, n_clients,
-                          iters + 1)
-    kw = dict(sim=sim, params0=jnp.full((dim,), 4.0), num_steps=iters,
-              seeds=seeds)
+    study = get_study("fig1_grid", n_clients=n_clients, num_steps=iters,
+                      seeds=seeds)
+    params0 = jnp.full((dim,), 4.0)
     mesh = make_cell_mesh()
-    n_cells = len(scens) * seeds
+    n_cells = len(study.resolve()) * seeds
 
-    def timed(**extra):
+    def timed(config=None):
         t0 = time.time()
-        res = run_grid(scens, **kw, **extra)
+        res = study.run(sim=sim, params0=params0, config=config)
         jax.block_until_ready([c.params for c in res.values()])
         return time.time() - t0
 
+    sharded = ExecutionConfig(mesh=mesh)
     timed()                      # compile batched
-    timed(mesh=mesh)             # compile sharded
+    timed(sharded)               # compile sharded
     dt_b = timed()
-    dt_s = timed(mesh=mesh)
+    dt_s = timed(sharded)
     speed = dt_b / dt_s
     n_dev = jax.device_count()
     print(f"quadratic grid ({n_cells} cells x {iters} steps, warm): "
@@ -113,34 +109,32 @@ def run(iters: int = 100, seeds: int = 8, n_clients: int = 8) -> list[str]:
     from repro.core import ClientSimulator
     from repro.experiments import (
         ARRIVAL_KINDS,
+        ExecutionConfig,
         FIG1_SCHEDULERS,
         clear_cache,
-        get_grid,
-        grid_summary,
-        run_grid,
-        run_grid_sequential,
+        get_study,
     )
     from repro.optim import sgd
 
     hw, batch, lr = 8, 2, 0.05
     grads_fn, eval_fn, p, params0 = _setup(n_clients, hw, batch)
-    scenarios = get_grid("fig1_grid", n_clients=n_clients, horizon=iters + 1)
-    # One simulator for both execution paths: repeat run_grid calls with
-    # the same sim hit the jit cache instead of re-tracing.
+    study = get_study("fig1_grid", n_clients=n_clients, num_steps=iters,
+                      seeds=seeds)
+    # One simulator for every execution config: repeat study.run calls
+    # with the same sim hit the jit cache instead of re-tracing.
     sim = ClientSimulator(grads_fn=grads_fn, p=p, optimizer=sgd(lr))
-    kw = dict(sim=sim, params0=params0, num_steps=iters, seeds=seeds,
-              eval_fn=eval_fn, eval_every=iters)
-    n_cells = len(scenarios) * seeds
+    cfg = ExecutionConfig(eval_fn=eval_fn, eval_every=iters)
+    n_cells = len(study.resolve()) * seeds
 
-    t0 = time.time()
-    results = run_grid(scenarios, **kw)
-    jax.block_until_ready([c.evals for c in results.values()])
-    dt_batched = time.time() - t0
+    def timed(config):
+        t0 = time.time()
+        res = study.run(sim=sim, params0=params0, config=config)
+        jax.block_until_ready([c.evals for c in res.values()])
+        return res, time.time() - t0
 
-    t0 = time.time()
-    seq_results = run_grid_sequential(scenarios, **kw)
-    jax.block_until_ready([c.evals for c in seq_results.values()])
-    dt_seq = time.time() - t0
+    results, dt_batched = timed(cfg)
+    _, dt_seq = timed(ExecutionConfig(eval_fn=eval_fn, eval_every=iters,
+                                      sequential=True))
 
     # Device-sharded execution: same cells, flattened cell axis across
     # all devices. Warm timings re-run with the same sim (jit-cache hit)
@@ -150,19 +144,11 @@ def run(iters: int = 100, seeds: int = 8, n_clients: int = 8) -> list[str]:
     sharded_rows = []
     if n_dev >= 2:
         from repro.experiments import make_cell_mesh
-        mesh = make_cell_mesh()
-        t0 = time.time()
-        sh_results = run_grid(scenarios, mesh=mesh, **kw)
-        jax.block_until_ready([c.evals for c in sh_results.values()])
-        dt_sharded = time.time() - t0
-        t0 = time.time()
-        sh_warm = run_grid(scenarios, mesh=mesh, **kw)
-        jax.block_until_ready([c.evals for c in sh_warm.values()])
-        dt_sharded_warm = time.time() - t0
-        t0 = time.time()
-        warm = run_grid(scenarios, **kw)
-        jax.block_until_ready([c.evals for c in warm.values()])
-        dt_batched_warm = time.time() - t0
+        sh_cfg = ExecutionConfig(eval_fn=eval_fn, eval_every=iters,
+                                 mesh=make_cell_mesh())
+        _, dt_sharded = timed(sh_cfg)
+        _, dt_sharded_warm = timed(sh_cfg)
+        _, dt_batched_warm = timed(cfg)
         sh_speed = dt_batched_warm / dt_sharded_warm
         print(f"fig1 grid sharded over {n_dev} devices: "
               f"cold {dt_sharded:.1f}s, warm {dt_sharded_warm:.1f}s vs "
@@ -192,13 +178,14 @@ def run(iters: int = 100, seeds: int = 8, n_clients: int = 8) -> list[str]:
         print("fig1 grid sharded: skipped (single device)", file=sys.stderr)
 
     # Final test accuracy per seed = the single end-of-run eval.
-    acc = grid_summary(results, reducer=lambda c: c.evals[:, -1])
+    # NaN-aware: a diverged seed is excluded from mean/std, counted in n_nan.
+    acc = results.reduce(metric=lambda c: c.evals[:, -1])
     rows = []
-    for sc in scenarios:
-        s = acc[sc.name]
-        rows.append(f"fig1_{sc.name},{dt_batched * 1e6 / n_cells:.0f},"
+    for name in results:
+        s = acc[name]
+        rows.append(f"fig1_{name},{dt_batched * 1e6 / n_cells:.0f},"
                     f"acc_mean={s['mean']:.3f};acc_std={s['std']:.3f};"
-                    f"seeds={s['n_seeds']}")
+                    f"seeds={s['n_seeds']};n_nan={s['n_nan']}")
 
     speedup = dt_seq / dt_batched
     # Meta output goes to stderr — stdout is the harness's CSV stream.

@@ -8,16 +8,21 @@
 Prints ``name,us_per_call,derived`` CSV. Select with ``--only``. With
 ``--json PATH`` the rows are additionally written as structured JSON
 (suite, name, us_per_call, parsed derived fields) so perf-trajectory
-``BENCH_*.json`` files can accumulate across PRs.
+``BENCH_*.json`` files can accumulate across PRs. ``--bench-out [DIR]``
+is the one-flag version of the ROADMAP's one-bench-file-per-PR rule: it
+writes ``BENCH_<today>.json`` (same named-series schema as
+``BENCH_2026-07-27.json``) into DIR (default: the repo root).
 
     PYTHONPATH=src python -m benchmarks.run [--only fig1,theory] [--fast] \
-        [--json BENCH_out.json]
+        [--json BENCH_out.json] [--bench-out]
 """
 
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
+import os
 import sys
 import traceback
 
@@ -58,6 +63,11 @@ def main() -> None:
                     help="shrink grid sizes (iterations/seeds) for CI-speed runs")
     ap.add_argument("--json", default="",
                     help="also write structured results to this JSON path")
+    ap.add_argument("--bench-out", nargs="?", const=".", default="",
+                    metavar="DIR",
+                    help="write BENCH_<date>.json (the per-PR perf-trajectory "
+                         "series) into DIR (default: current directory, i.e. "
+                         "the repo root when run as documented)")
     args = ap.parse_args()
 
     suite_names = ("fig1", "theory", "kernels_bench", "roofline_table")
@@ -99,15 +109,21 @@ def main() -> None:
             traceback.print_exc()
             failed.append(name)
 
-    if args.json:
+    out_paths = [p for p in (args.json,) if p]
+    if args.bench_out:
+        date = datetime.date.today().isoformat()
+        out_paths.append(os.path.join(args.bench_out, f"BENCH_{date}.json"))
+    if out_paths:
         import jax
 
-        with open(args.json, "w") as f:
-            json.dump({"suites": selected, "fast": args.fast,
-                       "device_count": jax.device_count(),
-                       "failed": failed, "results": records}, f, indent=2)
-            f.write("\n")
-        print(f"wrote {args.json}", file=sys.stderr)
+        doc = {"suites": selected, "fast": args.fast,
+               "device_count": jax.device_count(),
+               "failed": failed, "results": records}
+        for path in out_paths:
+            with open(path, "w") as f:
+                json.dump(doc, f, indent=2)
+                f.write("\n")
+            print(f"wrote {path}", file=sys.stderr)
 
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)

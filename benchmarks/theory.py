@@ -1,10 +1,10 @@
 """Benchmark: Theorem 1 — empirical suboptimality vs the analytic bound,
 and the ηLC/(2μ) error floor sweep (Remark 1).
 
-Each step-size's seed batch runs through the scenario engine
-(:func:`repro.experiments.run_grid`) as a single compiled computation,
-and the empirical floor is reported as mean±std across seeds instead of
-a single-seed point estimate.
+Each step-size's seed batch runs through the scenario engine as a
+single-cell :class:`repro.experiments.Study`, and the empirical floor is
+reported as NaN-aware mean±std across seeds
+(:meth:`GridResult.reduce`) instead of a single-seed point estimate.
 """
 
 from __future__ import annotations
@@ -13,7 +13,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import (
     make_quadratic,
@@ -21,7 +20,7 @@ from repro.core import (
     theorem1_bound,
     variance_constant,
 )
-from repro.experiments import Scenario, clear_cache, run_grid
+from repro.experiments import Study, clear_cache
 from repro.optim import sgd
 
 TAUS = (1, 5, 10, 20)
@@ -34,9 +33,9 @@ def run() -> list[str]:
     problem = make_quadratic(jax.random.PRNGKey(3), n, dim=8, hetero=0.5)
     taus = [TAUS[i % 4] for i in range(n)]
     steps = 2000
-    scenario = Scenario(name="alg1_periodic", scheduler="alg1",
-                        arrivals="periodic", n_clients=n, horizon=steps + 1,
-                        taus=taus)
+    study = Study("theorem1", num_steps=steps, axes={
+        "scheduler": "alg1", "arrivals": "periodic", "n_clients": n,
+        "taus_profile": taus, "seeds": SEEDS})
 
     rows = []
     eta_max = max_step_size(problem.mu, problem.lsmooth)
@@ -44,23 +43,22 @@ def run() -> list[str]:
     g2 = problem.grad_second_moment_bound(radius)
     c = float(variance_constant(problem.p, jnp.asarray(taus, jnp.float32), g2))
     f0 = float(problem.suboptimality(jnp.full((8,), 5.0)))
+    grads_fn = lambda p, k, t: problem.all_grads(p)
 
     for frac in (0.1, 0.25, 0.5):
         eta = frac * eta_max
-        results = run_grid(
-            [scenario],
-            grads_fn=lambda p, k, t: problem.all_grads(p),
-            p=problem.p, optimizer=sgd(eta),
-            params0=jnp.full((8,), 5.0), num_steps=steps, seeds=SEEDS,
-            loss_fn=problem.suboptimality)
-        finals = np.asarray(results["alg1_periodic"].history.loss[:, -100:]
-                            ).mean(axis=1)  # (SEEDS,)
-        emp, emp_std = float(finals.mean()), float(finals.std())
+        results = study.run(
+            grads_fn=grads_fn, p=problem.p, optimizer=sgd(eta),
+            loss_fn=problem.suboptimality, params0=jnp.full((8,), 5.0))
+        stats = results.reduce(
+            metric=lambda cell: cell.history.loss[:, -100:].mean(axis=-1))
+        s = stats["alg1_periodic"]
         bound = float(theorem1_bound(steps, f0, problem.mu, problem.lsmooth,
                                      eta, c))
         rows.append(
             f"theorem1_eta{frac},{(time.time() - t0) * 1e6:.0f},"
-            f"empirical={emp:.4g};empirical_std={emp_std:.2g};"
-            f"seeds={SEEDS};bound={bound:.4g};holds={emp <= bound}")
+            f"empirical={s['mean']:.4g};empirical_std={s['std']:.2g};"
+            f"seeds={s['n_seeds']};n_nan={s['n_nan']};bound={bound:.4g};"
+            f"holds={s['mean'] <= bound}")
     clear_cache()  # each eta traced its own grid; don't pin them all
     return rows

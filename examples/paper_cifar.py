@@ -7,11 +7,11 @@ Setup exactly as the paper: N=40 clients in 4 equal groups A_k = {i : i mod
 params); compared: Algorithm 1, Benchmark 1 (energy-agnostic best-effort),
 Benchmark 2 (wait-for-all), and full-participation oracle.
 
-All four methods run through the scenario engine
-(:func:`repro.experiments.run_grid`): the grid is built from the ``fig1``
-registry entry and executes as one compiled computation per scheduler
-type, with accuracy evaluated inside the compiled loop every
-``--eval-every`` steps. ``--seeds K`` averages curves over K seeds.
+All four methods run through the scenario engine: the ``fig1`` study
+(:func:`repro.experiments.get_study`) executes as one compiled
+computation per scheduler type, with accuracy evaluated inside the
+compiled loop every ``--eval-every`` steps (``ExecutionConfig``).
+``--seeds K`` averages curves over K seeds.
 
 Default is a CPU-sized variant (16×16 images, small CNN, 300 iterations);
 ``--full`` runs the paper-exact 32×32 / ~10⁶-param CNN / 1000 iterations
@@ -33,7 +33,7 @@ from repro.data import (
     group_label_skew_partition,
     make_confusable_image_classification,
 )
-from repro.experiments import get_grid, run_grid
+from repro.experiments import ExecutionConfig, get_study
 from repro.models.cnn import cnn_accuracy, cnn_forward, init_cnn
 from repro.optim import sgd
 
@@ -105,15 +105,15 @@ def main(argv=None):
     print(f"CNN params: {n_params:,}  clients: {N_CLIENTS}  "
           f"taus per group: {TAUS}  iters: {iters}  seeds: {args.seeds}")
 
-    scenarios = get_grid("fig1", n_clients=N_CLIENTS, horizon=iters + 1,
-                         taus=[TAUS[i % N_GROUPS] for i in range(N_CLIENTS)])
-    results = run_grid(
-        scenarios,
+    study = get_study("fig1", n_clients=N_CLIENTS, num_steps=iters,
+                      taus_profile=list(TAUS),
+                      seeds=[args.seed + 1 + s for s in range(args.seeds)])
+    results = study.run(
         grads_fn=per_client_grads_fn(batcher, hw),
-        p=batcher.p, optimizer=sgd(lr), params0=params0, num_steps=iters,
-        seeds=[args.seed + 1 + s for s in range(args.seeds)],
-        eval_fn=lambda p: cnn_accuracy(p, test_x, test_y),
-        eval_every=eval_every)
+        p=batcher.p, optimizer=sgd(lr), params0=params0,
+        config=ExecutionConfig(
+            eval_fn=lambda p: cnn_accuracy(p, test_x, test_y),
+            eval_every=eval_every))
 
     eval_steps = [(k + 1) * eval_every for k in range(iters // eval_every)]
     curves, stds = {}, {}

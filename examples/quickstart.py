@@ -3,8 +3,9 @@
 Builds the paper's setting on a closed-form quadratic: 8 clients with
 heterogeneous periodic energy (τ cycling through 1/5/10/20), and compares
 Algorithm 1 against the paper's two benchmarks and the full-participation
-oracle — the whole scheduler grid, over several seeds, as a handful of
-compiled computations via the scenario engine. Run:
+oracle. The whole grid is one declarative :class:`repro.experiments.Study`
+— named sweep axes, resolved and executed as a handful of compiled
+computations, returning a labeled :class:`GridResult`. Run:
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,44 +15,54 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import make_quadratic
-from repro.experiments import get_grid, grid_summary, run_grid
+from repro.experiments import get_study, resolve_taus_profile
 from repro.optim import sgd
 
 N_CLIENTS, STEPS, ETA, SEEDS = 8, 1000, 0.01, 8  # t=1000 as in paper Fig. 1
-TAUS = [(1, 5, 10, 20)[i % 4] for i in range(N_CLIENTS)]
 
 
 def main():
     problem = make_quadratic(jax.random.PRNGKey(0), N_CLIENTS, dim=10,
                              hetero=1.0)
-    # The paper's 4 methods on periodic (eq. 37) arrivals, from the registry.
-    scenarios = get_grid("fig1", n_clients=N_CLIENTS, horizon=STEPS + 1,
-                         taus=TAUS)
+    # The paper's 4 methods on periodic (eq. 37) arrivals: the registered
+    # "fig1" study (scheduler axis × fixed arrivals × seeds).
+    study = get_study("fig1", n_clients=N_CLIENTS, num_steps=STEPS,
+                      seeds=SEEDS)
+    taus = resolve_taus_profile("paper", N_CLIENTS)
+    print(f"{N_CLIENTS} clients, energy periods {[int(t) for t in taus]}, "
+          f"{SEEDS} seeds")
 
     def grads_fn(params, key, t):
         return problem.all_grads(params, key=key, noise=0.05)
 
-    print(f"{N_CLIENTS} clients, energy periods {TAUS}, {SEEDS} seeds")
-    results = run_grid(
-        scenarios, grads_fn=grads_fn, p=problem.p, optimizer=sgd(ETA),
-        params0=jnp.full((10,), 5.0), num_steps=STEPS, seeds=SEEDS,
-        loss_fn=problem.suboptimality)
+    # Study.run owns simulator construction and jit-cache keying; it
+    # returns a GridResult labeled by the study's sweep axes.
+    results = study.run(grads_fn=grads_fn, p=problem.p, optimizer=sgd(ETA),
+                        loss_fn=problem.suboptimality,
+                        params0=jnp.full((10,), 5.0))
 
-    summary = grid_summary(
-        results, reducer=lambda c: c.history.loss[:, -100:].mean(axis=-1))
+    # NaN-aware mean±std over the seed axis — one diverged seed would be
+    # reported as n_nan, not averaged into the stats.
+    summary = results.reduce(
+        metric=lambda c: c.history.loss[:, -100:].mean(axis=-1))
     print(f"{'scenario':<22} {'final subopt':>22} {'mean weight Σω':>16}")
     finals = {}
     for name, cell in results.items():
         s = summary[name]
-        finals[name] = s["mean"]
+        finals[results.labels(name)["scheduler"]] = s["mean"]
         print(f"{name:<22} {s['mean']:>13.5f} ± {s['std']:<7.5f}"
               f"{float(np.asarray(cell.history.weight_sum).mean()):>16.3f}")
 
-    assert finals["alg1_periodic"] < finals["benchmark1_periodic"], \
-        "Alg1 must beat B1"
-    assert finals["alg1_periodic"] < finals["benchmark2_periodic"], \
-        "Alg1 must beat B2"
+    assert finals["alg1"] < finals["benchmark1"], "Alg1 must beat B1"
+    assert finals["alg1"] < finals["benchmark2"], "Alg1 must beat B2"
     print("\nAlgorithm 1 (unbiased energy-aware) beats both benchmarks ✓")
+
+    # Axis selection: the alg1 row only, as plain records.
+    for rec in results.sel(scheduler="alg1").to_records(
+            metric=lambda c: c.history.loss[:, -100:].mean(axis=-1)):
+        print(f"sel(scheduler='alg1') -> {rec['name']}: "
+              f"{rec['mean']:.5f} ± {rec['std']:.5f} "
+              f"({rec['n_seeds']} seeds, {rec['n_nan']} diverged)")
 
 
 if __name__ == "__main__":

@@ -10,9 +10,13 @@
 from repro.core.energy import (
     Arrivals,
     BinaryArrivals,
+    DayNightArrivals,
     DeterministicArrivals,
     UniformArrivals,
+    arrival_family_names,
     expected_participation,
+    make_arrivals,
+    register_arrival_family,
 )
 from repro.core.scheduling import (
     AlwaysOnScheduler,
@@ -22,6 +26,7 @@ from repro.core.scheduling import (
     EHAppointmentScheduler,
     WaitForAllScheduler,
     make_scheduler,
+    register_scheduler,
     scheduler_names,
 )
 from repro.core.aggregation import (
@@ -51,12 +56,14 @@ from repro.core.convergence import (
 from repro.core.trainer import ClientSimulator, build_energy_train_step
 
 __all__ = [
-    "Arrivals", "BinaryArrivals", "DeterministicArrivals", "UniformArrivals",
-    "expected_participation",
+    "Arrivals", "BinaryArrivals", "DayNightArrivals", "DeterministicArrivals",
+    "UniformArrivals",
+    "arrival_family_names", "expected_participation", "make_arrivals",
+    "register_arrival_family",
     "AlwaysOnScheduler", "BatteryAdaptiveScheduler", "BestEffortScheduler",
     "Decision",
     "EHAppointmentScheduler", "WaitForAllScheduler", "make_scheduler",
-    "scheduler_names",
+    "register_scheduler", "scheduler_names",
     "RavelSpec", "aggregate_client_grads", "aggregate_client_grads_flat",
     "aggregate_client_grads_kernel", "aggregate_client_grads_kernel_per_leaf",
     "client_weights",

@@ -30,7 +30,8 @@ Protocol (structural; all methods pure):
                                         *nominal* scaling constant γ_i
                                         (1/β_i binary, T_i uniform).
 
-Three concrete processes, mirroring the paper exactly:
+Four concrete processes — three mirroring the paper exactly, one
+beyond-paper non-stationary family:
 
 * ``DeterministicArrivals`` — arrival times known in advance (paper
   §II-B-1). Built from an explicit (N, horizon) 0/1 schedule or from
@@ -38,6 +39,17 @@ Three concrete processes, mirroring the paper exactly:
 * ``BinaryArrivals`` — E_i^t ~ Bern(β_i) iid per step (paper eq. 9).
 * ``UniformArrivals`` — exactly one arrival per window of length T_i,
   uniformly placed within the window (paper §II-B-2, "Uniform Arrivals").
+* ``DayNightArrivals`` — non-stationary Bernoulli with a periodic
+  day/night rate profile β_i(t) (cf. Sustainable Federated Learning,
+  arXiv:2102.11274): solar-harvesting devices cycle between a high
+  daytime rate and a low nighttime rate.
+
+The module also owns the **arrival-family registry**
+(:func:`register_arrival_family` / :func:`make_arrivals`): every family
+is constructible by name from the paper-§V per-client period vector τ,
+so sweeps over arrival statistics hold the mean energy rate fixed.
+:mod:`repro.experiments` builds its ``arrivals`` sweep axis from this
+registry.
 """
 
 from __future__ import annotations
@@ -55,6 +67,15 @@ class Arrivals(NamedTuple):
 
     energy: jax.Array  # (N,) float32 in {0, 1}
     gap: jax.Array     # (N,) float32 — T_i^t (det.) or γ_i (stochastic)
+
+
+#: Paper §V experimental profile: 4 client groups with periods (1, 5, 10, 20).
+PAPER_TAUS = (1, 5, 10, 20)
+
+
+def default_taus(n_clients: int) -> np.ndarray:
+    """Paper §V grouping generalized to N clients: client i ∈ group i mod 4."""
+    return np.array([PAPER_TAUS[i % len(PAPER_TAUS)] for i in range(n_clients)])
 
 
 def _concrete(x):
@@ -261,12 +282,201 @@ class UniformArrivals:
         return 1.0 / self.periods.astype(jnp.float32)
 
 
+@dataclasses.dataclass(eq=False)
+class DayNightArrivals:
+    """Non-stationary Bernoulli arrivals with a periodic day/night β_t.
+
+    E_i^t ~ Bern(β_i(t)) where β_i(t) = ``betas_day[i]`` for the first
+    ``day_steps`` steps of every ``period``-step cycle and
+    ``betas_night[i]`` for the remainder — the solar-harvesting regime
+    (cf. arXiv:2102.11274) where devices charge fast in daylight and
+    slowly (but not zero: a device may still scavenge) at night.
+
+    The unbiasedness scale is the *instantaneous* inverse rate
+    γ_i(t) = 1/β_i(t): a best-effort scheduler that scales by it stays
+    unbiased step-by-step even though the process is non-stationary.
+
+    All four hyperparameters are pytree leaves, so a sweep over periods,
+    phases of the day, or rate contrasts is one leaf-stacked batch of
+    processes (a single compiled computation per scheduler structure).
+    """
+
+    betas_day: jax.Array    # (N,) float32 in (0, 1] — leaf
+    betas_night: jax.Array  # (N,) float32 in (0, 1] — leaf
+    period: jax.Array       # () int32, full day/night cycle length — leaf
+    day_steps: jax.Array = None  # () int32, day length; None → period // 2
+
+    def __post_init__(self):
+        period = _concrete(self.period)
+        if self.day_steps is None:
+            if period is None:
+                raise ValueError(
+                    "day_steps=None needs a concrete period to derive from")
+            self.day_steps = jnp.asarray(int(period) // 2, jnp.int32)
+        day_steps = _concrete(self.day_steps)
+        if period is not None and day_steps is not None:
+            if not (np.all(period >= 1) and np.all(day_steps >= 0)
+                    and np.all(day_steps <= period)):
+                raise ValueError(
+                    f"need 0 <= day_steps <= period and period >= 1; got "
+                    f"period={period}, day_steps={day_steps}")
+            self.period = jnp.asarray(period, jnp.int32)
+            self.day_steps = jnp.asarray(day_steps, jnp.int32)
+        for name in ("betas_day", "betas_night"):
+            betas = _concrete(getattr(self, name))
+            if betas is None:
+                continue
+            if betas.ndim < 1:
+                raise ValueError(f"{name} must be (N,), got {betas.shape}")
+            if betas.size and not (np.all(np.isfinite(betas))
+                                   and np.all(betas > 0.0)
+                                   and np.all(betas <= 1.0)):
+                raise ValueError(
+                    f"DayNightArrivals requires finite {name} in (0, 1]; got "
+                    f"min={betas.min():g}, max={betas.max():g}")
+            setattr(self, name, jnp.asarray(betas, jnp.float32))
+
+    @property
+    def n_clients(self) -> int:
+        return self.betas_day.shape[-1]
+
+    @classmethod
+    def from_taus(cls, taus, period: int = 50, day_frac: float = 0.5,
+                  contrast: float = 3.0) -> "DayNightArrivals":
+        """Day/night profile with the paper's mean rate held at 1/τ_i.
+
+        ``contrast`` is the day:night rate ratio. Solving
+        f·β_day + (1−f)·β_night = 1/τ with β_day = contrast·β_night
+        (f = the realized day fraction after rounding to whole steps);
+        when that puts β_day above 1 it is clamped and β_night re-solved
+        so the mean rate stays exactly 1/τ (the τ=1 always-on client
+        degenerates to β_day = β_night = 1).
+        """
+        taus = np.asarray(taus, np.float64)
+        if period < 2:
+            raise ValueError(f"period must be >= 2, got {period}")
+        if not 0.0 < day_frac < 1.0:
+            raise ValueError(f"day_frac must be in (0, 1), got {day_frac}")
+        if contrast < 1.0:
+            raise ValueError(f"contrast must be >= 1, got {contrast}")
+        day_steps = int(np.clip(round(day_frac * period), 1, period - 1))
+        f = day_steps / period
+        night = 1.0 / (taus * (f * contrast + (1.0 - f)))
+        day = contrast * night
+        clamped = day > 1.0
+        day = np.where(clamped, 1.0, day)
+        night = np.where(clamped, (1.0 / taus - f) / (1.0 - f), night)
+        if np.any(night <= 0.0):
+            raise ValueError(
+                f"mean rate 1/τ below day fraction {f:g} for τ="
+                f"{taus[np.asarray(night) <= 0]}; lower day_frac or contrast")
+        return cls(betas_day=day.astype(np.float32),
+                   betas_night=night.astype(np.float32),
+                   period=period, day_steps=day_steps)
+
+    def _beta_t(self, t) -> jax.Array:
+        pos = jnp.asarray(t, jnp.int32) % self.period
+        is_day = pos < self.day_steps
+        return jnp.where(is_day, self.betas_day, self.betas_night)
+
+    def init(self, key):
+        del key
+        return ()
+
+    def arrivals(self, state, t, key):
+        beta = self._beta_t(t)
+        u = jax.random.uniform(key, (self.n_clients,))
+        energy = (u < beta).astype(jnp.float32)
+        gap = 1.0 / beta  # γ_i(t) = 1/β_i(t), the instantaneous scale
+        return state, Arrivals(energy=energy, gap=gap)
+
+    def expected_participation(self) -> jax.Array:
+        p = self.period.astype(jnp.float32)[..., None]
+        d = self.day_steps.astype(jnp.float32)[..., None]
+        return (d * self.betas_day + (p - d) * self.betas_night) / p
+
+
 jax.tree_util.register_dataclass(
     DeterministicArrivals, data_fields=["schedule", "gaps"], meta_fields=[])
 jax.tree_util.register_dataclass(
     BinaryArrivals, data_fields=["betas"], meta_fields=[])
 jax.tree_util.register_dataclass(
     UniformArrivals, data_fields=["periods"], meta_fields=[])
+jax.tree_util.register_dataclass(
+    DayNightArrivals,
+    data_fields=["betas_day", "betas_night", "period", "day_steps"],
+    meta_fields=[])
+
+
+_ARRIVAL_FAMILIES: dict = {}
+
+
+def register_arrival_family(name: str):
+    """Decorator: register a named arrival-family factory.
+
+    A factory has signature ``(n_clients, horizon, taus, **kw) ->
+    process`` where ``taus`` is the per-client period vector that every
+    family interprets so a kind-sweep holds the mean energy rate 1/τ_i
+    fixed. :func:`make_arrivals` dispatches by name; the experiment
+    layer's ``arrivals`` sweep axis is built from this registry.
+    """
+
+    def deco(fn):
+        _ARRIVAL_FAMILIES[name] = fn
+        return fn
+
+    return deco
+
+
+def arrival_family_names() -> list[str]:
+    return sorted(_ARRIVAL_FAMILIES)
+
+
+def make_arrivals(kind: str, n_clients: int, horizon: int, taus=None, **kw):
+    """Arrival-process factory: paper §V profile, generalized to N clients
+    by cycling the group periods (client i ∈ group i mod 4) unless an
+    explicit per-client ``taus`` vector is given.
+
+    The same τ parameterizes every family so sweeps hold the mean energy
+    rate fixed: ``periodic`` arrivals every τ_i steps, ``binary``
+    Bern(1/τ_i), ``uniform`` one arrival per τ_i-window, and
+    ``day_night`` a periodic β_i(t) profile averaging 1/τ_i.
+    """
+    try:
+        factory = _ARRIVAL_FAMILIES[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown arrival kind {kind!r}; have {arrival_family_names()}"
+        ) from None
+    taus = default_taus(n_clients) if taus is None else np.asarray(taus)
+    return factory(n_clients, horizon, taus, **kw)
+
+
+@register_arrival_family("periodic")
+def _periodic(n_clients, horizon, taus, **kw):
+    return DeterministicArrivals.periodic(taus, horizon, **kw)
+
+
+@register_arrival_family("binary")
+def _binary(n_clients, horizon, taus, **kw):
+    del horizon
+    if kw:
+        raise TypeError(f"binary arrivals take no extra kwargs; got {sorted(kw)}")
+    return BinaryArrivals(1.0 / taus)
+
+
+@register_arrival_family("uniform")
+def _uniform(n_clients, horizon, taus, **kw):
+    del horizon
+    if kw:
+        raise TypeError(f"uniform arrivals take no extra kwargs; got {sorted(kw)}")
+    return UniformArrivals(taus)
+
+
+@register_arrival_family("day_night")
+def _day_night(n_clients, horizon, taus, **kw):
+    del horizon
+    return DayNightArrivals.from_taus(taus, **kw)
 
 
 def expected_participation(process) -> jax.Array:

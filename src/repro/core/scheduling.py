@@ -249,6 +249,22 @@ _REGISTRY = {
 }
 
 
+def register_scheduler(name: str, factory=None):
+    """Register a named scheduler factory ``(n_clients, **kw) -> scheduler``.
+
+    Usable directly or as a decorator; the experiment layer's
+    ``scheduler`` sweep axis is built from this registry.
+    """
+    if factory is None:
+        def deco(fn):
+            _REGISTRY[name] = fn
+            return fn
+
+        return deco
+    _REGISTRY[name] = factory
+    return factory
+
+
 def make_scheduler(name: str, n_clients: int, **kw):
     """Scheduler factory — names used across configs/CLI/benchmarks."""
     try:

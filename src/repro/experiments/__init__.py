@@ -1,25 +1,47 @@
-"""Scenario engine: declarative experiment grids, batched execution.
+"""Scenario engine: declarative studies, batched execution, labeled results.
 
-* :mod:`repro.experiments.scenario` — :class:`Scenario` specs, the
-  energy-profile factory, and the named-grid registry.
-* :mod:`repro.experiments.engine` — :func:`run_grid`, which executes a
-  whole scheduler × arrival × seed grid as one compiled computation per
-  component structure (vmap over stacked pytree leaves), plus the
-  sequential per-cell baseline for cross-checks and benchmarking.
+* :mod:`repro.experiments.axes` — the registry of composable sweep axes
+  (scheduler, arrivals, capacity, n_clients, taus_profile, seeds) that a
+  study cross-multiplies into cells.
+* :mod:`repro.experiments.study` — :class:`Study` specs +
+  :class:`ExecutionConfig` + the named-study registry (``fig1``,
+  ``fig1_grid``, ``capacity_sweep``, ``day_night``,
+  ``population_scaling``); :meth:`Study.run` owns simulator construction
+  and dispatch.
+* :mod:`repro.experiments.results` — :class:`GridResult`, the labeled
+  result table (``.sel`` / ``.reduce`` / ``.to_records`` / ``.to_json``)
+  with NaN-aware seed statistics.
+* :mod:`repro.experiments.scenario` — :class:`Scenario` cell specs and
+  the legacy grid-registry shims (:func:`get_grid`).
+* :mod:`repro.experiments.engine` — :func:`execute_cells`, the single
+  execution core: one compiled computation per component structure
+  (vmap over stacked pytree leaves), a sequential per-cell baseline, and
+  the legacy :func:`run_grid` shims.
 * :mod:`repro.experiments.placement` — device placement for
-  ``run_grid(..., mesh=...)``: each group's (scenario × seed) cells are
+  ``mesh=``-sharded execution: each group's (scenario × seed) cells are
   flattened into one cell axis, padded to a device-divisible count, and
   executed under ``shard_map`` (DESIGN.md §5).
 """
 
+from repro.experiments.axes import (
+    AxisSpec,
+    axis_names,
+    get_axis,
+    register_axis,
+    register_taus_profile,
+    resolve_taus_profile,
+)
 from repro.experiments.engine import (
     CellResult,
+    check_unique_names,
     clear_cache,
+    execute_cells,
     grid_summary,
     run_grid,
     run_grid_sequential,
 )
 from repro.experiments.placement import make_cell_mesh
+from repro.experiments.results import GridResult, default_metric, seed_stats
 from repro.experiments.scenario import (
     ARRIVAL_KINDS,
     FIG1_SCHEDULERS,
@@ -32,11 +54,23 @@ from repro.experiments.scenario import (
     register_grid,
     scenario_grid,
 )
+from repro.experiments.study import (
+    ExecutionConfig,
+    Study,
+    build_components,
+    get_study,
+    register_study,
+    study_names,
+)
 
 __all__ = [
     "ARRIVAL_KINDS", "FIG1_SCHEDULERS", "PAPER_TAUS",
-    "CellResult", "Scenario", "clear_cache", "default_taus", "get_grid",
-    "grid_names", "make_cell_mesh",
-    "grid_summary", "make_energy_process", "register_grid", "run_grid",
-    "run_grid_sequential", "scenario_grid",
+    "AxisSpec", "CellResult", "ExecutionConfig", "GridResult", "Scenario",
+    "Study",
+    "axis_names", "build_components", "check_unique_names", "clear_cache",
+    "default_metric", "default_taus", "execute_cells", "get_axis", "get_grid",
+    "get_study", "grid_names", "grid_summary", "make_cell_mesh",
+    "make_energy_process", "register_axis", "register_grid", "register_study",
+    "register_taus_profile", "resolve_taus_profile", "run_grid",
+    "run_grid_sequential", "scenario_grid", "seed_stats", "study_names",
 ]

@@ -1,0 +1,212 @@
+"""Sweep axes: the named, composable dimensions of a Study.
+
+An **axis** is a registered factory that knows how to apply one swept
+value to a cell draft (the constructor arguments of a
+:class:`~repro.experiments.scenario.Scenario`) and how to format that
+value into the cell's name. The cross-product of a Study's axes resolves
+to Scenario cells exactly as the grid engine batches them — same
+structure-grouping, same one-compile-per-structure guarantee.
+
+Built-in axes (canonical resolution order):
+
+    scheduler     registry names from repro.core.scheduling
+    arrivals      family names from repro.core.energy (str, or
+                  (kind, kwargs) for hyperparameterized families such as
+                  ("day_night", {"period": 50}))
+    capacity      battery capacity -> scheduler_kwargs["capacity"]
+    n_clients     client-population size (per-value structure group)
+    taus_profile  named / explicit per-client energy-period profile
+    seeds         seed count or explicit list (vmapped by the engine,
+                  never part of cell naming)
+
+The registry is open: :func:`register_axis` adds project-specific axes
+(e.g. an EMA-rate sweep) that compose with the built-ins. Scheduler and
+arrival *values* are validated against their own registries at
+resolution time, so one layer of named factories subsumes
+``make_scheduler`` / ``make_arrivals`` / the legacy grid registry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro.core.energy import default_taus
+
+#: Canonical order in which axes cross-multiply and appear in cell names.
+AXIS_ORDER = ("scheduler", "arrivals", "capacity", "n_clients",
+              "taus_profile", "seeds")
+
+
+def _default_is_value(v) -> bool:
+    return isinstance(v, str) or not isinstance(v, (list, tuple))
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisSpec:
+    """One registered sweep axis.
+
+    ``apply(draft, value)`` folds a swept value into the cell draft (a
+    dict of Scenario constructor arguments). ``fmt(value, fixed)``
+    renders the value for the cell name — ``None`` omits it (the
+    convention: identity axes *always* appear, shape/profile axes only
+    when actually swept, seeds never). ``is_value(v)`` distinguishes one
+    axis value from a sweep list — needed because some single values are
+    themselves sequences (an explicit taus profile, an
+    ``(arrival_kind, kwargs)`` pair).
+    """
+
+    name: str
+    apply: Callable[[dict, Any], None]
+    fmt: Callable[[Any, bool], str | None]
+    is_value: Callable[[Any], bool] = _default_is_value
+    doc: str = ""
+
+
+_AXES: dict[str, AxisSpec] = {}
+
+
+def register_axis(name: str, *, apply, fmt=None, is_value=None,
+                  doc: str = "") -> AxisSpec:
+    """Register a sweep axis. ``fmt`` defaults to omit-from-name."""
+    spec = AxisSpec(name=name, apply=apply,
+                    fmt=fmt or (lambda v, fixed: None),
+                    is_value=is_value or _default_is_value, doc=doc)
+    _AXES[name] = spec
+    return spec
+
+
+def axis_names() -> list[str]:
+    """All registered axes, canonical order first, extensions after."""
+    ordered = [n for n in AXIS_ORDER if n in _AXES]
+    return ordered + sorted(set(_AXES) - set(ordered))
+
+
+def get_axis(name: str) -> AxisSpec:
+    try:
+        return _AXES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown sweep axis {name!r}; have {axis_names()}") from None
+
+
+# ------------------------------------------------------------ taus profiles
+
+_TAUS_PROFILES: dict[str, Callable[[int], np.ndarray]] = {
+    "paper": default_taus,
+}
+
+
+def register_taus_profile(name: str, fn: Callable[[int], Any]) -> None:
+    """Register a named per-client energy-period profile ``fn(n) -> (N,)``."""
+    _TAUS_PROFILES[name] = fn
+
+
+def resolve_taus_profile(profile, n_clients: int) -> np.ndarray:
+    """A profile is a registered name, an explicit per-client sequence
+    (cycled over N like the paper's group assignment), or a callable."""
+    if callable(profile):
+        return np.asarray(profile(n_clients))
+    if isinstance(profile, str):
+        try:
+            fn = _TAUS_PROFILES[profile]
+        except KeyError:
+            raise ValueError(
+                f"unknown taus profile {profile!r}; have "
+                f"{sorted(_TAUS_PROFILES)}") from None
+        return np.asarray(fn(n_clients))
+    taus = np.asarray(profile)
+    if taus.ndim != 1 or taus.size == 0:
+        raise ValueError(f"taus profile must be a 1-D sequence, got "
+                         f"shape {taus.shape}")
+    return np.array([taus[i % taus.size] for i in range(n_clients)])
+
+
+def _fmt_taus(profile, fixed: bool) -> str | None:
+    if fixed:  # not varying across cells -> not part of cell identity
+        return None
+    if isinstance(profile, str):
+        return profile
+    if callable(profile):
+        return getattr(profile, "__name__", "taus")
+    return "taus" + "x".join(f"{t:g}" for t in np.asarray(profile).reshape(-1))
+
+
+# ------------------------------------------------------------ built-in axes
+
+def _apply_scheduler(draft: dict, value) -> None:
+    draft["scheduler"] = str(value)
+
+
+def _apply_arrivals(draft: dict, value) -> None:
+    if isinstance(value, tuple):
+        kind, kw = value
+        draft["arrivals"] = str(kind)
+        draft["arrival_kwargs"] = dict(kw)
+    else:
+        draft["arrivals"] = str(value)
+
+
+def _fmt_arrivals(value, fixed: bool) -> str:
+    if isinstance(value, tuple):
+        kind, kw = value
+        if fixed:  # kwargs don't vary across cells — kind identifies it
+            return str(kind)
+        tail = "".join(f"_{k}{v:g}" if isinstance(v, (int, float))
+                       else f"_{k}{v}" for k, v in sorted(kw.items()))
+        return f"{kind}{tail}"
+    return str(value)
+
+
+def _apply_capacity(draft: dict, value) -> None:
+    draft.setdefault("scheduler_kwargs", {})["capacity"] = float(value)
+
+
+def _apply_n_clients(draft: dict, value) -> None:
+    draft["n_clients"] = int(value)
+
+
+def _apply_taus_profile(draft: dict, value) -> None:
+    draft["taus"] = resolve_taus_profile(value, draft["n_clients"])
+
+
+def _arrivals_is_value(v) -> bool:
+    if isinstance(v, tuple) and len(v) == 2 and isinstance(v[0], str) \
+            and isinstance(v[1], dict):
+        return True  # one hyperparameterized family, not a 2-kind sweep
+    return _default_is_value(v)
+
+
+def _taus_is_value(v) -> bool:
+    if isinstance(v, (list, tuple)) and v \
+            and all(isinstance(t, (int, float, np.integer, np.floating))
+                    for t in v):
+        return True  # one explicit per-client period vector
+    return _default_is_value(v)
+
+
+register_axis(
+    "scheduler", apply=_apply_scheduler, fmt=lambda v, fixed: str(v),
+    doc="scheduler registry name (repro.core.scheduling)")
+register_axis(
+    "arrivals", apply=_apply_arrivals, fmt=_fmt_arrivals,
+    is_value=_arrivals_is_value,
+    doc="arrival-family name (repro.core.energy), or (kind, kwargs)")
+register_axis(
+    "capacity", apply=_apply_capacity,
+    fmt=lambda v, fixed: None if fixed else f"c{v:g}",
+    doc="battery capacity -> scheduler_kwargs['capacity']")
+register_axis(
+    "n_clients", apply=_apply_n_clients,
+    fmt=lambda v, fixed: None if fixed else f"n{v}",
+    doc="client-population size (one structure group per value)")
+register_axis(
+    "taus_profile", apply=_apply_taus_profile, fmt=_fmt_taus,
+    is_value=_taus_is_value,
+    doc="per-client energy-period profile: registered name, sequence, "
+        "or callable(n)")
+register_axis(
+    "seeds", apply=lambda draft, value: None,
+    doc="seed count or explicit list; vmapped by the engine")

@@ -102,56 +102,70 @@ def _seed_keys(seeds):
     return seeds, jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
 
 
-def run_grid(
+def check_unique_names(scenarios: Sequence[Scenario]) -> list[str]:
+    """Scenario names key the result mapping — duplicates would silently
+    overwrite cells. Shared by every execution path (batched, sequential,
+    Study.resolve)."""
+    names = [sc.name for sc in scenarios]
+    if len(set(names)) != len(names):
+        dups = sorted({n for n in names if names.count(n) > 1})
+        raise ValueError(
+            f"scenario names must be unique, got duplicates {dups} in {names}")
+    return names
+
+
+def _resolve_sim(sim, grads_fn, p, optimizer, loss_fn, use_kernel):
+    if sim is not None:
+        return sim
+    if grads_fn is None or p is None or optimizer is None:
+        raise ValueError(
+            "either pass a prebuilt sim= or all of grads_fn/p/optimizer")
+    return ClientSimulator(grads_fn=grads_fn, p=p, optimizer=optimizer,
+                           loss_fn=loss_fn, use_kernel=use_kernel)
+
+
+def execute_cells(
     scenarios: Sequence[Scenario],
     *,
-    grads_fn=None,
-    p=None,
-    optimizer=None,
+    sim: ClientSimulator,
     params0,
     num_steps: int,
     seeds: int | Sequence[int] = 8,
-    loss_fn=None,
-    use_kernel: bool = False,
     eval_fn=None,
     eval_every: int = 0,
-    sim: ClientSimulator | None = None,
     mesh=None,
+    sequential: bool = False,
 ) -> dict[str, CellResult]:
-    """Execute every scenario × seed cell, batched per component structure.
+    """Execute scenario × seed cells with a prebuilt simulator.
 
-    ``seeds`` is either a count (seeds 0..R−1) or an explicit list; seed
-    ``s`` runs under ``jax.random.PRNGKey(s)``, bit-identical to a
-    standalone ``ClientSimulator.run(PRNGKey(s), ...)`` of the same cell
-    (up to float reassociation introduced by batching).
-
-    ``mesh`` (a 1-D ``jax.sharding.Mesh``, e.g.
-    :func:`repro.experiments.placement.make_cell_mesh`) shards each
-    group's flattened (scenario × seed) cell axis across devices
-    (DESIGN.md §5). Without a mesh — or with a 1-device mesh — execution
-    takes the single-device vmap path, bit-for-bit as before.
-
-    The jit cache is keyed on ``sim`` by identity, so repeated calls
-    with a fresh simulator (or fresh grads_fn/eval_fn lambdas) re-trace
-    every group. A driver issuing the same grid many times should build
-    the simulator once and pass it via ``sim`` (then grads_fn/p/
-    optimizer/loss_fn/use_kernel are taken from it and the keyword
-    values are ignored).
-
-    Returns ``{scenario.name: CellResult}`` in input order.
+    The single execution core behind :meth:`Study.run` and the legacy
+    :func:`run_grid` / :func:`run_grid_sequential` shims. Batched mode
+    groups cells by component structure and runs one compiled
+    vmap(scenarios)∘vmap(seeds) computation per group (sharded across
+    ``mesh`` when given); ``sequential=True`` runs one traced scan per
+    cell — the pre-refactor model kept for cross-checks and timing.
     """
     scenarios = list(scenarios)
-    names = [sc.name for sc in scenarios]
-    if len(set(names)) != len(names):
-        raise ValueError(f"scenario names must be unique, got {names}")
-    _, keys = _seed_keys(seeds)
+    names = check_unique_names(scenarios)
+    seed_list, keys = _seed_keys(seeds)
 
-    if sim is None:
-        if grads_fn is None or p is None or optimizer is None:
-            raise ValueError(
-                "either pass a prebuilt sim= or all of grads_fn/p/optimizer")
-        sim = ClientSimulator(grads_fn=grads_fn, p=p, optimizer=optimizer,
-                              loss_fn=loss_fn, use_kernel=use_kernel)
+    if sequential:
+        if mesh is not None:
+            raise ValueError("sequential execution does not take a mesh")
+        results = {}
+        for sc in scenarios:
+            scheduler, energy = sc.build()
+            per_seed = []
+            for s in seed_list:
+                out = sim.run(jax.random.PRNGKey(int(s)), params0, num_steps,
+                              scheduler=scheduler, energy=energy,
+                              eval_fn=eval_fn, eval_every=eval_every)
+                cell = CellResult(*out) if eval_fn is not None \
+                    else CellResult(*out, None)
+                per_seed.append(cell)
+            results[sc.name] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *per_seed)
+        return results
 
     sharded = mesh is not None and mesh.size > 1
     if sharded:
@@ -180,6 +194,55 @@ def run_grid(
     return dict(zip(names, results))
 
 
+def run_grid(
+    scenarios: Sequence[Scenario],
+    *,
+    grads_fn=None,
+    p=None,
+    optimizer=None,
+    params0,
+    num_steps: int,
+    seeds: int | Sequence[int] = 8,
+    loss_fn=None,
+    use_kernel: bool = False,
+    eval_fn=None,
+    eval_every: int = 0,
+    sim: ClientSimulator | None = None,
+    mesh=None,
+) -> dict[str, CellResult]:
+    """Execute every scenario × seed cell, batched per component structure.
+
+    .. deprecated:: prefer :meth:`repro.experiments.Study.run`, which
+       owns simulator construction and returns a labeled
+       :class:`~repro.experiments.GridResult`. This shim remains for
+       hand-built irregular scenario lists.
+
+    ``seeds`` is either a count (seeds 0..R−1) or an explicit list; seed
+    ``s`` runs under ``jax.random.PRNGKey(s)``, bit-identical to a
+    standalone ``ClientSimulator.run(PRNGKey(s), ...)`` of the same cell
+    (up to float reassociation introduced by batching).
+
+    ``mesh`` (a 1-D ``jax.sharding.Mesh``, e.g.
+    :func:`repro.experiments.placement.make_cell_mesh`) shards each
+    group's flattened (scenario × seed) cell axis across devices
+    (DESIGN.md §5). Without a mesh — or with a 1-device mesh — execution
+    takes the single-device vmap path, bit-for-bit as before.
+
+    The jit cache is keyed on ``sim`` by identity, so repeated calls
+    with a fresh simulator (or fresh grads_fn/eval_fn lambdas) re-trace
+    every group. A driver issuing the same grid many times should build
+    the simulator once and pass it via ``sim`` (then grads_fn/p/
+    optimizer/loss_fn/use_kernel are taken from it and the keyword
+    values are ignored).
+
+    Returns ``{scenario.name: CellResult}`` in input order.
+    """
+    sim = _resolve_sim(sim, grads_fn, p, optimizer, loss_fn, use_kernel)
+    return execute_cells(scenarios, sim=sim, params0=params0,
+                         num_steps=num_steps, seeds=seeds, eval_fn=eval_fn,
+                         eval_every=eval_every, mesh=mesh)
+
+
 def run_grid_sequential(
     scenarios: Sequence[Scenario],
     *,
@@ -197,47 +260,29 @@ def run_grid_sequential(
 ) -> dict[str, CellResult]:
     """The pre-refactor execution model: one traced scan per cell.
 
-    Numerically equivalent to :func:`run_grid` (same per-seed keys);
-    kept as the baseline for correctness cross-checks and for the
-    batched-vs-sequential wall-clock comparison in ``benchmarks/fig1.py``.
+    .. deprecated:: prefer ``Study.run(config=ExecutionConfig(
+       sequential=True))``. Numerically equivalent to :func:`run_grid`
+       (same per-seed keys); kept as the baseline for correctness
+       cross-checks and for the batched-vs-sequential wall-clock
+       comparison in ``benchmarks/fig1.py``.
     """
-    scenarios = list(scenarios)
-    seed_list, _ = _seed_keys(seeds)
-    if sim is None:
-        if grads_fn is None or p is None or optimizer is None:
-            raise ValueError(
-                "either pass a prebuilt sim= or all of grads_fn/p/optimizer")
-        sim = ClientSimulator(grads_fn=grads_fn, p=p, optimizer=optimizer,
-                              loss_fn=loss_fn, use_kernel=use_kernel)
-    results = {}
-    for sc in scenarios:
-        scheduler, energy = sc.build()
-        per_seed = []
-        for s in seed_list:
-            out = sim.run(jax.random.PRNGKey(int(s)), params0, num_steps,
-                          scheduler=scheduler, energy=energy,
-                          eval_fn=eval_fn, eval_every=eval_every)
-            cell = CellResult(*out) if eval_fn is not None \
-                else CellResult(*out, None)
-            per_seed.append(cell)
-        results[sc.name] = jax.tree_util.tree_map(
-            lambda *xs: jnp.stack(xs), *per_seed)
-    return results
+    sim = _resolve_sim(sim, grads_fn, p, optimizer, loss_fn, use_kernel)
+    return execute_cells(scenarios, sim=sim, params0=params0,
+                         num_steps=num_steps, seeds=seeds, eval_fn=eval_fn,
+                         eval_every=eval_every, sequential=True)
 
 
 def grid_summary(results: dict[str, CellResult], reducer=None) -> dict[str, dict]:
-    """Per-scenario mean±std over the seed axis of a scalar metric.
+    """Per-scenario NaN-aware mean±std over the seed axis of a metric.
 
     ``reducer(cell) -> (R,)`` extracts one scalar per seed; default is
-    the mean loss over the final 10% of steps.
+    the mean loss over the final 10% of steps. Diverged seeds (NaN/inf)
+    are excluded from mean/std and counted in ``n_nan``
+    (:func:`repro.experiments.results.seed_stats` — the same reduction
+    backing :meth:`GridResult.reduce`).
     """
-    if reducer is None:
-        def reducer(cell):
-            tail = max(1, cell.history.loss.shape[-1] // 10)
-            return cell.history.loss[..., -tail:].mean(axis=-1)
-    out = {}
-    for name, cell in results.items():
-        vals = jnp.asarray(reducer(cell))
-        out[name] = {"mean": float(vals.mean()), "std": float(vals.std()),
-                     "n_seeds": int(vals.shape[0])}
-    return out
+    from repro.experiments import results as results_mod
+
+    reducer = results_mod.default_metric if reducer is None else reducer
+    return {name: results_mod.seed_stats(reducer(cell))
+            for name, cell in results.items()}

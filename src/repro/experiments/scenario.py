@@ -6,59 +6,45 @@ two pytree components. Scenarios are *host-side specs* (plain
 dataclasses, not pytrees) — the pytrees they build are what crosses
 ``jit`` / ``vmap`` boundaries.
 
-The module also owns:
+Scenarios are what :meth:`repro.experiments.Study.resolve` produces from
+its sweep axes; writing them by hand remains supported for one-off
+irregular cells. The module also keeps two **legacy shims**:
 
-* :func:`make_energy_process` — the paper-§V energy-profile factory
-  (previously a private helper of ``repro.launch.train``; it lives here
-  so drivers, benchmarks, examples and tests all build arrival processes
-  from one registry).
-* a **grid registry** of named scenario lists (``fig1``,
-  ``fig1_grid``, …) so benchmarks/examples refer to whole experiment
-  grids by name: ``get_grid("fig1_grid", n_clients=40, horizon=1001)``.
+* :func:`make_energy_process` — now a thin delegate of
+  :func:`repro.core.energy.make_arrivals` (the registry that owns
+  arrival families, including the non-stationary ``day_night`` profile).
+* :func:`get_grid` / :func:`register_grid` — the pre-Study named-grid
+  registry. Built-in names (``fig1``, ``fig1_grid``, ``capacity_sweep``,
+  …) live in the Study registry (:mod:`repro.experiments.study`);
+  ``get_grid`` resolves them to a plain scenario list for callers that
+  still drive :func:`repro.experiments.run_grid` directly.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Iterable, Sequence
+from typing import Callable, Iterable, Sequence
 
 import numpy as np
 
 from repro.core.energy import (
-    BinaryArrivals,
-    DeterministicArrivals,
-    UniformArrivals,
+    PAPER_TAUS,
+    default_taus,
+    make_arrivals,
 )
 from repro.core.scheduling import make_scheduler
-
-#: Paper §V experimental profile: 4 client groups with periods (1, 5, 10, 20).
-PAPER_TAUS = (1, 5, 10, 20)
 
 ARRIVAL_KINDS = ("periodic", "binary", "uniform")
 
 
-def default_taus(n_clients: int) -> np.ndarray:
-    """Paper §V grouping generalized to N clients: client i ∈ group i mod 4."""
-    return np.array([PAPER_TAUS[i % len(PAPER_TAUS)] for i in range(n_clients)])
+def make_energy_process(kind: str, n_clients: int, horizon: int, taus=None,
+                        **kw):
+    """Deprecated alias of :func:`repro.core.energy.make_arrivals`.
 
-
-def make_energy_process(kind: str, n_clients: int, horizon: int, taus=None):
-    """Paper §V profile: 4 groups, periods (1, 5, 10, 20) — generalized to
-    N clients by cycling the group periods (client i ∈ group i mod 4).
-
-    The same per-client period vector τ parameterizes all three arrival
-    families so a kind-sweep holds the mean energy rate fixed:
-    ``periodic`` arrivals every τ_i steps, ``binary`` Bern(1/τ_i), and
-    ``uniform`` one arrival per τ_i-window.
+    Kept so seed-era callers keep working; the registry (and the
+    ``day_night`` non-stationary family) lives in ``repro.core.energy``.
     """
-    taus = default_taus(n_clients) if taus is None else np.asarray(taus)
-    if kind == "periodic":
-        return DeterministicArrivals.periodic(taus, horizon)
-    if kind == "binary":
-        return BinaryArrivals(1.0 / taus)
-    if kind == "uniform":
-        return UniformArrivals(taus)
-    raise ValueError(f"unknown arrival kind {kind!r}; have {ARRIVAL_KINDS}")
+    return make_arrivals(kind, n_clients, horizon, taus=taus, **kw)
 
 
 @dataclasses.dataclass
@@ -67,9 +53,9 @@ class Scenario:
 
     ``scheduler`` / ``arrivals`` are registry names; ``taus`` is the
     per-client period vector shared across arrival kinds (None → the
-    paper's cycling (1, 5, 10, 20) profile); ``scheduler_kwargs`` feeds
-    extra hyperparameters (e.g. battery capacity) to the scheduler
-    factory.
+    paper's cycling (1, 5, 10, 20) profile); ``scheduler_kwargs`` /
+    ``arrival_kwargs`` feed extra hyperparameters (e.g. battery
+    capacity, day/night cycle length) to the component factories.
     """
 
     name: str
@@ -79,13 +65,14 @@ class Scenario:
     horizon: int
     taus: Sequence[int] | None = None
     scheduler_kwargs: dict = dataclasses.field(default_factory=dict)
+    arrival_kwargs: dict = dataclasses.field(default_factory=dict)
 
     def build(self):
         """Materialize the (scheduler, energy) pytree pair."""
         scheduler = make_scheduler(self.scheduler, self.n_clients,
                                    **self.scheduler_kwargs)
-        energy = make_energy_process(self.arrivals, self.n_clients,
-                                     self.horizon, taus=self.taus)
+        energy = make_arrivals(self.arrivals, self.n_clients, self.horizon,
+                               taus=self.taus, **self.arrival_kwargs)
         return scheduler, energy
 
 
@@ -114,7 +101,13 @@ _GRID_REGISTRY: dict[str, Callable[..., list[Scenario]]] = {}
 
 
 def register_grid(name: str):
-    """Decorator: register a named scenario-grid factory."""
+    """Decorator: register a named scenario-grid factory (legacy).
+
+    New named experiments should be registered as Studies
+    (:func:`repro.experiments.register_study`); this hook remains for
+    factories that produce irregular scenario lists no axis
+    cross-product expresses.
+    """
 
     def deco(fn):
         _GRID_REGISTRY[name] = fn
@@ -124,42 +117,29 @@ def register_grid(name: str):
 
 
 def get_grid(name: str, **kw) -> list[Scenario]:
-    try:
-        factory = _GRID_REGISTRY[name]
-    except KeyError:
+    """Resolve a named grid to a scenario list (legacy entry point).
+
+    Dispatches to the legacy factory registry first, then to the Study
+    registry (translating the old ``horizon=`` / ``taus=`` keywords), so
+    seed-era callers see the registries as one namespace.
+    """
+    if name in _GRID_REGISTRY:
+        return _GRID_REGISTRY[name](**kw)
+    from repro.experiments.study import get_study, study_names
+
+    if name not in study_names():
         raise ValueError(
-            f"unknown scenario grid {name!r}; have {sorted(_GRID_REGISTRY)}"
-        ) from None
-    return factory(**kw)
+            f"unknown scenario grid {name!r}; have {grid_names()}")
+    if "horizon" in kw:
+        kw["num_steps"] = kw.pop("horizon") - 1
+    if "taus" in kw:
+        taus = kw.pop("taus")
+        if taus is not None:
+            kw["taus_profile"] = taus
+    return get_study(name, **kw).resolve()
 
 
 def grid_names() -> list[str]:
-    return sorted(_GRID_REGISTRY)
+    from repro.experiments.study import study_names
 
-
-@register_grid("fig1")
-def _fig1(n_clients: int = 40, horizon: int = 1001, taus=None) -> list[Scenario]:
-    """Paper Figure 1 verbatim: 4 methods on periodic (eq. 37) arrivals."""
-    return scenario_grid(FIG1_SCHEDULERS, ("periodic",), n_clients, horizon,
-                         taus=taus)
-
-
-@register_grid("fig1_grid")
-def _fig1_grid(n_clients: int = 40, horizon: int = 1001, taus=None) -> list[Scenario]:
-    """Scenario-diversity extension: 4 methods × all 3 arrival families."""
-    return scenario_grid(FIG1_SCHEDULERS, ARRIVAL_KINDS, n_clients, horizon,
-                         taus=taus)
-
-
-@register_grid("capacity_sweep")
-def _capacity_sweep(n_clients: int = 8, horizon: int = 2001,
-                    capacities: Sequence[float] = (1.0, 2.0, 4.0),
-                    taus=None) -> list[Scenario]:
-    """Battery-capacity sweep for the beyond-paper adaptive scheduler —
-    one leaf-stacked compiled computation for the whole sweep."""
-    return [
-        Scenario(name=f"battery_c{c:g}", scheduler="battery_adaptive",
-                 arrivals="binary", n_clients=n_clients, horizon=horizon,
-                 taus=taus, scheduler_kwargs={"capacity": float(c)})
-        for c in capacities
-    ]
+    return sorted(set(_GRID_REGISTRY) | set(study_names()))

@@ -1,8 +1,9 @@
 """Energy-aware distributed LM training driver.
 
 Runs any ``--arch`` (full or ``--reduced`` smoke variant) under any
-scheduler (alg1 / alg2 / benchmark1 / benchmark2 / oracle) and energy
-profile. The energy scheduler runs as a tiny jitted state machine beside
+scheduler (alg1 / alg2 / benchmark1 / benchmark2 / oracle) and any
+registered arrival family (periodic / binary / uniform / the
+non-stationary day_night profile). The energy scheduler runs as a tiny jitted state machine beside
 the jitted SPMD train step; the (mask, scale) it emits each step is the
 paper's eq. (11/12) weighting, applied inside the train step with zero
 extra collective traffic.
@@ -24,9 +25,9 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
-from repro.core.scheduling import make_scheduler
+from repro.core.energy import arrival_family_names
 from repro.data import GlobalBatcher, make_lm_tokens
-from repro.experiments import make_energy_process
+from repro.experiments import build_components
 from repro.launch.steps import make_train_step
 from repro.models import count_params, init_lm
 from repro.optim import adamw
@@ -49,7 +50,7 @@ def main(argv=None):
     ap.add_argument("--scheduler", default="auto",
                     help="auto|alg1|alg2|benchmark1|benchmark2|oracle")
     ap.add_argument("--arrivals", default="periodic",
-                    choices=["periodic", "binary", "uniform"])
+                    choices=arrival_family_names())
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
@@ -72,9 +73,11 @@ def main(argv=None):
                             global_batch=args.global_batch)
 
     sched_name = default_scheduler_for(args.arrivals, args.scheduler)
-    scheduler = make_scheduler(sched_name, args.n_clients)
-    energy = make_energy_process(args.arrivals, args.n_clients,
-                                 horizon=args.steps + 1)
+    # Same axis registry the Study API sweeps over — a driver run is the
+    # one-cell special case of a study.
+    scheduler, energy = build_components(
+        scheduler=sched_name, arrivals=args.arrivals,
+        n_clients=args.n_clients, horizon=args.steps + 1)
 
     init_state, train_step = make_train_step(
         cfg, args.n_clients, optimizer=adamw(args.lr))

@@ -7,9 +7,12 @@ import pytest
 
 from repro.core.energy import (
     BinaryArrivals,
+    DayNightArrivals,
     DeterministicArrivals,
     UniformArrivals,
+    arrival_family_names,
     expected_participation,
+    make_arrivals,
 )
 
 
@@ -111,6 +114,57 @@ def test_uniform_rejects_nonpositive_period():
         UniformArrivals([4, 0])
     with pytest.raises(ValueError):
         UniformArrivals([4.0, np.nan])
+
+
+def test_day_night_rate_profile():
+    """β_i(t) follows the day/night square wave; realized day and night
+    rates bracket the mean, which stays at the paper's 1/τ_i."""
+    taus = [1, 5, 10, 20]
+    dn = DayNightArrivals.from_taus(taus, period=50, day_frac=0.5,
+                                    contrast=3.0)
+    np.testing.assert_allclose(expected_participation(dn),
+                               [1.0, 0.2, 0.1, 0.05], rtol=1e-6)
+    energy, gap = collect(dn, 50 * 120, seed=1)
+    e = energy.reshape(-1, 50, len(taus))
+    day, night = e[:, :25].mean((0, 1)), e[:, 25:].mean((0, 1))
+    np.testing.assert_allclose(energy.mean(0), 1.0 / np.asarray(taus),
+                               atol=0.02)
+    np.testing.assert_allclose(day, np.asarray(dn.betas_day), atol=0.03)
+    np.testing.assert_allclose(night, np.asarray(dn.betas_night), atol=0.03)
+    assert np.all(np.asarray(dn.betas_day)[1:]
+                  > np.asarray(dn.betas_night)[1:])
+    # γ(t) is the instantaneous inverse rate, switching with the phase
+    np.testing.assert_allclose(gap[0], 1.0 / np.asarray(dn.betas_day),
+                               rtol=1e-6)
+    np.testing.assert_allclose(gap[25], 1.0 / np.asarray(dn.betas_night),
+                               rtol=1e-6)
+
+
+def test_day_night_validation():
+    with pytest.raises(ValueError, match="0, 1"):
+        DayNightArrivals([0.5, 0.0], [0.1, 0.1], period=10)
+    with pytest.raises(ValueError, match="day_steps"):
+        DayNightArrivals([0.5], [0.1], period=10, day_steps=11)
+    with pytest.raises(ValueError, match="period"):
+        DayNightArrivals.from_taus([2], period=1)
+    with pytest.raises(ValueError, match="day_frac"):
+        DayNightArrivals.from_taus([2], day_frac=1.5)
+    with pytest.raises(ValueError, match="contrast"):
+        DayNightArrivals.from_taus([2], contrast=0.5)
+
+
+def test_arrival_family_registry():
+    assert {"periodic", "binary", "uniform", "day_night"} \
+        <= set(arrival_family_names())
+    dn = make_arrivals("day_night", 4, 100, period=20)
+    assert type(dn) is DayNightArrivals
+    assert int(dn.period) == 20
+    np.testing.assert_allclose(expected_participation(dn),
+                               [1.0, 0.2, 0.1, 0.05], rtol=1e-6)
+    with pytest.raises(ValueError, match="unknown arrival kind"):
+        make_arrivals("lunar", 4, 100)
+    with pytest.raises(TypeError, match="no extra kwargs"):
+        make_arrivals("binary", 4, 100, period=20)
 
 
 def test_gap_table_vectorized_matches_reference():

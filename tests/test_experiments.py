@@ -9,6 +9,7 @@ import pytest
 from repro.core import make_quadratic, make_scheduler, scheduler_names
 from repro.core.energy import (
     BinaryArrivals,
+    DayNightArrivals,
     DeterministicArrivals,
     UniformArrivals,
     expected_participation,
@@ -31,6 +32,7 @@ def all_processes():
         DeterministicArrivals.periodic([1, 4, 8], horizon=32),
         BinaryArrivals([0.2, 0.5, 1.0]),
         UniformArrivals([2, 5, 9]),
+        DayNightArrivals.from_taus([1, 4, 8], period=10),
     ]
 
 
@@ -174,6 +176,9 @@ def test_make_energy_process_kinds():
     uniform = make_energy_process("uniform", 4, 21)
     np.testing.assert_allclose(expected_participation(uniform),
                                [1.0, 0.2, 0.1, 0.05])
+    day_night = make_energy_process("day_night", 4, 21, period=20)
+    np.testing.assert_allclose(expected_participation(day_night),
+                               [1.0, 0.2, 0.1, 0.05], rtol=1e-6)
     with pytest.raises(ValueError):
         make_energy_process("fluvial", 4, 21)
 

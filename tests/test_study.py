@@ -1,0 +1,404 @@
+"""Study API tests: axis registry, resolution/naming, Study.run vs the
+legacy engine (numerics + compile counts), GridResult selection and
+NaN-aware reduction, and cache teardown."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_quadratic
+from repro.experiments import (
+    ExecutionConfig,
+    GridResult,
+    Study,
+    axis_names,
+    build_components,
+    clear_cache,
+    get_grid,
+    get_study,
+    grid_summary,
+    make_cell_mesh,
+    run_grid,
+    run_grid_sequential,
+    seed_stats,
+    study_names,
+)
+from repro.experiments import engine, placement
+from repro.optim import sgd
+
+multidevice = pytest.mark.multidevice
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_quadratic(jax.random.PRNGKey(2), n_clients=6, dim=5,
+                          hetero=1.0)
+
+
+@pytest.fixture(scope="module")
+def run_kwargs(problem):
+    return dict(
+        grads_fn=lambda p, k, t: problem.all_grads(p, key=k, noise=0.05),
+        p=problem.p, optimizer=sgd(0.02),
+        loss_fn=problem.suboptimality, params0=jnp.full((5,), 4.0))
+
+
+# -------------------------------------------------------------- registries
+
+def test_unknown_axis_name_lists_alternatives():
+    study = Study("s", num_steps=10)
+    with pytest.raises(ValueError, match="unknown sweep axis 'frobnicate'"):
+        study.axis("frobnicate", [1, 2])
+    # the error names the registered axes so the typo is self-correcting
+    with pytest.raises(ValueError, match="scheduler"):
+        study.axis("schedulers", ["alg1"])
+
+
+def test_unknown_study_and_grid_names():
+    with pytest.raises(ValueError, match="unknown study"):
+        get_study("fig2")
+    with pytest.raises(ValueError, match="unknown scenario grid"):
+        get_grid("fig2")
+
+
+def test_axis_names_canonical_order():
+    names = axis_names()
+    assert names[:6] == ["scheduler", "arrivals", "capacity", "n_clients",
+                         "taus_profile", "seeds"]
+
+
+def test_study_registry_names():
+    assert {"fig1", "fig1_grid", "capacity_sweep", "day_night",
+            "population_scaling"} <= set(study_names())
+
+
+def test_capacity_sweep_cell_naming():
+    scens = get_study("capacity_sweep", n_clients=4, num_steps=100,
+                      capacities=(1.0, 2.5, 4.0)).resolve()
+    assert [s.name for s in scens] == [
+        "battery_adaptive_binary_c1", "battery_adaptive_binary_c2.5",
+        "battery_adaptive_binary_c4"]
+    for s, c in zip(scens, (1.0, 2.5, 4.0)):
+        scheduler, _ = s.build()
+        assert float(scheduler.capacity) == c
+
+
+def test_fig1_names_match_legacy_grid():
+    """The Study naming convention reproduces the seed-era cell names."""
+    study_names_ = [s.name for s in
+                    get_study("fig1_grid", n_clients=4, num_steps=10).resolve()]
+    assert study_names_[:3] == ["alg1_periodic", "alg1_binary", "alg1_uniform"]
+    legacy = get_grid("fig1_grid", n_clients=4, horizon=11)
+    assert [s.name for s in legacy] == study_names_
+
+
+def test_study_requires_identity_axes():
+    with pytest.raises(ValueError, match="scheduler"):
+        Study("s", num_steps=10, axes={"arrivals": "binary"}).resolve()
+
+
+def test_resolve_rejects_duplicate_cell_names():
+    # sweeping the same scheduler value twice collides
+    study = Study("s", num_steps=10, axes={
+        "scheduler": ["alg1", "alg1"], "arrivals": "binary"})
+    with pytest.raises(ValueError, match="unique"):
+        study.resolve()
+
+
+def test_run_grid_sequential_rejects_duplicate_names(problem, run_kwargs):
+    """Regression: the sequential path used to silently overwrite
+    duplicate scenario names (last cell won)."""
+    from repro.experiments import Scenario
+
+    scens = [Scenario("dup", "alg1", "periodic", 6, 11)] * 2
+    kw = {k: v for k, v in run_kwargs.items() if k != "params0"}
+    with pytest.raises(ValueError, match="unique"):
+        run_grid_sequential(scens, params0=run_kwargs["params0"],
+                            num_steps=10, seeds=2, **kw)
+
+
+def test_build_components_single_cell():
+    scheduler, energy = build_components(
+        scheduler="battery_adaptive", arrivals="day_night", n_clients=4,
+        horizon=101, capacity=4.0)
+    assert scheduler.n_clients == 4
+    assert float(scheduler.capacity) == 4.0
+    assert type(energy).__name__ == "DayNightArrivals"
+
+
+# ------------------------------------------------------- Study.run numerics
+
+def test_study_matches_run_grid_numerics(problem, run_kwargs):
+    """Acceptance: Study reproducing fig1_grid matches run_grid on the
+    vmap path, tracing once per component structure (12 for the 96-cell
+    4 scheduler x 3 arrivals x 8 seeds grid)."""
+    steps, seeds = 60, 8
+    study = get_study("fig1_grid", n_clients=6, num_steps=steps, seeds=seeds)
+    before = engine._run_group._cache_size()
+    res = study.run(**run_kwargs)
+    assert engine._run_group._cache_size() - before == 12  # not 96
+    assert len(res) == 12
+
+    kw = {k: v for k, v in run_kwargs.items() if k != "params0"}
+    legacy = run_grid(get_grid("fig1_grid", n_clients=6, horizon=steps + 1),
+                      params0=run_kwargs["params0"], num_steps=steps,
+                      seeds=seeds, **kw)
+    assert set(res) == set(legacy)
+    for name in legacy:
+        np.testing.assert_array_equal(np.asarray(res[name].history.loss),
+                                      np.asarray(legacy[name].history.loss))
+        np.testing.assert_array_equal(np.asarray(res[name].params),
+                                      np.asarray(legacy[name].params))
+
+
+def test_study_run_memoizes_simulator(problem, run_kwargs):
+    """Repeated study.run with the same ingredients must hit the jit
+    cache — including bound-method loss_fns that are a fresh object per
+    attribute access."""
+    study = get_study("fig1", n_clients=6, num_steps=20, seeds=2)
+    study.run(grads_fn=run_kwargs["grads_fn"], p=problem.p,
+              optimizer=run_kwargs["optimizer"],
+              loss_fn=problem.suboptimality,
+              params0=run_kwargs["params0"])
+    before = engine._run_group._cache_size()
+    study.run(grads_fn=run_kwargs["grads_fn"], p=problem.p,
+              optimizer=run_kwargs["optimizer"],
+              loss_fn=problem.suboptimality,  # fresh bound method
+              params0=run_kwargs["params0"])
+    assert engine._run_group._cache_size() == before
+
+
+def test_study_sequential_config_matches_batched(problem, run_kwargs):
+    study = get_study("fig1", n_clients=6, num_steps=40, seeds=2)
+    batched = study.run(**run_kwargs)
+    seq = study.run(**run_kwargs,
+                    config=ExecutionConfig(sequential=True))
+    for name in batched:
+        np.testing.assert_allclose(np.asarray(batched[name].history.loss),
+                                   np.asarray(seq[name].history.loss),
+                                   rtol=2e-4, atol=1e-5)
+
+
+# ------------------------------------------- new axes end-to-end (vmap path)
+
+def test_capacity_axis_end_to_end_vmap(problem, run_kwargs):
+    """A capacity sweep is ONE structure group (capacity is a leaf):
+    3 cells, 1 trace."""
+    study = get_study("capacity_sweep", n_clients=6, num_steps=50, seeds=3)
+    before = engine._run_group._cache_size()
+    res = study.run(**run_kwargs)
+    assert engine._run_group._cache_size() - before == 1
+    assert res.axes["capacity"] == (1.0, 2.0, 4.0)
+    for cell in res.values():
+        assert cell.history.loss.shape == (3, 50)
+        assert np.isfinite(np.asarray(cell.history.loss)).all()
+
+
+def test_day_night_axis_end_to_end_vmap(problem, run_kwargs):
+    study = get_study("day_night", n_clients=6, num_steps=50, seeds=3)
+    res = study.run(**run_kwargs)
+    assert set(res) == {"alg2_day_night", "benchmark1_day_night",
+                        "battery_adaptive_day_night", "oracle_day_night"}
+    for cell in res.values():
+        assert np.isfinite(np.asarray(cell.history.loss)).all()
+    # the energy-aware scaled scheduler keeps Σω ≈ 1 in expectation even
+    # under the non-stationary rate; the unscaled benchmark does not
+    wsum = np.asarray(res["alg2_day_night"].history.weight_sum).mean()
+    assert 0.6 < wsum < 1.4
+
+
+@multidevice
+def test_capacity_and_day_night_sharded(problem, run_kwargs):
+    """Acceptance: both new axes run through Study.run under the
+    8-device sharded path and match the vmap path."""
+    mesh = make_cell_mesh()
+    for name in ("capacity_sweep", "day_night"):
+        study = get_study(name, n_clients=6, num_steps=40, seeds=3)
+        plain = study.run(**run_kwargs)
+        sharded = study.run(**run_kwargs, config=ExecutionConfig(mesh=mesh))
+        for cell in plain:
+            np.testing.assert_allclose(
+                np.asarray(plain[cell].history.loss),
+                np.asarray(sharded[cell].history.loss),
+                rtol=2e-4, atol=1e-5)
+            np.testing.assert_array_equal(
+                np.asarray(plain[cell].history.participation),
+                np.asarray(sharded[cell].history.participation))
+
+
+def test_population_scaling_groups_by_n():
+    """Ragged client counts cannot share a trace: the n_clients axis
+    resolves to one structure group per population size."""
+    study = get_study("population_scaling", n_clients=(4, 6), num_steps=20,
+                      seeds=2)
+    scens = study.resolve()
+    assert [s.name for s in scens] == ["alg2_binary_n4", "alg2_binary_n6"]
+    groups = {}
+    for s in scens:
+        sch, en = s.build()
+        leaves, treedef = jax.tree_util.tree_flatten((sch, en))
+        key = (treedef, tuple(l.shape for l in leaves))
+        groups.setdefault(key, []).append(s.name)
+    assert len(groups) == 2
+
+
+# --------------------------------------------------- GridResult + reductions
+
+def _toy_result():
+    def cell(losses):
+        from repro.core.trainer import SimHistory
+        from repro.experiments import CellResult
+
+        loss = jnp.asarray(losses)[:, None] * jnp.ones((1, 20))
+        hist = SimHistory(loss=loss,
+                          participation=jnp.ones((len(losses), 20, 2)),
+                          weight_sum=jnp.ones((len(losses), 20)))
+        return CellResult(params=jnp.zeros((len(losses), 3)), history=hist)
+
+    cells = {
+        "alg1_periodic": cell([1.0, 2.0]),
+        "alg1_binary": cell([3.0, float("nan")]),
+        "oracle_periodic": cell([5.0, 6.0]),
+        "oracle_binary": cell([7.0, 8.0]),
+    }
+    labels = {
+        "alg1_periodic": {"scheduler": "alg1", "arrivals": "periodic"},
+        "alg1_binary": {"scheduler": "alg1", "arrivals": "binary"},
+        "oracle_periodic": {"scheduler": "oracle", "arrivals": "periodic"},
+        "oracle_binary": {"scheduler": "oracle", "arrivals": "binary"},
+    }
+    axes = {"scheduler": ("alg1", "oracle"),
+            "arrivals": ("periodic", "binary"), "seed": (0, 1)}
+    return GridResult(cells, labels, axes, name="toy")
+
+
+def test_gridresult_sel_and_mapping():
+    res = _toy_result()
+    assert len(res) == 4 and "alg1_binary" in res
+    sub = res.sel(scheduler="alg1")
+    assert list(sub) == ["alg1_periodic", "alg1_binary"]
+    assert "scheduler" not in sub.axes  # scalar selection drops the axis
+    assert sub.axes["arrivals"] == ("periodic", "binary")
+    only = res.sel(scheduler="oracle", arrivals="binary").only()
+    assert only is res["oracle_binary"]
+    with pytest.raises(ValueError, match="selectable"):
+        res.sel(battery="x")
+    with pytest.raises(KeyError):
+        res.sel(scheduler="nonexistent")
+
+
+def test_gridresult_sel_with_unhashable_axis_values(problem, run_kwargs):
+    """Regression: axis values may be unhashable — a (kind, kwargs)
+    arrival pair or an explicit taus list; sel must compare by equality,
+    never hash."""
+    study = get_study("day_night", n_clients=6, num_steps=10, seeds=2)
+    res = study.run(**run_kwargs)
+    sub = res.sel(scheduler="alg2")
+    assert list(sub) == ["alg2_day_night"]
+    # selecting the tuple-valued arrivals axis by its verbatim value
+    arrivals_val = res.labels("alg2_day_night")["arrivals"]
+    assert isinstance(arrivals_val, tuple)
+    assert len(res.sel(arrivals=arrivals_val)) == len(res)
+
+    study2 = Study("taus", num_steps=10, axes={
+        "scheduler": ["alg1", "oracle"], "arrivals": "periodic",
+        "n_clients": 6, "taus_profile": [1, 2, 4], "seeds": 2})
+    res2 = study2.run(**run_kwargs)
+    assert list(res2.sel(scheduler="oracle")) == ["oracle_periodic"]
+
+
+def test_study_run_rejects_mesh_plus_sequential(problem, run_kwargs):
+    """A contradictory config must error, not silently run single-device
+    sequential while the caller believes it benchmarked the mesh."""
+    study = get_study("fig1", n_clients=6, num_steps=10, seeds=2)
+    cfg = ExecutionConfig(mesh=make_cell_mesh(), sequential=True)
+    with pytest.raises(ValueError, match="sequential"):
+        study.run(**run_kwargs, config=cfg)
+
+
+def test_gridresult_reduce_is_nan_aware():
+    res = _toy_result()
+    stats = res.reduce()  # default: tail mean of loss per seed
+    assert stats["alg1_periodic"]["mean"] == pytest.approx(1.5)
+    assert stats["alg1_periodic"]["n_nan"] == 0
+    # one diverged seed: excluded from stats, counted — not poisoning
+    assert stats["alg1_binary"]["mean"] == pytest.approx(3.0)
+    assert stats["alg1_binary"]["std"] == pytest.approx(0.0)
+    assert stats["alg1_binary"]["n_seeds"] == 2
+    assert stats["alg1_binary"]["n_nan"] == 1
+
+
+def test_gridresult_reduce_over_axis_pools():
+    res = _toy_result()
+    pooled = res.reduce(over="arrivals")
+    # alg1 pools 4 seed-values incl. one NaN
+    assert pooled["alg1"]["n_seeds"] == 4
+    assert pooled["alg1"]["n_nan"] == 1
+    assert pooled["alg1"]["mean"] == pytest.approx((1 + 2 + 3) / 3)
+    assert pooled["oracle"]["mean"] == pytest.approx(6.5)
+    with pytest.raises(ValueError, match="unknown axis"):
+        res.reduce(over="capacity")
+
+
+def test_grid_summary_shares_nan_aware_reduction():
+    """Satellite: the legacy grid_summary path uses the same NaN-aware
+    seed_stats as GridResult.reduce."""
+    res = _toy_result()
+    legacy = grid_summary(dict(res.items()))
+    modern = res.reduce()
+    assert legacy == modern
+    assert legacy["alg1_binary"]["n_nan"] == 1
+    assert np.isfinite(legacy["alg1_binary"]["mean"])
+
+
+def test_seed_stats_all_nan():
+    s = seed_stats([float("nan"), float("nan")])
+    assert s["n_nan"] == 2 and s["n_seeds"] == 2
+    assert np.isnan(s["mean"]) and np.isnan(s["std"])
+
+
+def test_gridresult_to_records_and_json(tmp_path):
+    res = _toy_result()
+    recs = res.to_records()
+    assert recs[0]["name"] == "alg1_periodic"
+    assert recs[0]["scheduler"] == "alg1"
+    assert recs[0]["arrivals"] == "periodic"
+    assert {"mean", "std", "n_seeds", "n_nan"} <= set(recs[0])
+
+    path = tmp_path / "grid.json"
+    text = res.to_json(str(path))
+    doc = json.loads(text)
+    assert doc == json.loads(path.read_text())
+    assert doc["study"] == "toy"
+    assert doc["axes"]["scheduler"] == ["alg1", "oracle"]
+    assert len(doc["records"]) == 4
+
+
+def test_gridresult_to_json_handles_numpy_in_nested_labels():
+    """Regression: (kind, kwargs) axis values may carry numpy scalars;
+    to_json must recurse into dicts/arrays when sanitizing."""
+    res = _toy_result()
+    res.axes = {**res.axes,
+                "arrivals": (("day_night", {"period": np.int64(50)}),
+                             "binary")}
+    doc = json.loads(res.to_json())
+    assert doc["axes"]["arrivals"][0] == ["day_night", {"period": 50}]
+
+
+# ------------------------------------------------------------ cache teardown
+
+@multidevice
+def test_clear_cache_drops_both_paths(problem, run_kwargs):
+    """Satellite: clear_cache must drop BOTH the vmap and the shard_map
+    executables (and the dataset-pinning closures they reference)."""
+    study = get_study("fig1", n_clients=6, num_steps=10, seeds=2)
+    study.run(**run_kwargs)
+    study.run(**run_kwargs, config=ExecutionConfig(mesh=make_cell_mesh()))
+    assert engine._run_group._cache_size() > 0
+    assert placement._run_group_sharded._cache_size() > 0
+    clear_cache()
+    assert engine._run_group._cache_size() == 0
+    assert placement._run_group_sharded._cache_size() == 0
