@@ -105,6 +105,57 @@ def _quadratic_grid_rows(iters: int, seeds: int) -> list[str]:
     ]
 
 
+def _population_scaling_rows(iters: int, seeds: int) -> list[str]:
+    """Ragged-population series (DESIGN.md §7): the ``population_scaling``
+    study runs N ∈ {8, 16, 32} as ONE compiled computation (population
+    size is a data axis — cells padded to N_cap=32 under an active
+    mask), timed against the sequential per-cell baseline. The trace
+    count is recorded so the series also tracks the
+    one-compile-per-structure guarantee."""
+    from repro.core import ClientSimulator, make_quadratic
+    from repro.experiments import ExecutionConfig, get_study
+    from repro.experiments import engine
+    from repro.optim import sgd
+
+    n_cap, dim, pops = 32, 64, (8, 16, 32)
+    problem = make_quadratic(jax.random.PRNGKey(5), n_clients=n_cap,
+                             dim=dim, hetero=1.0)
+    w_star = problem.w_star
+    sim = ClientSimulator(
+        grads_fn=lambda p, k, t: problem.all_grads(p),
+        p=problem.p, optimizer=sgd(0.02),
+        loss_fn=lambda w: jnp.sum((w - w_star) ** 2))
+    study = get_study("population_scaling", n_clients=pops, num_steps=iters,
+                      seeds=seeds)
+    params0 = jnp.full((dim,), 4.0)
+
+    def timed(config=None):
+        t0 = time.time()
+        res = study.run(sim=sim, params0=params0, config=config)
+        jax.block_until_ready([c.params for c in res.values()])
+        return time.time() - t0
+
+    before = engine._run_group._cache_size()
+    timed()                                   # compile batched
+    traces = engine._run_group._cache_size() - before
+    seq = ExecutionConfig(sequential=True)
+    timed(seq)                                # compile sequential
+    dt_b, dt_s = timed(), timed(seq)
+    speed = dt_s / dt_b
+    n_cells = len(pops) * seeds
+    print(f"population_scaling N={pops} ({n_cells} cells x {iters} steps, "
+          f"warm): batched {dt_b:.2f}s ({traces} trace) vs sequential "
+          f"{dt_s:.2f}s -> {speed:.2f}x", file=sys.stderr)
+    return [
+        f"popscale_batched_warm,{dt_b * 1e6:.0f},"
+        f"cells={n_cells};iters={iters};traces={traces}",
+        f"popscale_sequential_warm,{dt_s * 1e6:.0f},"
+        f"cells={n_cells};iters={iters}",
+        f"popscale_batched_speedup,{dt_b * 1e6:.0f},"
+        f"speedup={speed:.2f};traces={traces};batched_faster={dt_b < dt_s}",
+    ]
+
+
 def run(iters: int = 100, seeds: int = 8, n_clients: int = 8) -> list[str]:
     from repro.core import ClientSimulator
     from repro.experiments import (
@@ -201,6 +252,9 @@ def run(iters: int = 100, seeds: int = 8, n_clients: int = 8) -> list[str]:
     rows.append(f"fig1_grid_speedup,{dt_batched * 1e6:.0f},"
                 f"speedup={speedup:.2f};batched_faster={dt_batched < dt_seq}")
     rows.extend(sharded_rows)
+    # 4× the CNN iteration budget: 400 steps on the full run (matching
+    # the quadgrid series' scale), 160 under --fast.
+    rows.extend(_population_scaling_rows(iters=4 * iters, seeds=seeds))
 
     # Paper ordering on the paper's (periodic) arrivals, seed-averaged:
     # the full chain alg1 ≥ benchmark1 ≥ benchmark2 (Fig. 1), each link

@@ -111,8 +111,15 @@ def main() -> None:
 
     out_paths = [p for p in (args.json,) if p]
     if args.bench_out:
+        # One BENCH file per PR: never clobber an earlier PR's series
+        # landed on the same date — uniquify with a numeric suffix.
         date = datetime.date.today().isoformat()
-        out_paths.append(os.path.join(args.bench_out, f"BENCH_{date}.json"))
+        path = os.path.join(args.bench_out, f"BENCH_{date}.json")
+        suffix = 2
+        while os.path.exists(path):
+            path = os.path.join(args.bench_out, f"BENCH_{date}.{suffix}.json")
+            suffix += 1
+        out_paths.append(path)
     if out_paths:
         import jax
 

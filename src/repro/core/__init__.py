@@ -14,8 +14,12 @@ from repro.core.energy import (
     DeterministicArrivals,
     UniformArrivals,
     arrival_family_names,
+    client_keys,
+    client_randint,
+    client_uniform,
     expected_participation,
     make_arrivals,
+    pad_arrivals,
     register_arrival_family,
 )
 from repro.core.scheduling import (
@@ -26,6 +30,8 @@ from repro.core.scheduling import (
     EHAppointmentScheduler,
     WaitForAllScheduler,
     make_scheduler,
+    mask_arrivals,
+    pad_scheduler,
     register_scheduler,
     scheduler_names,
 )
@@ -58,12 +64,14 @@ from repro.core.trainer import ClientSimulator, build_energy_train_step
 __all__ = [
     "Arrivals", "BinaryArrivals", "DayNightArrivals", "DeterministicArrivals",
     "UniformArrivals",
-    "arrival_family_names", "expected_participation", "make_arrivals",
-    "register_arrival_family",
+    "arrival_family_names", "client_keys", "client_randint",
+    "client_uniform", "expected_participation", "make_arrivals",
+    "pad_arrivals", "register_arrival_family",
     "AlwaysOnScheduler", "BatteryAdaptiveScheduler", "BestEffortScheduler",
     "Decision",
     "EHAppointmentScheduler", "WaitForAllScheduler", "make_scheduler",
-    "register_scheduler", "scheduler_names",
+    "mask_arrivals", "pad_scheduler", "register_scheduler",
+    "scheduler_names",
     "RavelSpec", "aggregate_client_grads", "aggregate_client_grads_flat",
     "aggregate_client_grads_kernel", "aggregate_client_grads_kernel_per_leaf",
     "client_weights",

@@ -48,6 +48,21 @@ def client_weights(p: jax.Array, decision: Decision) -> jax.Array:
     return p * decision.mask * decision.scale
 
 
+def _mask_rows(leaf: jax.Array, mask: jax.Array | None) -> jax.Array:
+    """Zero the masked-out client rows of an (N, ...) buffer.
+
+    A ``where`` select, not a multiply: padded rows contribute *exact*
+    zeros to every reduction even when a grads_fn emits garbage
+    (inf/NaN) for clients that don't exist (DESIGN.md §7). Identity on
+    active rows, so the masked reduction stays bit-identical to the
+    unpadded one.
+    """
+    if mask is None:
+        return leaf
+    m = mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+    return jnp.where(m > 0, leaf, jnp.zeros((), leaf.dtype))
+
+
 # --------------------------------------------------------------- raveler
 
 class RavelSpec(NamedTuple):
@@ -133,46 +148,54 @@ def unravel_pytree(vec: jax.Array, spec: RavelSpec):
 
 # ----------------------------------------------------- aggregation paths
 
-def aggregate_client_grads(stacked_grads, weights: jax.Array):
+def aggregate_client_grads(stacked_grads, weights: jax.Array,
+                           mask: jax.Array | None = None):
     """Per-leaf weighted sum over the leading (client) axis — the
     reference path (one reduction per leaf, leaf dtypes preserved).
 
     stacked_grads: pytree whose leaves have shape (N, ...).
     weights: (N,) float32 — ω_i.
+    mask: optional (N,) 0/1 active-client mask; masked rows are
+        ``where``-selected to exact zero before the reduction.
     """
 
     def _one(leaf):
         w = weights.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
-        return jnp.sum(w * leaf, axis=0)
+        return jnp.sum(w * _mask_rows(leaf, mask), axis=0)
 
     return jax.tree_util.tree_map(_one, stacked_grads)
 
 
 def reduce_flat(g: jax.Array, weights: jax.Array, *,
-                use_kernel: bool = False, out_dtype=None) -> jax.Array:
+                use_kernel: bool = False, out_dtype=None,
+                mask: jax.Array | None = None) -> jax.Array:
     """``(N, P)`` flat gradient buffer → ``(P,)`` = ω @ g, in one pass.
 
     Accumulation is at least f32 (low-precision inputs are upcast; f64
     under ``jax_enable_x64`` stays f64). ``out_dtype`` overrides the
     result dtype — e.g. bf16 client gradients aggregated into an f32
-    server update without a round-trip through bf16. The Pallas path is
-    one tiled kernel launch over the whole parameter space (imported
-    lazily so the pure-jnp path has no kernel dependency); in-kernel
-    accumulation is f32 — the MXU contract.
+    server update without a round-trip through bf16. ``mask`` is the
+    (N,) active-client mask of a ragged population: masked rows are
+    excluded from the reduction *exactly* (a row select, not a ×0 — the
+    kernel takes the mask as an operand on the tiled reduction). The
+    Pallas path is one tiled kernel launch over the whole parameter
+    space (imported lazily so the pure-jnp path has no kernel
+    dependency); in-kernel accumulation is f32 — the MXU contract.
     """
     od = jnp.dtype(out_dtype) if out_dtype is not None else g.dtype
     if use_kernel:
         from repro.kernels.aggregate import ops as agg_ops
 
         return agg_ops.masked_scaled_aggregate(
-            g, weights.astype(jnp.float32), out_dtype=od)
+            g, weights.astype(jnp.float32), out_dtype=od, mask=mask)
     acc = jnp.promote_types(g.dtype, jnp.float32)
-    out = weights.astype(acc) @ g.astype(acc)
+    out = weights.astype(acc) @ _mask_rows(g, mask).astype(acc)
     return out.astype(od)
 
 
 def aggregate_client_grads_flat(stacked_grads, weights: jax.Array, *,
-                                use_kernel: bool = False):
+                                use_kernel: bool = False,
+                                mask: jax.Array | None = None):
     """Single-pass aggregation: ravel → one kernel/matvec → unravel.
 
     Same contract as :func:`aggregate_client_grads` (float32-accumulation
@@ -184,23 +207,28 @@ def aggregate_client_grads_flat(stacked_grads, weights: jax.Array, *,
         spec = ravel_spec(stacked_grads, lead_axes=1)
     except ValueError:
         if use_kernel:
-            return aggregate_client_grads_kernel_per_leaf(stacked_grads, weights)
-        return aggregate_client_grads(stacked_grads, weights)
+            return aggregate_client_grads_kernel_per_leaf(
+                stacked_grads, weights, mask)
+        return aggregate_client_grads(stacked_grads, weights, mask)
     g = ravel_stacked(stacked_grads, spec)
-    return unravel_pytree(reduce_flat(g, weights, use_kernel=use_kernel), spec)
+    return unravel_pytree(
+        reduce_flat(g, weights, use_kernel=use_kernel, mask=mask), spec)
 
 
-def aggregate_client_grads_kernel(stacked_grads, weights: jax.Array):
+def aggregate_client_grads_kernel(stacked_grads, weights: jax.Array,
+                                  mask: jax.Array | None = None):
     """Kernel-path aggregation: one Pallas launch for the whole pytree.
 
     Previously one ``masked_scaled_aggregate`` call (with its own lane
     padding) *per leaf*; now the tree is raveled once into ``(N, P)``
     and reduced by a single tiled kernel (DESIGN.md §5).
     """
-    return aggregate_client_grads_flat(stacked_grads, weights, use_kernel=True)
+    return aggregate_client_grads_flat(stacked_grads, weights,
+                                       use_kernel=True, mask=mask)
 
 
-def aggregate_client_grads_kernel_per_leaf(stacked_grads, weights: jax.Array):
+def aggregate_client_grads_kernel_per_leaf(stacked_grads, weights: jax.Array,
+                                           mask: jax.Array | None = None):
     """One kernel launch per leaf — the pre-flat kernel path, kept as
     the mixed-dtype fallback and the ``ClientSimulator(flat=False)``
     legacy behavior."""
@@ -209,7 +237,8 @@ def aggregate_client_grads_kernel_per_leaf(stacked_grads, weights: jax.Array):
     def _one(leaf):
         n = leaf.shape[0]
         flat = leaf.reshape(n, -1)
-        out = agg_ops.masked_scaled_aggregate(flat, weights.astype(leaf.dtype))
+        out = agg_ops.masked_scaled_aggregate(
+            flat, weights.astype(leaf.dtype), mask=mask)
         return out.reshape(leaf.shape[1:])
 
     return jax.tree_util.tree_map(_one, stacked_grads)

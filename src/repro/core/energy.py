@@ -94,6 +94,58 @@ def _concrete(x):
         return None
 
 
+def client_keys(key, n_clients: int) -> jax.Array:
+    """(N, key) array of per-client keys via ``fold_in`` on the client index.
+
+    The derived keys depend only on ``(key, i)`` — *not* on ``n_clients`` —
+    unlike ``jax.random.split(key, n)`` or a single shaped draw
+    ``jax.random.uniform(key, (n,))``, whose bits change with ``n``
+    (threefry pairs counters by half-length). This shape independence is
+    what makes ragged-population padding bit-exact: client ``i`` of a
+    padded N_max-wide run draws the same randomness as client ``i`` of
+    the natural-N run (DESIGN.md §7).
+    """
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.arange(n_clients))
+
+
+def client_uniform(key, n_clients: int) -> jax.Array:
+    """(N,) iid U[0,1) draws, one per client, shape-independent per row."""
+    return jax.vmap(lambda k: jax.random.uniform(k, ()))(
+        client_keys(key, n_clients))
+
+
+def client_randint(key, n_clients: int, maxval) -> jax.Array:
+    """(N,) iid U{0,…,maxval_i−1} draws, shape-independent per row.
+
+    ``maxval`` may be a scalar or an (N,) per-client bound (≥ 1).
+    Implemented as ``floor(u · maxval)`` — exact for integer bounds well
+    below 2^24 (the paper's periods are tiny) and uniform per client.
+    """
+    maxval = jnp.asarray(maxval)
+    u = client_uniform(key, n_clients)
+    draw = jnp.floor(u * maxval.astype(jnp.float32)).astype(jnp.int32)
+    return jnp.minimum(draw, maxval.astype(jnp.int32) - 1)
+
+
+def _pad_leaf(x, pad: int, value, axis: int = 0):
+    """Append ``pad`` rows of ``value`` along ``axis``."""
+    if pad == 0:
+        return x
+    shape = list(x.shape)
+    shape[axis] = pad
+    return jnp.concatenate(
+        [jnp.asarray(x), jnp.full(shape, value, x.dtype)], axis=axis)
+
+
+def _check_pad(n_clients: int, n_total: int) -> int:
+    pad = int(n_total) - int(n_clients)
+    if pad < 0:
+        raise ValueError(
+            f"cannot pad {n_clients} clients down to {n_total}")
+    return pad
+
+
 def _gap_table(schedule: np.ndarray) -> np.ndarray:
     """Vectorized T[i, t] = Ī_i^t − I_i^t over an (N, H) 0/1 schedule.
 
@@ -184,6 +236,14 @@ class DeterministicArrivals:
         # Trailing (horizon) axis so stacked (S, N, H) instances batch too.
         return jnp.mean(self.schedule, axis=-1)
 
+    def pad_clients(self, n_total: int) -> "DeterministicArrivals":
+        """Same process over ``n_total`` client rows; padded rows never
+        harvest (all-zero schedule ⇒ gap 0 ⇒ cannot participate)."""
+        pad = _check_pad(self.n_clients, n_total)
+        return DeterministicArrivals(
+            schedule=_pad_leaf(self.schedule, pad, 0.0),
+            gaps=_pad_leaf(self.gaps, pad, 0.0))
+
 
 @dataclasses.dataclass(eq=False)
 class BinaryArrivals:
@@ -222,13 +282,19 @@ class BinaryArrivals:
 
     def arrivals(self, state, t, key):
         del t
-        u = jax.random.uniform(key, (self.n_clients,))
+        u = client_uniform(key, self.n_clients)
         energy = (u < self.betas).astype(jnp.float32)
         gap = 1.0 / self.betas  # γ_i = 1/β_i (Alg. 2 / Corollary 1)
         return state, Arrivals(energy=energy, gap=gap)
 
     def expected_participation(self) -> jax.Array:
         return self.betas
+
+    def pad_clients(self, n_total: int) -> "BinaryArrivals":
+        """Padded rows get β = 1 (a *valid* rate — no inf scales); their
+        draws are masked out by the scheduler/aggregation layers."""
+        pad = _check_pad(self.n_clients, n_total)
+        return BinaryArrivals(betas=_pad_leaf(self.betas, pad, 1.0))
 
 
 class UniformArrivalsState(NamedTuple):
@@ -266,13 +332,13 @@ class UniformArrivals:
     def init(self, key):
         # Offsets for the first window (the t=0 step rolls them anyway if
         # t mod T == 0, which it is; keep a valid placeholder).
-        offset = jax.random.randint(key, (self.n_clients,), 0, jnp.asarray(2**30)) % self.periods
+        offset = client_randint(key, self.n_clients, self.periods)
         return UniformArrivalsState(offset=offset.astype(jnp.int32))
 
     def arrivals(self, state, t, key):
         t = jnp.asarray(t, jnp.int32)
         pos = t % self.periods
-        fresh = jax.random.randint(key, (self.n_clients,), 0, jnp.asarray(2**30)) % self.periods
+        fresh = client_randint(key, self.n_clients, self.periods)
         offset = jnp.where(pos == 0, fresh.astype(jnp.int32), state.offset)
         energy = (pos == offset).astype(jnp.float32)
         gap = self.periods.astype(jnp.float32)  # γ_i = T_i (Corollary 1)
@@ -280,6 +346,12 @@ class UniformArrivals:
 
     def expected_participation(self) -> jax.Array:
         return 1.0 / self.periods.astype(jnp.float32)
+
+    def pad_clients(self, n_total: int) -> "UniformArrivals":
+        """Padded rows get period 1 (valid; arrives every step) — masked
+        out downstream."""
+        pad = _check_pad(self.n_clients, n_total)
+        return UniformArrivals(periods=_pad_leaf(self.periods, pad, 1))
 
 
 @dataclasses.dataclass(eq=False)
@@ -385,7 +457,7 @@ class DayNightArrivals:
 
     def arrivals(self, state, t, key):
         beta = self._beta_t(t)
-        u = jax.random.uniform(key, (self.n_clients,))
+        u = client_uniform(key, self.n_clients)
         energy = (u < beta).astype(jnp.float32)
         gap = 1.0 / beta  # γ_i(t) = 1/β_i(t), the instantaneous scale
         return state, Arrivals(energy=energy, gap=gap)
@@ -394,6 +466,13 @@ class DayNightArrivals:
         p = self.period.astype(jnp.float32)[..., None]
         d = self.day_steps.astype(jnp.float32)[..., None]
         return (d * self.betas_day + (p - d) * self.betas_night) / p
+
+    def pad_clients(self, n_total: int) -> "DayNightArrivals":
+        pad = _check_pad(self.n_clients, n_total)
+        return DayNightArrivals(
+            betas_day=_pad_leaf(self.betas_day, pad, 1.0),
+            betas_night=_pad_leaf(self.betas_night, pad, 1.0),
+            period=self.period, day_steps=self.day_steps)
 
 
 jax.tree_util.register_dataclass(
@@ -477,6 +556,22 @@ def _uniform(n_clients, horizon, taus, **kw):
 def _day_night(n_clients, horizon, taus, **kw):
     del horizon
     return DayNightArrivals.from_taus(taus, **kw)
+
+
+def pad_arrivals(process, n_total: int):
+    """Pad a process's per-client leaves to ``n_total`` rows (protocol
+    dispatch to ``pad_clients``). Padded rows carry *valid* neutral
+    hyperparameters (β=1, period=1, empty schedule) so no inf/NaN ever
+    enters the compiled computation; the scheduler/aggregation layers
+    mask them out of participation and gradient mass (DESIGN.md §7)."""
+    try:
+        method = process.pad_clients
+    except AttributeError:
+        raise TypeError(
+            f"{type(process)!r} does not implement pad_clients(); ragged "
+            "client populations need every arrival family to define its "
+            "padding rule") from None
+    return method(n_total)
 
 
 def expected_participation(process) -> jax.Array:

@@ -3,7 +3,15 @@
 Every scheduler is a pure-jax state machine:
 
     init(key)               -> state
-    step(state, t, key, arrivals) -> (state, Decision)
+    step(state, t, key, arrivals, active=None) -> (state, Decision)
+
+``active`` is an optional (N,) 0/1 mask of *existing* clients — the
+ragged-population mechanism (DESIGN.md §7): padded rows (``active=0``)
+must receive zero participation probability mass from every scheduler,
+and population-global decisions (Benchmark 2's all-batteries-full
+barrier, the oracle's full participation) are taken over active clients
+only. ``active=None`` means all clients exist and is bit-for-bit the
+pre-ragged behavior.
 
 with ``Decision(mask, scale)``:
 
@@ -50,12 +58,27 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.energy import Arrivals, _concrete
+from repro.core.energy import Arrivals, _concrete, client_randint
 
 
 class Decision(NamedTuple):
     mask: jax.Array   # (N,) float32 in {0,1}
     scale: jax.Array  # (N,) float32
+
+
+def mask_arrivals(arrivals: Arrivals, active) -> Arrivals:
+    """Zero the energy of inactive rows (identity when ``active`` is None).
+
+    Multiplication by 1.0 is exact on active rows, so a padded run stays
+    bit-identical to the natural-N run for every existing client.
+    """
+    if active is None:
+        return arrivals
+    return Arrivals(energy=arrivals.energy * active, gap=arrivals.gap)
+
+
+def _mask_decision(mask: jax.Array, active) -> jax.Array:
+    return mask if active is None else mask * active
 
 
 class AppointmentState(NamedTuple):
@@ -76,19 +99,18 @@ class EHAppointmentScheduler:
             appt_scale=jnp.zeros((self.n_clients,), jnp.float32),
         )
 
-    def step(self, state, t, key, arrivals: Arrivals):
+    def step(self, state, t, key, arrivals: Arrivals, active=None):
+        arrivals = mask_arrivals(arrivals, active)
         t = jnp.asarray(t, jnp.int32)
         gap = jnp.maximum(arrivals.gap, 1.0)
-        # J ~ Uniform{0, …, T_i^t − 1}, per-client bound. randint with a
-        # vector bound isn't supported; use floor(u * gap) which is exact
-        # for integer gap (u ∈ [0,1)).
-        u = jax.random.uniform(key, (self.n_clients,))
-        j = jnp.floor(u * gap).astype(jnp.int32)
-        j = jnp.minimum(j, gap.astype(jnp.int32) - 1)  # paranoia vs. u→1 rounding
+        # J ~ Uniform{0, …, T_i^t − 1}, per-client bound, drawn
+        # shape-independently (fold_in per client — padding the
+        # population never changes client i's draw).
+        j = client_randint(key, self.n_clients, gap)
         arrived = arrivals.energy > 0
         appt_time = jnp.where(arrived, t + j, state.appt_time)
         appt_scale = jnp.where(arrived, gap, state.appt_scale)
-        mask = (appt_time == t).astype(jnp.float32)
+        mask = _mask_decision((appt_time == t).astype(jnp.float32), active)
         new_state = AppointmentState(appt_time=appt_time, appt_scale=appt_scale)
         return new_state, Decision(mask=mask, scale=appt_scale)
 
@@ -104,9 +126,9 @@ class BestEffortScheduler:
         del key
         return ()
 
-    def step(self, state, t, key, arrivals: Arrivals):
+    def step(self, state, t, key, arrivals: Arrivals, active=None):
         del t, key
-        mask = arrivals.energy
+        mask = mask_arrivals(arrivals, active).energy
         if self.scaled:
             scale = jnp.maximum(arrivals.gap, 1.0)
         else:
@@ -128,11 +150,17 @@ class WaitForAllScheduler:
         del key
         return WaitForAllState(battery=jnp.zeros((self.n_clients,), jnp.float32))
 
-    def step(self, state, t, key, arrivals: Arrivals):
+    def step(self, state, t, key, arrivals: Arrivals, active=None):
         del t, key
+        arrivals = mask_arrivals(arrivals, active)
         battery = jnp.minimum(state.battery + arrivals.energy, 1.0)
-        fire = jnp.min(battery) >= 1.0
+        # The all-full barrier is over *active* clients only: a padded
+        # row (which never harvests) must not block the whole population.
+        ready = battery if active is None else jnp.where(active > 0,
+                                                         battery, 1.0)
+        fire = jnp.min(ready) >= 1.0
         mask = jnp.where(fire, jnp.ones_like(battery), jnp.zeros_like(battery))
+        mask = _mask_decision(mask, active)
         battery = battery - mask
         return WaitForAllState(battery=battery), Decision(
             mask=mask, scale=jnp.ones_like(battery)
@@ -149,10 +177,10 @@ class AlwaysOnScheduler:
         del key
         return ()
 
-    def step(self, state, t, key, arrivals: Arrivals):
+    def step(self, state, t, key, arrivals: Arrivals, active=None):
         del t, key, arrivals
         ones = jnp.ones((self.n_clients,), jnp.float32)
-        return state, Decision(mask=ones, scale=ones)
+        return state, Decision(mask=_mask_decision(ones, active), scale=ones)
 
 
 class BatteryState(NamedTuple):
@@ -198,10 +226,11 @@ class BatteryAdaptiveScheduler:
             steps=jnp.zeros((), jnp.int32),
         )
 
-    def step(self, state, t, key, arrivals: Arrivals):
+    def step(self, state, t, key, arrivals: Arrivals, active=None):
         del t, key
+        arrivals = mask_arrivals(arrivals, active)
         battery = jnp.minimum(state.battery + arrivals.energy, self.capacity)
-        mask = (battery >= 1.0).astype(jnp.float32)
+        mask = _mask_decision((battery >= 1.0).astype(jnp.float32), active)
         battery = battery - mask
         rate = (1 - self.ema) * state.rate + self.ema * mask
         # During warmup the estimate is unusable -> scale 1 (biased but
@@ -224,6 +253,24 @@ jax.tree_util.register_dataclass(
 jax.tree_util.register_dataclass(
     BatteryAdaptiveScheduler,
     data_fields=["capacity", "ema", "warmup"], meta_fields=["n_clients"])
+
+
+def pad_scheduler(scheduler, n_total: int):
+    """Widen a scheduler to ``n_total`` client rows (ragged padding).
+
+    Schedulers defining ``pad_clients(n)`` own their padding rule (needed
+    when a custom scheduler carries per-client leaves); the built-ins
+    have only the static ``n_clients`` plus scalar leaves, so
+    ``dataclasses.replace`` widens them — per-client *state* is sized by
+    ``init`` at the padded width automatically.
+    """
+    method = getattr(scheduler, "pad_clients", None)
+    if method is not None:
+        return method(n_total)
+    if int(n_total) < int(scheduler.n_clients):
+        raise ValueError(
+            f"cannot pad {scheduler.n_clients} clients down to {n_total}")
+    return dataclasses.replace(scheduler, n_clients=int(n_total))
 
 
 def _strict(ctor, name, n, kw, **fixed):

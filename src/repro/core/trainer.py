@@ -53,7 +53,13 @@ class ClientSimulator:
         Optional at construction — every method also accepts them as
         explicit (traced) arguments, so a single simulator can execute a
         whole leaf-stacked family of scenarios under ``vmap``
-        (:func:`repro.experiments.run_grid`).
+        (:func:`repro.experiments.run_grid`). ``run``/``step`` also
+        accept per-run ``p`` and ``active_mask`` overrides — the
+        ragged-population mechanism (DESIGN.md §7): components padded to
+        a common width run with ``active_mask`` marking the rows that
+        exist; inactive rows contribute exactly zero gradient and zero
+        scheduler probability mass, bit-for-bit matching the natural-N
+        run.
     p : (N,) data weights p_i = D_i / D.
     optimizer : repro.optim.Optimizer applied to the aggregated update.
         For exact paper semantics use ``sgd(eta)``.
@@ -118,23 +124,33 @@ class ClientSimulator:
             t=jnp.zeros((), jnp.int32),
         )
 
-    def step(self, carry: SimCarry, scheduler=None,
-             energy=None) -> tuple[SimCarry, dict]:
+    def step(self, carry: SimCarry, scheduler=None, energy=None, *,
+             p=None, active_mask=None) -> tuple[SimCarry, dict]:
         """One server round on a pytree carry (public single-step API)."""
-        return self._step(carry, scheduler, energy, None)
+        return self._step(carry, scheduler, energy, None, p, active_mask)
 
-    def _step(self, carry: SimCarry, scheduler, energy,
-              spec) -> tuple[SimCarry, dict]:
+    def _step(self, carry: SimCarry, scheduler, energy, spec,
+              p=None, active_mask=None) -> tuple[SimCarry, dict]:
         """Shared step body; ``spec`` non-None means carry.params is the
-        raveled ``(P,)`` vector and aggregation stays in flat space."""
+        raveled ``(P,)`` vector and aggregation stays in flat space.
+        ``p`` overrides the constructor weights (ragged cells carry
+        their own zero-padded, active-renormalized p); ``active_mask``
+        is the (N,) 0/1 existing-client mask."""
         scheduler, energy = self._components(scheduler, energy)
+        p = self.p if p is None else p
         key, k_arr, k_sched, k_grad = jax.random.split(carry.key, 4)
         energy_state, arr = energy.arrivals(carry.energy_state, carry.t, k_arr)
-        sched_state, dec = scheduler.step(carry.sched_state, carry.t, k_sched, arr)
+        sched_state, dec = scheduler.step(carry.sched_state, carry.t, k_sched,
+                                          arr, active=active_mask)
         params_tree = (aggregation.unravel_pytree(carry.params, spec)
                        if spec is not None else carry.params)
         stacked = self.grads_fn(params_tree, k_grad, carry.t)
-        weights = aggregation.client_weights(self.p, dec)
+        weights = aggregation.client_weights(p, dec)
+        if active_mask is not None:
+            # Defensive exactness: zero weight for rows that don't exist
+            # even if a custom scheduler leaked probability mass to them
+            # (×1 on active rows — bit-exact).
+            weights = weights * active_mask
         if spec is not None:
             try:
                 gspec = aggregation.ravel_spec(stacked, lead_axes=1)
@@ -153,17 +169,20 @@ class ClientSimulator:
                     f"(params {spec.shapes}, grads {gspec.shapes})")
             g = aggregation.ravel_stacked(stacked, gspec)
             agg = aggregation.reduce_flat(g, weights,
-                                          use_kernel=self.use_kernel)
+                                          use_kernel=self.use_kernel,
+                                          mask=active_mask)
         elif self.flat is False:
             # Full legacy semantics: per-leaf reductions (and per-leaf
             # kernel launches), leaf dtypes untouched — the escape hatch
             # and the reference the flat paths are tested against.
             agg = (aggregation.aggregate_client_grads_kernel_per_leaf(
-                       stacked, weights) if self.use_kernel
-                   else aggregation.aggregate_client_grads(stacked, weights))
+                       stacked, weights, active_mask) if self.use_kernel
+                   else aggregation.aggregate_client_grads(stacked, weights,
+                                                           active_mask))
         else:
             agg = aggregation.aggregate_client_grads_flat(
-                stacked, weights, use_kernel=self.use_kernel)
+                stacked, weights, use_kernel=self.use_kernel,
+                mask=active_mask)
         updates, opt_state = self.optimizer.update(agg, carry.opt_state, carry.params)
         params = apply_updates(carry.params, updates)
         loss_params = (aggregation.unravel_pytree(params, spec)
@@ -181,8 +200,12 @@ class ClientSimulator:
         return new_carry, out
 
     def run(self, key, params, num_steps: int, *, scheduler=None, energy=None,
-            eval_fn=None, eval_every: int = 0):
+            p=None, active_mask=None, eval_fn=None, eval_every: int = 0):
         """Run the whole loop as one (or a few) ``lax.scan`` computations.
+
+        ``p`` / ``active_mask`` override the constructor weights and mark
+        the existing-client rows of a padded (ragged) population — see
+        the class docstring and DESIGN.md §7.
 
         Without ``eval_fn``: returns ``(final_params, SimHistory)``.
 
@@ -208,7 +231,7 @@ class ClientSimulator:
                           spec=spec)
 
         def body(c, _):
-            return self._step(c, scheduler, energy, spec)
+            return self._step(c, scheduler, energy, spec, p, active_mask)
 
         def unflatten(p):
             return aggregation.unravel_pytree(p, spec) if spec is not None else p

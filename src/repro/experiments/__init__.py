@@ -37,8 +37,10 @@ from repro.experiments.engine import (
     clear_cache,
     execute_cells,
     grid_summary,
+    population_mask,
     run_grid,
     run_grid_sequential,
+    subpopulation_p,
 )
 from repro.experiments.placement import make_cell_mesh
 from repro.experiments.results import GridResult, default_metric, seed_stats
@@ -70,7 +72,8 @@ __all__ = [
     "axis_names", "build_components", "check_unique_names", "clear_cache",
     "default_metric", "default_taus", "execute_cells", "get_axis", "get_grid",
     "get_study", "grid_names", "grid_summary", "make_cell_mesh",
-    "make_energy_process", "register_axis", "register_grid", "register_study",
-    "register_taus_profile", "resolve_taus_profile", "run_grid",
-    "run_grid_sequential", "scenario_grid", "seed_stats", "study_names",
+    "make_energy_process", "population_mask", "register_axis",
+    "register_grid", "register_study", "register_taus_profile",
+    "resolve_taus_profile", "run_grid", "run_grid_sequential",
+    "scenario_grid", "seed_stats", "study_names", "subpopulation_p",
 ]

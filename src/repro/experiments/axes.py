@@ -14,7 +14,9 @@ Built-in axes (canonical resolution order):
                   (kind, kwargs) for hyperparameterized families such as
                   ("day_night", {"period": 50}))
     capacity      battery capacity -> scheduler_kwargs["capacity"]
-    n_clients     client-population size (per-value structure group)
+    n_clients     client-population size — a data axis: ragged values
+                  pad to the simulator capacity under an active mask
+                  (DESIGN.md §7), sharing one structure group
     taus_profile  named / explicit per-client energy-period profile
     seeds         seed count or explicit list (vmapped by the engine,
                   never part of cell naming)
@@ -201,7 +203,9 @@ register_axis(
 register_axis(
     "n_clients", apply=_apply_n_clients,
     fmt=lambda v, fixed: None if fixed else f"n{v}",
-    doc="client-population size (one structure group per value)")
+    doc="client-population size; a DATA axis — ragged values are padded "
+        "to the simulator capacity under an active mask (DESIGN.md §7), "
+        "so every N shares one structure group")
 register_axis(
     "taus_profile", apply=_apply_taus_profile, fmt=_fmt_taus,
     is_value=_taus_is_value,

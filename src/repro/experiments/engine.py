@@ -15,6 +15,17 @@ compiled computations:
    ``lax.scan`` — so XLA traces and compiles **once per group**, not
    once per (scenario, seed) cell.
 
+**Ragged client populations** (DESIGN.md §7): when scenarios differ in
+``n_clients``, the client count becomes a *data* axis instead of a
+*shape* axis — every cell's per-client component leaves are padded to
+the simulator's population capacity ``N_cap = len(sim.p)``, an
+``active_mask`` marks the rows that exist, and each cell carries its
+own zero-padded data weights (``subpopulation_p``). All population
+sizes of one scheduler × arrival family then share a **single**
+compiled computation, and masked rows contribute exactly zero gradient
+and zero scheduler probability mass — per-cell numerics are bit-for-bit
+those of the natural-N run (``tests/test_ragged.py``).
+
 :func:`run_grid_sequential` executes the identical cells one traced scan
 at a time — the pre-refactor execution model — and exists for numerical
 cross-checks and wall-clock comparison (``benchmarks/fig1.py`` times
@@ -57,14 +68,63 @@ def _stack(components):
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *components)
 
 
+def population_mask(n_clients: int, n_total: int) -> jax.Array:
+    """(n_total,) float32 mask: 1 for the first ``n_clients`` rows."""
+    return (jnp.arange(n_total) < n_clients).astype(jnp.float32)
+
+
+def subpopulation_p(p, n_clients: int, n_total: int | None = None) -> jax.Array:
+    """Data weights of the ``n_clients``-prefix subpopulation of ``p``,
+    renormalized over the active rows only and zero-padded to
+    ``n_total`` (default ``len(p)``).
+
+    This is *the* unbiasedness-under-masking rule (DESIGN.md §7): the
+    paper's p_i = D_i/D must sum to 1 over the clients that exist, so a
+    ragged cell's weights are the master prefix renormalized — computed
+    here, in f32, by both the padded engine path and (via this shared
+    helper) the per-N baselines the equivalence tests compare against.
+    """
+    p = jnp.asarray(p, jnp.float32)
+    n_total = int(p.shape[0]) if n_total is None else int(n_total)
+    if not 1 <= n_clients <= n_total:
+        raise ValueError(
+            f"n_clients={n_clients} outside [1, {n_total}]")
+    pref = p[:n_clients] / jnp.sum(p[:n_clients])
+    if n_clients == n_total:
+        return pref
+    return jnp.concatenate(
+        [pref, jnp.zeros((n_total - n_clients,), jnp.float32)])
+
+
+def _pad_built(built, n_cap: int):
+    """(scheduler, energy) built at natural n → padded to n_cap rows."""
+    from repro.core.energy import pad_arrivals
+    from repro.core.scheduling import pad_scheduler
+
+    scheduler, energy = built
+    return (pad_scheduler(scheduler, n_cap), pad_arrivals(energy, n_cap))
+
+
+def _crop_cell(cell: "CellResult", n: int, n_cap: int) -> "CellResult":
+    """Slice the padded client axis of per-client outputs back to n."""
+    if n == n_cap:
+        return cell
+    hist = cell.history._replace(
+        participation=cell.history.participation[..., :n])
+    return cell._replace(history=hist)
+
+
 @partial(jax.jit, static_argnames=("sim", "num_steps", "eval_fn", "eval_every"))
-def _run_group(scheduler, energy, params0, keys, *, sim: ClientSimulator,
-               num_steps: int, eval_fn=None, eval_every: int = 0):
+def _run_group(scheduler, energy, active, p, params0, keys, *,
+               sim: ClientSimulator, num_steps: int, eval_fn=None,
+               eval_every: int = 0):
     """vmap(scenario axis) ∘ vmap(seed axis) over one simulator scan.
 
     ``scheduler`` / ``energy`` leaves carry a leading scenario axis S;
-    ``keys`` is (R, 2). Compiled once per (sim, group structure) — probe
-    ``_run_group._cache_size()`` to assert trace counts.
+    ``active`` / ``p`` are (S, N_cap) ragged-population operands (both
+    None for uniform grids); ``keys`` is (R, 2). Compiled once per
+    (sim, group structure) — probe ``_run_group._cache_size()`` to
+    assert trace counts.
 
     The static ``sim`` / ``eval_fn`` are hashed by identity, so each
     distinct closure (and the datasets it captures) stays referenced by
@@ -73,14 +133,15 @@ def _run_group(scheduler, energy, params0, keys, *, sim: ClientSimulator,
     call :func:`clear_cache` between sweeps.
     """
 
-    def one(sch, en, key):
+    def one(sch, en, act, pw, key):
         out = sim.run(key, params0, num_steps, scheduler=sch, energy=en,
+                      p=pw, active_mask=act,
                       eval_fn=eval_fn, eval_every=eval_every)
         return CellResult(*out) if eval_fn is not None else CellResult(*out, None)
 
-    over_seeds = jax.vmap(one, in_axes=(None, None, 0))
-    over_scenarios = jax.vmap(over_seeds, in_axes=(0, 0, None))
-    return over_scenarios(scheduler, energy, keys)
+    over_seeds = jax.vmap(one, in_axes=(None, None, None, None, 0))
+    over_scenarios = jax.vmap(over_seeds, in_axes=(0, 0, 0, 0, None))
+    return over_scenarios(scheduler, energy, active, p, keys)
 
 
 def clear_cache() -> None:
@@ -144,10 +205,45 @@ def execute_cells(
     vmap(scenarios)∘vmap(seeds) computation per group (sharded across
     ``mesh`` when given); ``sequential=True`` runs one traced scan per
     cell — the pre-refactor model kept for cross-checks and timing.
+
+    Populations may be **ragged**: scenarios whose ``n_clients`` differ
+    from the simulator's capacity ``N_cap = len(sim.p)`` are padded to
+    N_cap with an active-row mask and per-cell renormalized weights
+    (:func:`subpopulation_p`), so every population size of one
+    scheduler × arrival structure shares a single compiled computation.
+    Raggedness is decided **per structure group**: a group whose members
+    are all at full capacity runs the unmasked legacy program
+    bit-for-bit (and keeps its jit cache entry) even when other groups
+    of the same grid mix populations; a full-capacity cell inside a
+    mixed group runs under an all-ones mask with the caller's ``p``
+    verbatim — also bit-identical. Per-client outputs
+    (``history.participation``) are cropped back to the natural n.
+    ``grads_fn`` must always emit N_cap rows — ragged cells simply
+    ignore the rows of clients that don't exist.
     """
     scenarios = list(scenarios)
     names = check_unique_names(scenarios)
     seed_list, keys = _seed_keys(seeds)
+
+    n_cap = int(sim.p.shape[0])
+    over = [f"{sc.name} (N={sc.n_clients})" for sc in scenarios
+            if sc.n_clients > n_cap]
+    if over:
+        raise ValueError(
+            f"scenario population exceeds the simulator capacity "
+            f"N_cap={n_cap} (len(sim.p)): {over}")
+
+    def cell_mask_p(sc):
+        """(active_mask, p) for one cell of a ragged group. A
+        full-capacity cell gets an all-ones mask and the caller's
+        ``sim.p`` *unrenormalized*: multiplying by 1.0 and reusing p
+        verbatim keeps it bit-identical to the unmasked run, whereas
+        renormalizing would perturb it whenever p does not sum to
+        exactly 1.0 in f32."""
+        if sc.n_clients == n_cap:
+            return jnp.ones((n_cap,), jnp.float32), sim.p
+        return (population_mask(sc.n_clients, n_cap),
+                subpopulation_p(sim.p, sc.n_clients, n_cap))
 
     if sequential:
         if mesh is not None:
@@ -155,42 +251,61 @@ def execute_cells(
         results = {}
         for sc in scenarios:
             scheduler, energy = sc.build()
+            active, p_cell = (None, None)
+            if sc.n_clients != n_cap:
+                scheduler, energy = _pad_built((scheduler, energy), n_cap)
+                active, p_cell = cell_mask_p(sc)
             per_seed = []
             for s in seed_list:
                 out = sim.run(jax.random.PRNGKey(int(s)), params0, num_steps,
                               scheduler=scheduler, energy=energy,
+                              p=p_cell, active_mask=active,
                               eval_fn=eval_fn, eval_every=eval_every)
                 cell = CellResult(*out) if eval_fn is not None \
                     else CellResult(*out, None)
                 per_seed.append(cell)
-            results[sc.name] = jax.tree_util.tree_map(
+            stacked = jax.tree_util.tree_map(
                 lambda *xs: jnp.stack(xs), *per_seed)
+            results[sc.name] = _crop_cell(stacked, sc.n_clients, n_cap)
         return results
 
     sharded = mesh is not None and mesh.size > 1
     if sharded:
         from repro.experiments import placement
 
+    # Pad below-capacity components to N_cap (an identity at capacity,
+    # so full-capacity components are used as built) and group on the
+    # padded structure; raggedness is then decided per group — only
+    # groups that actually mix population sizes pay for mask/p operands
+    # (and uniform groups keep their mask-free jit cache entries).
     built = [sc.build() for sc in scenarios]
+    padded = [b if sc.n_clients == n_cap else _pad_built(b, n_cap)
+              for sc, b in zip(scenarios, built)]
     groups: dict[Any, list[int]] = {}
-    for idx, (sch, en) in enumerate(built):
+    for idx, (sch, en) in enumerate(padded):
         groups.setdefault(_group_key(sch, en), []).append(idx)
 
     results: list[CellResult | None] = [None] * len(scenarios)
     for members in groups.values():
-        sch_batch = _stack([built[i][0] for i in members])
-        en_batch = _stack([built[i][1] for i in members])
+        ragged = any(scenarios[i].n_clients != n_cap for i in members)
+        sch_batch = _stack([padded[i][0] for i in members])
+        en_batch = _stack([padded[i][1] for i in members])
+        active_batch, p_batch = None, None
+        if ragged:
+            masks, ps = zip(*(cell_mask_p(scenarios[i]) for i in members))
+            active_batch, p_batch = jnp.stack(masks), jnp.stack(ps)
         if sharded:
             out = placement.run_group_sharded(
-                sch_batch, en_batch, params0, keys, sim=sim,
-                num_steps=num_steps, n_scenarios=len(members), mesh=mesh,
-                eval_fn=eval_fn, eval_every=eval_every)
+                sch_batch, en_batch, active_batch, p_batch, params0, keys,
+                sim=sim, num_steps=num_steps, n_scenarios=len(members),
+                mesh=mesh, eval_fn=eval_fn, eval_every=eval_every)
         else:
-            out = _run_group(sch_batch, en_batch, params0, keys, sim=sim,
-                             num_steps=num_steps, eval_fn=eval_fn,
-                             eval_every=eval_every)
+            out = _run_group(sch_batch, en_batch, active_batch, p_batch,
+                             params0, keys, sim=sim, num_steps=num_steps,
+                             eval_fn=eval_fn, eval_every=eval_every)
         for j, idx in enumerate(members):
-            results[idx] = jax.tree_util.tree_map(lambda x: x[j], out)
+            cell = jax.tree_util.tree_map(lambda x: x[j], out)
+            results[idx] = _crop_cell(cell, scenarios[idx].n_clients, n_cap)
     return dict(zip(names, results))
 
 

@@ -61,18 +61,23 @@ def _cell_axis(mesh: Mesh) -> str:
     return mesh.axis_names[0]
 
 
-def flatten_cells(scheduler, energy, keys, *, n_scenarios: int):
+def flatten_cells(scheduler, energy, keys, *, n_scenarios: int,
+                  active=None, p=None):
     """(S-stacked components, (R, 2) keys) → C = S·R flat cell arrays.
 
     Cell ``c = s·R + r`` pairs scenario ``s`` with seed ``r``, matching
-    ``x.reshape(S, R, ...)`` on the way back out.
+    ``x.reshape(S, R, ...)`` on the way back out. ``active`` / ``p`` are
+    the optional (S, N_cap) ragged-population operands, repeated over
+    seeds like the components (None passes through).
     """
     r = keys.shape[0]
     rep = lambda x: jnp.repeat(x, r, axis=0)
     sch_c = jax.tree_util.tree_map(rep, scheduler)
     en_c = jax.tree_util.tree_map(rep, energy)
+    active_c = jax.tree_util.tree_map(rep, active)
+    p_c = jax.tree_util.tree_map(rep, p)
     keys_c = jnp.tile(keys, (n_scenarios, 1))
-    return sch_c, en_c, keys_c
+    return sch_c, en_c, active_c, p_c, keys_c
 
 
 def pad_cells(tree, n_cells: int, n_devices: int):
@@ -92,35 +97,38 @@ def pad_cells(tree, n_cells: int, n_devices: int):
 
 @partial(jax.jit,
          static_argnames=("sim", "num_steps", "eval_fn", "eval_every", "mesh"))
-def _run_group_sharded(scheduler, energy, params0, keys, *, sim,
+def _run_group_sharded(scheduler, energy, active, p, params0, keys, *, sim,
                        num_steps: int, eval_fn=None, eval_every: int = 0,
                        mesh: Mesh):
     """shard_map'd twin of ``engine._run_group``.
 
     ``scheduler`` / ``energy`` / ``keys`` leaves carry a leading
-    (device-divisible) flat cell axis; ``params0`` is replicated. Each
-    device vmaps the simulator scan over its local cells. Compiled once
-    per (sim, group structure, mesh) — probe
-    ``_run_group_sharded._cache_size()`` to assert trace counts.
+    (device-divisible) flat cell axis, as do the optional
+    ``active`` / ``p`` ragged-population operands (both None for
+    uniform grids); ``params0`` is replicated. Each device vmaps the
+    simulator scan over its local cells. Compiled once per (sim, group
+    structure, mesh) — probe ``_run_group_sharded._cache_size()`` to
+    assert trace counts.
     """
     from repro.experiments.engine import CellResult
 
     axis = _cell_axis(mesh)
     cells, replicated = PartitionSpec(axis), PartitionSpec()
 
-    def local(sch, en, ks, p0):
-        def one(s, e, k):
+    def local(sch, en, act, pw, ks, p0):
+        def one(s, e, a, w, k):
             out = sim.run(k, p0, num_steps, scheduler=s, energy=e,
+                          p=w, active_mask=a,
                           eval_fn=eval_fn, eval_every=eval_every)
             return CellResult(*out) if eval_fn is not None \
                 else CellResult(*out, None)
 
-        return jax.vmap(one, in_axes=(0, 0, 0))(sch, en, ks)
+        return jax.vmap(one, in_axes=(0, 0, 0, 0, 0))(sch, en, act, pw, ks)
 
     fn = shard_map(local, mesh=mesh,
-                   in_specs=(cells, cells, cells, replicated),
+                   in_specs=(cells, cells, cells, cells, cells, replicated),
                    out_specs=cells, check_rep=False)
-    return fn(scheduler, energy, keys, params0)
+    return fn(scheduler, energy, active, p, keys, params0)
 
 
 def clear_cache() -> None:
@@ -128,25 +136,27 @@ def clear_cache() -> None:
     _run_group_sharded.clear_cache()
 
 
-def run_group_sharded(scheduler, energy, params0, keys, *, sim,
+def run_group_sharded(scheduler, energy, active, p, params0, keys, *, sim,
                       num_steps: int, n_scenarios: int, mesh: Mesh,
                       eval_fn=None, eval_every: int = 0):
     """Execute one structure-group's (S × R) cell block across ``mesh``.
 
     Flatten → pad → shard_map → slice off padding → reshape to (S, R).
-    Per-cell numerics match the vmap path to float32 reassociation
-    tolerance (each cell is the same ``ClientSimulator.run`` under the
-    same per-seed PRNG key).
+    ``active`` / ``p`` are the optional (S, N_cap) ragged-population
+    operands (engine-level client padding; DESIGN.md §7), sharded along
+    the cell axis exactly like the components. Per-cell numerics match
+    the vmap path to float32 reassociation tolerance (each cell is the
+    same ``ClientSimulator.run`` under the same per-seed PRNG key).
     """
     _cell_axis(mesh)  # validate before any device work
     r = keys.shape[0]
     n_cells = n_scenarios * r
-    sch_c, en_c, keys_c = flatten_cells(scheduler, energy, keys,
-                                        n_scenarios=n_scenarios)
-    (sch_c, en_c, keys_c), _ = pad_cells((sch_c, en_c, keys_c), n_cells,
-                                         mesh.size)
-    out = _run_group_sharded(sch_c, en_c, params0, keys_c, sim=sim,
-                             num_steps=num_steps, eval_fn=eval_fn,
+    sch_c, en_c, active_c, p_c, keys_c = flatten_cells(
+        scheduler, energy, keys, n_scenarios=n_scenarios, active=active, p=p)
+    (sch_c, en_c, active_c, p_c, keys_c), _ = pad_cells(
+        (sch_c, en_c, active_c, p_c, keys_c), n_cells, mesh.size)
+    out = _run_group_sharded(sch_c, en_c, active_c, p_c, params0, keys_c,
+                             sim=sim, num_steps=num_steps, eval_fn=eval_fn,
                              eval_every=eval_every, mesh=mesh)
     return jax.tree_util.tree_map(
         lambda x: x[:n_cells].reshape((n_scenarios, r) + x.shape[1:]), out)

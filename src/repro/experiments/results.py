@@ -110,6 +110,10 @@ class GridResult(Mapping):
         unhashable (an explicit taus list, a ``(kind, kwargs)`` arrival
         pair). A selector that equals one axis value verbatim is a
         scalar selection even if it is itself a list/tuple.
+
+        A selector value absent from its axis raises ``KeyError`` naming
+        the axis and its valid values; an unknown axis *name* raises
+        ``ValueError`` naming the selectable axes.
         """
         for axis in selectors:
             if axis not in self.axes or axis == "seed":
@@ -125,10 +129,19 @@ class GridResult(Mapping):
         scalar = {a for a, v in selectors.items() if is_scalar(a, v)}
         wanted = {a: ([v] if a in scalar else list(v))
                   for a, v in selectors.items()}
+        for axis, vs in wanted.items():
+            missing = [v for v in vs
+                       if not any(v == av for av in self.axes[axis])]
+            if missing:
+                raise KeyError(
+                    f"axis {axis!r} has no value {missing[0]!r}; valid "
+                    f"values: {list(self.axes[axis])}")
         names = [n for n, lab in self._labels.items()
                  if all(any(lab[a] == w for w in vs)
                         for a, vs in wanted.items())]
         if not names:
+            # Every selector value exists on its axis, but the joint
+            # combination has no cell (possible on irregular grids).
             raise KeyError(f"no cells match {selectors!r}")
         cells = {n: self._cells[n] for n in names}
         labels = {n: self._labels[n] for n in names}

@@ -56,6 +56,11 @@ class Scenario:
     paper's cycling (1, 5, 10, 20) profile); ``scheduler_kwargs`` /
     ``arrival_kwargs`` feed extra hyperparameters (e.g. battery
     capacity, day/night cycle length) to the component factories.
+
+    ``n_clients`` need not match other scenarios in a grid: the engine
+    pads ragged populations to the simulator capacity under an active
+    mask (DESIGN.md §7), so mixed-N scenario lists batch into one
+    compiled computation per scheduler × arrival structure.
     """
 
     name: str

@@ -304,8 +304,13 @@ def _day_night(n_clients: int = 8, num_steps: int = 2000, period: int = 50,
 def _population_scaling(n_clients: Sequence[int] = (4, 8, 16),
                         num_steps: int = 1000, taus_profile="paper",
                         seeds=8) -> Study:
-    """Client-population scaling curve (one structure group per N —
-    the engine pads nothing; each N compiles its own grid)."""
+    """Client-population scaling curve as ONE compiled computation:
+    population size is a *data* axis (DESIGN.md §7) — every cell is
+    padded to the simulator capacity ``len(sim.p)`` with an active-row
+    mask, so all N values of the scheduler × arrival structure share a
+    single trace. The caller's ``sim``/``grads_fn``/``p`` must be built
+    at capacity ≥ max(n_clients); each cell reweights (and crops its
+    participation history) to its own N."""
     return Study("population_scaling", num_steps=num_steps, axes={
         "scheduler": "alg2", "arrivals": "binary",
         "n_clients": [int(n) for n in n_clients],

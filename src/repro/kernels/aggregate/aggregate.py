@@ -34,9 +34,20 @@ def _agg_kernel(w_ref, g_ref, o_ref):
                          preferred_element_type=jnp.float32).astype(o_ref.dtype)
 
 
+def _agg_kernel_masked(w_ref, m_ref, g_ref, o_ref):
+    # w, m: (1, N) f32; g: (N, bp); o: (1, bp).  The mask is a row
+    # *select*, not a multiplicand: masked rows are replaced by zeros
+    # before the matvec, so a padded client contributes exactly 0 even
+    # when its gradient row is inf/NaN garbage (0·inf would be NaN).
+    g = g_ref[...].astype(jnp.float32)
+    g = jnp.where(m_ref[...].T > 0, g, 0.0)
+    o_ref[...] = jnp.dot(w_ref[...], g,
+                         preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("block_p", "interpret", "out_dtype"))
-def masked_scaled_aggregate_kernel(g, w, *, block_p: int = 2048,
+def masked_scaled_aggregate_kernel(g, w, mask=None, *, block_p: int = 2048,
                                    interpret: bool = False, out_dtype=None):
     """g: (N, P); w: (N,) -> (P,) = w @ g.
 
@@ -45,7 +56,11 @@ def masked_scaled_aggregate_kernel(g, w, *, block_p: int = 2048,
     (DESIGN.md §5) ravels the gradient pytree *before* calling in rather
     than launching per leaf. ``out_dtype`` overrides the output dtype
     (the in-kernel accumulation is f32 regardless), e.g. f32 server
-    aggregates from bf16 client gradients.
+    aggregates from bf16 client gradients. ``mask`` is an optional (N,)
+    0/1 active-row operand (ragged populations, DESIGN.md §7): masked
+    rows are zero-selected inside the tile before the MXU matvec, so
+    they contribute exact zeros regardless of their contents; without a
+    mask the two-operand program is unchanged.
     """
     n, p = g.shape
     bp = min(block_p, p)
@@ -53,16 +68,29 @@ def masked_scaled_aggregate_kernel(g, w, *, block_p: int = 2048,
     if pad:
         g = jnp.pad(g, ((0, 0), (0, pad)))
     pp = p + pad
-    out = pl.pallas_call(
-        _agg_kernel,
-        grid=(pp // bp,),
-        in_specs=[
-            pl.BlockSpec((1, n), lambda i: (0, 0)),
-            pl.BlockSpec((n, bp), lambda i: (0, i)),
-        ],
-        out_specs=pl.BlockSpec((1, bp), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct(
-            (1, pp), jnp.dtype(out_dtype) if out_dtype is not None else g.dtype),
-        interpret=interpret,
-    )(w.reshape(1, n).astype(jnp.float32), g)
+    out_shape = jax.ShapeDtypeStruct(
+        (1, pp), jnp.dtype(out_dtype) if out_dtype is not None else g.dtype)
+    w_op = w.reshape(1, n).astype(jnp.float32)
+    vec_spec = pl.BlockSpec((1, n), lambda i: (0, 0))
+    g_spec = pl.BlockSpec((n, bp), lambda i: (0, i))
+    o_spec = pl.BlockSpec((1, bp), lambda i: (0, i))
+    if mask is None:
+        out = pl.pallas_call(
+            _agg_kernel,
+            grid=(pp // bp,),
+            in_specs=[vec_spec, g_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(w_op, g)
+    else:
+        m_op = mask.reshape(1, n).astype(jnp.float32)
+        out = pl.pallas_call(
+            _agg_kernel_masked,
+            grid=(pp // bp,),
+            in_specs=[vec_spec, vec_spec, g_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(w_op, m_op, g)
     return out[0, :p]

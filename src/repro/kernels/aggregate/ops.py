@@ -19,15 +19,19 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def masked_scaled_aggregate(g, w, block_p: int = 2048, out_dtype=None):
+def masked_scaled_aggregate(g, w, block_p: int = 2048, out_dtype=None,
+                            mask=None):
     """out[p] = Σ_n w[n]·g[n,p].  g: (N, P); w: (N,) -> (P,).
 
     ``out_dtype`` optionally overrides the output dtype (f32 in-kernel
-    accumulation either way).
+    accumulation either way). ``mask`` is an optional (N,) 0/1
+    active-row operand: masked rows are zero-selected inside the tile
+    (exact-zero contribution even for non-finite rows).
     """
     n = g.shape[0]
     itemsize = g.dtype.itemsize
     while block_p > 128 and n * block_p * itemsize > _VMEM_BUDGET:
         block_p //= 2
     return masked_scaled_aggregate_kernel(
-        g, w, block_p=block_p, interpret=_interpret(), out_dtype=out_dtype)
+        g, w, mask, block_p=block_p, interpret=_interpret(),
+        out_dtype=out_dtype)

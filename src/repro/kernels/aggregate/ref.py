@@ -3,7 +3,10 @@
 import jax.numpy as jnp
 
 
-def masked_scaled_aggregate_ref(g, w):
-    """g: (N, P); w: (N,) -> (P,)."""
-    return jnp.einsum("n,np->p", w.astype(jnp.float32),
-                      g.astype(jnp.float32)).astype(g.dtype)
+def masked_scaled_aggregate_ref(g, w, mask=None):
+    """g: (N, P); w: (N,) -> (P,). ``mask``: optional (N,) active rows —
+    masked rows are dropped (selected to zero) before the reduction."""
+    g32 = g.astype(jnp.float32)
+    if mask is not None:
+        g32 = jnp.where(mask.reshape(-1, 1) > 0, g32, 0.0)
+    return jnp.einsum("n,np->p", w.astype(jnp.float32), g32).astype(g.dtype)

@@ -23,6 +23,10 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers",
         "multidevice: requires >= 2 jax devices (sharded grid placement)")
+    config.addinivalue_line(
+        "markers",
+        "ragged: ragged client populations (mask-aware padded grids, "
+        "DESIGN.md §7) — select with `-m ragged`")
 
 
 def pytest_collection_modifyitems(config, items):

@@ -28,11 +28,16 @@ def mean_weights(scheduler, process, p, horizon, skip=200, seed=0):
 
 
 def test_adaptive_scaling_is_asymptotically_unbiased():
+    """Asymptotic in the EMA rate: the 1/r̂ scale is anti-correlated with
+    the mask (r̂ jumps right when the client participates), a systematic
+    O(ema) downward bias for low-β clients — so the unbiasedness claim
+    is tested at a small EMA rate, where it is ~6% for β=0.15 (vs ~15%
+    at the 0.05 default)."""
     p = np.array([0.3, 0.3, 0.4])
     proc = BinaryArrivals([0.15, 0.45, 0.9])
-    sch = make_scheduler("battery_adaptive", 3, capacity=1.0)
-    w = mean_weights(sch, proc, p, horizon=6000, skip=1000)
-    np.testing.assert_allclose(w, p, rtol=0.15)
+    sch = make_scheduler("battery_adaptive", 3, capacity=1.0, ema=0.02)
+    w = mean_weights(sch, proc, p, horizon=12000, skip=2000)
+    np.testing.assert_allclose(w, p, rtol=0.10)
 
 
 def test_energy_conservation():

@@ -47,6 +47,59 @@ def test_aggregate_masking_zeroes_clients():
     np.testing.assert_allclose(out, 3.0)
 
 
+@pytest.mark.ragged
+@pytest.mark.parametrize("in_dtype,out_dtype", [
+    (jnp.float32, None), (jnp.bfloat16, jnp.float32),
+])
+def test_aggregate_mask_operand_rows_are_exact_zeros(in_dtype, out_dtype):
+    """The mask operand is a row *select* on the tiled reduction: a
+    masked row contributes exactly 0 — not an epsilon — even when its
+    weight is nonzero and its contents are inf/NaN garbage (a ×0
+    multiply would produce NaN)."""
+    n, p = 6, 300
+    k1, k2 = jax.random.split(jax.random.PRNGKey(4))
+    g = jax.random.normal(k1, (n, p)).astype(in_dtype)
+    # rows 1 and 4 are dead: poison them with non-finite garbage
+    garbage = jnp.full((p,), jnp.inf, in_dtype)
+    g = g.at[1].set(garbage).at[4].set(jnp.nan)
+    w = jax.random.uniform(k2, (n,)) + 0.5  # all weights nonzero
+    mask = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0, 1.0])
+    out = masked_scaled_aggregate_kernel(g, w, mask, block_p=128,
+                                         interpret=True,
+                                         out_dtype=out_dtype)
+    assert np.isfinite(np.asarray(out, np.float32)).all()
+    ref = masked_scaled_aggregate_ref(
+        jnp.where(mask[:, None] > 0, g, jnp.zeros((), in_dtype)), w)
+    tol = 1e-6 if in_dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+    # exactness, not epsilon: a masked-only change to g leaves the
+    # output bit-identical
+    g2 = g.at[1].set(-garbage).at[4].set(1e30)
+    out2 = masked_scaled_aggregate_kernel(g2, w, mask, block_p=128,
+                                          interpret=True,
+                                          out_dtype=out_dtype)
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  np.asarray(out2, np.float32))
+
+
+@pytest.mark.ragged
+def test_aggregate_mask_none_is_bit_identical_to_unmasked():
+    """mask=None keeps the original two-operand program (no behavior
+    drift for uniform populations); an all-ones mask agrees exactly."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+    g = jax.random.normal(k1, (7, 130))
+    w = jax.random.uniform(k2, (7,))
+    base = masked_scaled_aggregate_kernel(g, w, block_p=64, interpret=True)
+    ones = masked_scaled_aggregate_kernel(g, w, jnp.ones((7,)), block_p=64,
+                                          interpret=True)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(ones))
+    np.testing.assert_allclose(np.asarray(base),
+                               np.asarray(masked_scaled_aggregate_ref(g, w)),
+                               rtol=1e-5, atol=1e-5)
+
+
 # -------------------------------------------------------- flash attention
 
 @pytest.mark.parametrize("b,h,hkv,s,dh,causal,window,bq,bk", [

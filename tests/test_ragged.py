@@ -1,0 +1,360 @@
+"""Ragged client populations (DESIGN.md §7): equivalence + trace counts.
+
+The tentpole guarantee, locked in bit-for-bit: padding a scenario's
+per-client component leaves to the simulator capacity N_cap and running
+it under an ``active_mask`` produces *exactly* the numbers of the
+natural-N run — across all six schedulers — while every population size
+of one scheduler × arrival structure shares a single compiled
+computation.
+
+The per-N baseline is an honest unpadded setup: its own simulator whose
+``grads_fn``/``p`` are built at the natural N (via the same
+:func:`repro.experiments.subpopulation_p` renormalization the engine
+applies), executed through ``run_grid_sequential`` — one traced scan per
+cell, no padding, no masks.
+
+Loss functions here are chosen vmap-stable (elementwise + single
+reduction): batching never reassociates them, so ``assert_array_equal``
+is meaningful. Gradients are deterministic — per-client *stochastic*
+noise is exercised by the hypothesis module
+(``test_ragged_properties.py``) with shape-independent fold_in draws.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ClientSimulator, make_quadratic, scheduler_names
+from repro.core.energy import (
+    BinaryArrivals,
+    DayNightArrivals,
+    DeterministicArrivals,
+    UniformArrivals,
+    client_randint,
+    client_uniform,
+    pad_arrivals,
+)
+from repro.core.scheduling import make_scheduler, pad_scheduler
+from repro.experiments import (
+    ExecutionConfig,
+    Scenario,
+    Study,
+    engine,
+    get_study,
+    make_cell_mesh,
+    run_grid_sequential,
+    subpopulation_p,
+)
+from repro.optim import sgd
+
+ragged = pytest.mark.ragged
+multidevice = pytest.mark.multidevice
+
+N_CAP, DIM = 8, 5
+
+#: every (scheduler, arrival-family) pairing exercised bit-for-bit; all
+#: six schedulers appear, each against a compatible arrival process.
+SCHEDULER_ARRIVALS = [
+    ("alg1", "periodic"),
+    ("alg2", "binary"),
+    ("benchmark1", "uniform"),
+    ("benchmark2", "periodic"),
+    ("oracle", "binary"),
+    ("battery_adaptive", "day_night"),
+]
+
+
+@pytest.fixture(scope="module")
+def master():
+    return make_quadratic(jax.random.PRNGKey(2), n_clients=N_CAP, dim=DIM,
+                          hetero=1.0)
+
+
+@pytest.fixture(scope="module")
+def loss_fn(master):
+    # Elementwise + one sum: bit-stable under vmap (the 4-operand
+    # suboptimality einsum is not — its contraction path changes when
+    # batched).
+    w_star = master.w_star
+    return lambda w: jnp.sum((w - w_star) ** 2)
+
+
+@pytest.fixture(scope="module")
+def sim(master, loss_fn):
+    """The capacity-wide simulator the padded engine path uses."""
+    return ClientSimulator(grads_fn=lambda w, k, t: master.all_grads(w),
+                           p=master.p, optimizer=sgd(0.02), loss_fn=loss_fn)
+
+
+@pytest.fixture(scope="module")
+def params0():
+    return jnp.full((DIM,), 4.0)
+
+
+def baseline_cell(master, loss_fn, params0, *, scheduler, arrivals, n,
+                  num_steps, seeds):
+    """Natural-N reference: a dedicated n-client sim, sequential scan.
+
+    Weights follow the engine's rule: a true subpopulation renormalizes
+    the master prefix over its n clients; the full population keeps the
+    master p verbatim (capacity cells are never renormalized)."""
+    name = f"{scheduler}_{arrivals}_n{n}"
+    p_n = master.p if n == N_CAP else subpopulation_p(master.p, n, n)
+    sub = ClientSimulator(
+        grads_fn=lambda w, k, t: master.all_grads(w)[:n],
+        p=p_n, optimizer=sgd(0.02), loss_fn=loss_fn)
+    return run_grid_sequential(
+        [Scenario(name, scheduler, arrivals, n, num_steps + 1)],
+        sim=sub, params0=params0, num_steps=num_steps, seeds=seeds)[name]
+
+
+def assert_cells_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.history.loss),
+                                  np.asarray(b.history.loss))
+    np.testing.assert_array_equal(np.asarray(a.history.participation),
+                                  np.asarray(b.history.participation))
+    np.testing.assert_array_equal(np.asarray(a.history.weight_sum),
+                                  np.asarray(b.history.weight_sum))
+    np.testing.assert_array_equal(np.asarray(a.params), np.asarray(b.params))
+
+
+# ----------------------------------------------------- bit-for-bit equality
+
+@ragged
+@pytest.mark.parametrize("scheduler,arrivals", SCHEDULER_ARRIVALS)
+def test_padded_matches_per_n_sequential_bitwise(master, loss_fn, sim,
+                                                 params0, scheduler,
+                                                 arrivals):
+    """Acceptance: masked-padded batched execution == per-N sequential
+    baseline, bit-for-bit, for every scheduler (all 6 covered across the
+    parametrization) and every population size."""
+    num_steps, seeds, pops = 25, 2, (3, 5, 8)
+    study = Study("rag", num_steps=num_steps, axes={
+        "scheduler": scheduler, "arrivals": arrivals,
+        "n_clients": list(pops), "seeds": seeds})
+    res = study.run(sim=sim, params0=params0)
+    for n in pops:
+        base = baseline_cell(master, loss_fn, params0, scheduler=scheduler,
+                             arrivals=arrivals, n=n, num_steps=num_steps,
+                             seeds=seeds)
+        cell = res[f"{scheduler}_{arrivals}_n{n}"]
+        assert cell.history.participation.shape == (seeds, num_steps, n)
+        assert_cells_equal(cell, base)
+
+
+@ragged
+def test_all_six_schedulers_are_covered():
+    assert sorted(s for s, _ in SCHEDULER_ARRIVALS) == scheduler_names()
+
+
+@ragged
+def test_padded_sequential_matches_per_n_sequential_bitwise(master, loss_fn,
+                                                            sim, params0):
+    """The sequential engine path pads ragged cells too (so batched and
+    sequential run identical cell programs) — and stays bit-identical to
+    the natural-N run."""
+    num_steps, seeds = 20, 2
+    study = Study("rag", num_steps=num_steps, axes={
+        "scheduler": "alg2", "arrivals": "binary",
+        "n_clients": [4, 8], "seeds": seeds})
+    res = study.run(sim=sim, params0=params0,
+                    config=ExecutionConfig(sequential=True))
+    for n in (4, 8):
+        base = baseline_cell(master, loss_fn, params0, scheduler="alg2",
+                             arrivals="binary", n=n, num_steps=num_steps,
+                             seeds=seeds)
+        assert_cells_equal(res[f"alg2_binary_n{n}"], base)
+
+
+@ragged
+def test_kernel_path_matches_reference_on_ragged_grid(master, loss_fn,
+                                                      params0):
+    """The Pallas mask-operand path agrees with the jnp masked matvec."""
+    kw = dict(grads_fn=lambda w, k, t: master.all_grads(w), p=master.p,
+              optimizer=sgd(0.02), loss_fn=loss_fn)
+    study = Study("rag", num_steps=10, axes={
+        "scheduler": "alg2", "arrivals": "binary",
+        "n_clients": [3, 8], "seeds": 2})
+    plain = study.run(sim=ClientSimulator(**kw), params0=params0)
+    kern = study.run(sim=ClientSimulator(use_kernel=True, **kw),
+                     params0=params0)
+    for name in plain:
+        np.testing.assert_allclose(np.asarray(plain[name].history.loss),
+                                   np.asarray(kern[name].history.loss),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(
+            np.asarray(plain[name].history.participation),
+            np.asarray(kern[name].history.participation))
+
+
+# ----------------------------------------------------------- trace counts
+
+@ragged
+def test_three_population_grid_compiles_once_per_structure(sim, params0):
+    """Acceptance: a 3-population grid over 2 schedulers × 1 arrival
+    family compiles exactly one computation per scheduler × arrival
+    structure — N is a data axis, not a shape axis."""
+    study = Study("rag", num_steps=15, axes={
+        "scheduler": ["alg2", "benchmark1"], "arrivals": "binary",
+        "n_clients": [3, 5, 8], "seeds": 2})
+    before = engine._run_group._cache_size()
+    res = study.run(sim=sim, params0=params0)
+    assert engine._run_group._cache_size() - before == 2  # not 6
+    assert len(res) == 6
+
+
+@ragged
+def test_population_scaling_study_single_trace(sim, params0):
+    """The registered population_scaling study over 3 N values is one
+    compiled computation. (num_steps differs from every other test in
+    this module so the delta measures a fresh trace, not a jit-cache
+    hit from an earlier identically-shaped group.)"""
+    study = get_study("population_scaling", n_clients=(3, 5, 8),
+                      num_steps=17, seeds=2)
+    before = engine._run_group._cache_size()
+    res = study.run(sim=sim, params0=params0)
+    assert engine._run_group._cache_size() - before == 1
+    assert [res[n].history.participation.shape[-1] for n in res] == [3, 5, 8]
+
+
+@ragged
+def test_full_capacity_cell_unchanged_by_ragged_neighbors(sim, params0):
+    """Regression: adding an unrelated smaller-N scenario to a grid must
+    not change a full-capacity cell's numerics — bit-for-bit. (The
+    capacity cell keeps the caller's ``sim.p`` verbatim and an all-ones
+    mask; renormalizing p — which does not sum to exactly 1.0 in f32 —
+    would have perturbed it.)"""
+    from repro.experiments import run_grid
+
+    num_steps, seeds = 20, 2
+    cell8 = Scenario("alg2_binary_n8", "alg2", "binary", N_CAP, num_steps + 1)
+    cell4 = Scenario("alg2_binary_n4", "alg2", "binary", 4, num_steps + 1)
+    alone = run_grid([cell8], sim=sim, params0=params0,
+                     num_steps=num_steps, seeds=seeds)
+    mixed = run_grid([cell8, cell4], sim=sim, params0=params0,
+                     num_steps=num_steps, seeds=seeds)
+    assert_cells_equal(alone["alg2_binary_n8"], mixed["alg2_binary_n8"])
+
+
+@ragged
+def test_uniform_group_keeps_cache_in_mixed_grid(sim, params0):
+    """Raggedness is per structure group: a group whose members are all
+    at capacity runs the mask-free program and keeps its jit cache entry
+    even when another group of the same grid mixes populations."""
+    from repro.experiments import run_grid
+
+    num_steps, seeds = 11, 2
+    alg1_8 = Scenario("alg1_n8", "alg1", "binary", N_CAP, num_steps + 1)
+    run_grid([alg1_8], sim=sim, params0=params0, num_steps=num_steps,
+             seeds=seeds)
+    before = engine._run_group._cache_size()
+    mixed = run_grid(
+        [alg1_8,
+         Scenario("alg2_n4", "alg2", "binary", 4, num_steps + 1),
+         Scenario("alg2_n8", "alg2", "binary", N_CAP, num_steps + 1)],
+        sim=sim, params0=params0, num_steps=num_steps, seeds=seeds)
+    # only the (ragged) alg2 group traces; the uniform alg1 group hits
+    # its existing mask-free executable
+    assert engine._run_group._cache_size() - before == 1
+    assert len(mixed) == 3
+
+
+# ------------------------------------------------------------- validation
+
+@ragged
+def test_population_above_capacity_is_a_clear_error(sim, params0):
+    study = Study("rag", num_steps=5, axes={
+        "scheduler": "alg2", "arrivals": "binary",
+        "n_clients": [4, 16], "seeds": 1})
+    with pytest.raises(ValueError, match=r"N_cap=8.*n16.*N=16"):
+        study.run(sim=sim, params0=params0)
+
+
+@ragged
+def test_pad_clients_rejects_shrinking():
+    with pytest.raises(ValueError, match="pad"):
+        BinaryArrivals(jnp.full((4,), 0.5)).pad_clients(2)
+    with pytest.raises(ValueError, match="pad"):
+        pad_scheduler(make_scheduler("alg2", 4), 2)
+
+
+@ragged
+def test_padded_rows_are_valid_neutral_hyperparameters():
+    """Padding must never manufacture inf/NaN: β=1, period=1, empty
+    schedule rows."""
+    bin8 = pad_arrivals(BinaryArrivals(jnp.full((3,), 0.25)), 8)
+    assert bin8.n_clients == 8
+    np.testing.assert_array_equal(np.asarray(bin8.betas[3:]), 1.0)
+    uni8 = pad_arrivals(UniformArrivals(jnp.array([2, 3, 4])), 8)
+    np.testing.assert_array_equal(np.asarray(uni8.periods[3:]), 1)
+    det8 = pad_arrivals(DeterministicArrivals.periodic([1, 5], 20), 8)
+    np.testing.assert_array_equal(np.asarray(det8.schedule[2:]), 0.0)
+    np.testing.assert_array_equal(np.asarray(det8.gaps[2:]), 0.0)
+    dn = DayNightArrivals.from_taus([1, 5, 10], period=10)
+    dn8 = pad_arrivals(dn, 8)
+    assert np.isfinite(np.asarray(1.0 / dn8.betas_night)).all()
+    sch = pad_scheduler(make_scheduler("battery_adaptive", 3, capacity=4.0), 8)
+    assert sch.n_clients == 8 and float(sch.capacity) == 4.0
+
+
+# -------------------------------------------------- shape-independent RNG
+
+@ragged
+def test_client_draws_are_shape_independent():
+    """The enabling property: client i's draw does not depend on how
+    many other clients exist (unlike ``jax.random.uniform(key, (n,))``)."""
+    key = jax.random.PRNGKey(7)
+    u8, u3 = client_uniform(key, 8), client_uniform(key, 3)
+    np.testing.assert_array_equal(np.asarray(u8[:3]), np.asarray(u3))
+    periods = jnp.array([2, 5, 9, 4, 7, 3, 8, 6])
+    r8 = client_randint(key, 8, periods)
+    r3 = client_randint(key, 3, periods[:3])
+    np.testing.assert_array_equal(np.asarray(r8[:3]), np.asarray(r3))
+    assert (np.asarray(r8) >= 0).all()
+    assert (np.asarray(r8) < np.asarray(periods)).all()
+
+
+@ragged
+def test_arrival_processes_are_shape_independent():
+    """First-n rows of every stochastic process match the n-client run."""
+    key = jax.random.PRNGKey(3)
+    taus = np.array([1, 5, 10, 20, 1, 5, 10, 20])
+    for big, small in [
+        (BinaryArrivals(1.0 / taus), BinaryArrivals(1.0 / taus[:3])),
+        (UniformArrivals(taus), UniformArrivals(taus[:3])),
+        (DayNightArrivals.from_taus(taus, period=10),
+         DayNightArrivals.from_taus(taus[:3], period=10)),
+    ]:
+        sb, ss = big.init(key), small.init(key)
+        for t in range(7):
+            kt = jax.random.fold_in(key, 100 + t)
+            sb, ab = big.arrivals(sb, t, kt)
+            ss, asml = small.arrivals(ss, t, kt)
+            np.testing.assert_array_equal(np.asarray(ab.energy[:3]),
+                                          np.asarray(asml.energy))
+
+
+# -------------------------------------------------------------- sharded
+
+@ragged
+@multidevice
+def test_ragged_grid_sharded_matches_vmap(sim, params0):
+    """The 8-host-device sharded path runs ragged grids and agrees with
+    the vmap path (float32 reassociation tolerance on loss; exact
+    participation)."""
+    study = Study("rag", num_steps=20, axes={
+        "scheduler": "alg2", "arrivals": "binary",
+        "n_clients": [3, 5, 8], "seeds": 2})
+    plain = study.run(sim=sim, params0=params0)
+    sharded = study.run(sim=sim, params0=params0,
+                        config=ExecutionConfig(mesh=make_cell_mesh()))
+    for name in plain:
+        np.testing.assert_allclose(np.asarray(plain[name].history.loss),
+                                   np.asarray(sharded[name].history.loss),
+                                   rtol=2e-4, atol=1e-5)
+        np.testing.assert_array_equal(
+            np.asarray(plain[name].history.participation),
+            np.asarray(sharded[name].history.participation))
+        assert sharded[name].history.participation.shape[-1] == \
+            plain[name].history.participation.shape[-1]

@@ -1,0 +1,154 @@
+"""Ragged-population padding invariance — hypothesis property tests.
+
+Property (DESIGN.md §7): padding a scenario with k inactive clients
+never changes the loss trajectory, the scheduler participation counts,
+or the aggregate output of the clients that exist — for random
+population sizes, pad amounts, β rates, battery capacities, data
+weights, and per-client gradient noise (drawn with the
+shape-independent fold_in scheme so the property is exact, not just
+statistical).
+
+The deterministic bit-for-bit suite lives in ``test_ragged.py``; this
+module is skipped as a whole when ``hypothesis`` is not installed in
+the container.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import ClientSimulator, make_quadratic  # noqa: E402
+from repro.core.aggregation import (  # noqa: E402
+    aggregate_client_grads,
+    reduce_flat,
+)
+from repro.core.energy import (  # noqa: E402
+    BinaryArrivals,
+    client_keys,
+    pad_arrivals,
+)
+from repro.core.scheduling import make_scheduler, pad_scheduler  # noqa: E402
+from repro.experiments import subpopulation_p  # noqa: E402
+from repro.optim import sgd  # noqa: E402
+
+N_MAX, DIM = 12, 4
+
+
+def noisy_grads_fn(problem, n, noise):
+    """Deterministic per-client gradients + fold_in per-client noise —
+    client i's noise depends only on (key, t, i), never on n, so padded
+    and natural runs see identical randomness for existing clients."""
+
+    def grads(w, key, t):
+        g = problem.all_grads(w)[:n]
+        eps = jax.vmap(lambda k: noise * jax.random.normal(k, (DIM,)))(
+            client_keys(key, n))
+        return g + eps
+
+    return grads
+
+
+def run_once(problem, *, n, n_pad, betas, capacity, noise, num_steps=15,
+             seed=0):
+    """One simulator run of the first-n subpopulation, padded to n_pad
+    rows (n_pad == n → natural, unmasked run). Returns (loss,
+    participation-of-existing, weight_sum, params)."""
+    scheduler = make_scheduler("battery_adaptive", n, capacity=capacity)
+    energy = BinaryArrivals(jnp.asarray(betas[:n], jnp.float32))
+    active = None
+    if n_pad > n:
+        scheduler = pad_scheduler(scheduler, n_pad)
+        energy = pad_arrivals(energy, n_pad)
+        active = (jnp.arange(n_pad) < n).astype(jnp.float32)
+    p_cell = subpopulation_p(problem.p, n, n_pad)
+    sim = ClientSimulator(
+        grads_fn=noisy_grads_fn(problem, n_pad, noise),
+        p=p_cell, optimizer=sgd(0.05),
+        loss_fn=lambda w: jnp.sum(w * w))
+    params, hist = sim.run(jax.random.PRNGKey(seed), jnp.ones((DIM,)),
+                           num_steps, scheduler=scheduler, energy=energy,
+                           active_mask=active)
+    return (np.asarray(hist.loss), np.asarray(hist.participation)[..., :n],
+            np.asarray(hist.weight_sum), np.asarray(params))
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_quadratic(jax.random.PRNGKey(0), n_clients=N_MAX, dim=DIM,
+                          hetero=1.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, N_MAX - 1),
+    k=st.integers(1, 6),
+    beta_seed=st.integers(0, 2**20),
+    capacity=st.floats(1.0, 4.0),
+    noise=st.floats(0.0, 0.3),
+    seed=st.integers(0, 2**20),
+)
+def test_padding_never_changes_existing_clients(problem, n, k, beta_seed,
+                                                capacity, noise, seed):
+    """loss / participation / Σω / final params are identical between the
+    natural n-client run and the same run padded with k dead rows."""
+    k = min(k, N_MAX - n)
+    rng = np.random.default_rng(beta_seed)
+    betas = rng.uniform(0.1, 1.0, size=N_MAX)
+    nat = run_once(problem, n=n, n_pad=n, betas=betas, capacity=capacity,
+                   noise=noise, seed=seed)
+    pad = run_once(problem, n=n, n_pad=n + k, betas=betas, capacity=capacity,
+                   noise=noise, seed=seed)
+    for a, b in zip(nat, pad):
+        np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    mask_bits=st.lists(st.booleans(), min_size=2, max_size=10),
+    seed=st.integers(0, 2**20),
+)
+def test_arbitrary_masks_zero_inactive_rows(mask_bits, seed):
+    """For an arbitrary (not necessarily prefix) 0/1 mask, masked rows
+    contribute nothing: the aggregate equals the reference over the
+    active subset, and garbage (NaN) in masked rows never leaks."""
+    n = len(mask_bits)
+    if not any(mask_bits):
+        mask_bits[0] = True
+    mask = jnp.asarray(mask_bits, jnp.float32)
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, (n, 33))
+    g = jnp.where(mask[:, None] > 0, g, jnp.nan)  # poison dead rows
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (n,)) * mask
+    out = reduce_flat(g, w, mask=mask)
+    active = np.flatnonzero(np.asarray(mask))
+    ref = np.asarray(w, np.float64)[active] @ np.asarray(
+        jnp.where(mask[:, None] > 0, g, 0.0), np.float64)[active]
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out, np.float64), ref,
+                               rtol=1e-5, atol=1e-6)
+    # per-leaf reference path agrees
+    tree_out = aggregate_client_grads({"g": g}, w, mask)
+    np.testing.assert_allclose(np.asarray(tree_out["g"]), np.asarray(out),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, N_MAX - 1),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 2**20),
+)
+def test_participation_counts_invariant_under_padding(problem, n, k, seed):
+    """Scheduler participation *counts* of existing clients are identical
+    after padding — no probability mass moves to or from dead rows."""
+    k = min(k, N_MAX - n)
+    betas = np.full(N_MAX, 0.5)
+    nat = run_once(problem, n=n, n_pad=n, betas=betas, capacity=2.0,
+                   noise=0.0, seed=seed)
+    pad = run_once(problem, n=n, n_pad=n + k, betas=betas, capacity=2.0,
+                   noise=0.0, seed=seed)
+    np.testing.assert_array_equal(nat[1].sum(axis=0), pad[1].sum(axis=0))

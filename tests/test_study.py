@@ -290,6 +290,68 @@ def test_gridresult_sel_and_mapping():
         res.sel(scheduler="nonexistent")
 
 
+def test_gridresult_sel_absent_value_names_axis_and_valid_values():
+    """Regression: selecting an axis value absent from the grid must
+    raise a KeyError naming the axis and its valid values — not an
+    opaque empty result."""
+    res = _toy_result()
+    with pytest.raises(KeyError, match=r"axis 'scheduler' has no value "
+                                       r"'alg9'.*'alg1'.*'oracle'"):
+        res.sel(scheduler="alg9")
+    # list selectors validate every member
+    with pytest.raises(KeyError, match=r"axis 'arrivals' has no value "
+                                       r"'uniform'.*'periodic'.*'binary'"):
+        res.sel(arrivals=["periodic", "uniform"])
+
+
+def _single_cell_result(losses=(1.0, 2.0)):
+    cells, labels, axes = {}, {}, {"scheduler": ("alg1",),
+                                   "arrivals": ("periodic",),
+                                   "seed": tuple(range(len(losses)))}
+    toy = _toy_result()
+    cells["alg1_periodic"] = toy["alg1_periodic"]
+    if losses != (1.0, 2.0):
+        from repro.core.trainer import SimHistory
+        from repro.experiments import CellResult
+
+        loss = jnp.asarray(losses)[:, None] * jnp.ones((1, 20))
+        cells["alg1_periodic"] = CellResult(
+            params=jnp.zeros((len(losses), 3)),
+            history=SimHistory(loss=loss,
+                               participation=jnp.ones((len(losses), 20, 2)),
+                               weight_sum=jnp.ones((len(losses), 20))))
+    labels["alg1_periodic"] = {"scheduler": "alg1", "arrivals": "periodic"}
+    return GridResult(cells, labels, axes, name="single")
+
+
+def test_gridresult_sel_and_reduce_on_single_cell():
+    """Regression: a fully-degenerate (1-cell) grid still selects and
+    reduces instead of returning an empty mapping."""
+    res = _single_cell_result()
+    sub = res.sel(scheduler="alg1", arrivals="periodic")
+    assert len(sub) == 1
+    assert sub.only() is res["alg1_periodic"]
+    stats = res.reduce()
+    assert stats["alg1_periodic"]["mean"] == pytest.approx(1.5)
+    pooled = res.reduce(over="arrivals")
+    assert pooled["all"]["n_seeds"] == 2
+    with pytest.raises(KeyError, match="axis 'scheduler' has no value"):
+        res.sel(scheduler="oracle")
+
+
+def test_gridresult_sel_and_reduce_on_all_nan_seeds():
+    """Regression: a cell whose every seed diverged reduces to NaN
+    mean/std with n_nan == n_seeds — and never raises."""
+    res = _single_cell_result(losses=(float("nan"), float("nan")))
+    stats = res.reduce()["alg1_periodic"]
+    assert stats["n_nan"] == 2 and stats["n_seeds"] == 2
+    assert np.isnan(stats["mean"]) and np.isnan(stats["std"])
+    sub = res.sel(scheduler="alg1")
+    assert sub.reduce(over="arrivals")["all"]["n_nan"] == 2
+    recs = res.to_records()
+    assert recs[0]["n_nan"] == 2
+
+
 def test_gridresult_sel_with_unhashable_axis_values(problem, run_kwargs):
     """Regression: axis values may be unhashable — a (kind, kwargs)
     arrival pair or an explicit taus list; sel must compare by equality,
