@@ -156,6 +156,86 @@ def _population_scaling_rows(iters: int, seeds: int) -> list[str]:
     ]
 
 
+def _large_n_rows(iters: int = 20, dim: int = 16,
+                  pops=(1024, 4096, 10240)) -> list[str]:
+    """Within-cell client-sharding series (DESIGN.md §8): one quadratic
+    cell per N ∈ {1024, 4096, 10240}, run unsharded (single-device vmap
+    over clients) and client-sharded across all host devices through a
+    client-aware grads_fn (each shard computes only its own gradient
+    rows). Warm wall-clocks for both; the sharded run uses the default
+    bitwise ``gather`` reduction, so the two series measure the same
+    numbers. On a CI container whose cores the unsharded matvec already
+    saturates, sharding 8 placeholder devices over 2 cores cannot win —
+    the series exists to track the trajectory on real multi-device
+    hosts, like the quadgrid series does for cell sharding."""
+    from repro.core import ClientSimulator, make_quadratic
+    from repro.core.energy import make_arrivals
+    from repro.core.scheduling import make_scheduler
+    from repro.experiments.placement import make_client_mesh, run_client_sharded
+    from repro.optim import sgd
+
+    n_dev = jax.device_count()
+    if n_dev < 2:
+        print("largeN client-sharding: skipped (single device)",
+              file=sys.stderr)
+        return []
+    mesh = make_client_mesh()
+    params0 = jnp.full((dim,), 2.0)
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for n in pops:
+        if n % n_dev:
+            print(f"largeN: skipped N={n} (not divisible by {n_dev} devices)",
+                  file=sys.stderr)
+            continue
+        prob = make_quadratic(jax.random.PRNGKey(11), n_clients=n, dim=dim,
+                              hetero=1.0)
+        w_star = prob.w_star
+
+        def grads_fn(w, k, t, clients=None, _prob=prob):
+            if clients is None:
+                return _prob.all_grads(w)
+            return jnp.einsum("nij,j->ni", _prob.a[clients], w) \
+                - _prob.b[clients]
+
+        sim = ClientSimulator(
+            grads_fn=grads_fn, p=prob.p, optimizer=sgd(0.01),
+            loss_fn=lambda w, _ws=w_star: jnp.sum((w - _ws) ** 2))
+        scheduler = make_scheduler("alg2", n)
+        energy = make_arrivals("binary", n, iters + 1)
+
+        unsharded = jax.jit(lambda k, _s=sim, _sc=scheduler, _e=energy:
+                            _s.run(k, params0, iters, scheduler=_sc,
+                                   energy=_e))
+
+        def timed(fn):
+            out = fn()
+            jax.block_until_ready(out)
+            t0 = time.time()
+            out = fn()
+            jax.block_until_ready(out)
+            return time.time() - t0
+
+        dt_u = timed(lambda: unsharded(key))
+        dt_s = timed(lambda: run_client_sharded(
+            sim, key, params0, iters, scheduler=scheduler, energy=energy,
+            mesh=mesh))
+        speed = dt_u / dt_s
+        print(f"largeN N={n} ({iters} steps, warm): unsharded {dt_u:.2f}s vs "
+              f"client-sharded {dt_s:.2f}s over {n_dev} devices "
+              f"-> {speed:.2f}x", file=sys.stderr)
+        rows += [
+            f"largeN_unsharded_N{n},{dt_u * 1e6:.0f},"
+            f"iters={iters};dim={dim}",
+            f"largeN_sharded_N{n},{dt_s * 1e6:.0f},"
+            f"iters={iters};dim={dim};devices={n_dev};reduction=gather",
+            f"largeN_speedup_N{n},{dt_s * 1e6:.0f},"
+            f"speedup={speed:.2f};devices={n_dev};"
+            f"sharded_faster={dt_s < dt_u}",
+        ]
+    return rows
+
+
 def run(iters: int = 100, seeds: int = 8, n_clients: int = 8) -> list[str]:
     from repro.core import ClientSimulator
     from repro.experiments import (
@@ -255,6 +335,8 @@ def run(iters: int = 100, seeds: int = 8, n_clients: int = 8) -> list[str]:
     # 4× the CNN iteration budget: 400 steps on the full run (matching
     # the quadgrid series' scale), 160 under --fast.
     rows.extend(_population_scaling_rows(iters=4 * iters, seeds=seeds))
+    # Within-cell client sharding at large N (DESIGN.md §8).
+    rows.extend(_large_n_rows())
 
     # Paper ordering on the paper's (periodic) arrivals, seed-averaged:
     # the full chain alg1 ≥ benchmark1 ≥ benchmark2 (Fig. 1), each link

@@ -26,6 +26,15 @@ import os
 import sys
 import traceback
 
+#: Pinned BENCH_*.json series schema (regression-tested in
+#: ``tests/test_bench_schema.py``): every series record carries at least
+#: ``name`` (the series id compared across PRs), ``values`` (a flat dict
+#: of every numeric/bool/str measurement, ``us_per_call`` included) and
+#: ``units`` (unit per measured key; derived dimensionless fields are
+#: omitted). ``suite`` / ``us_per_call`` / ``derived`` remain for
+#: continuity with pre-schema BENCH files.
+SCHEMA = "bench-series/v1"
+
 
 def _parse_derived(derived: str) -> dict:
     """``k1=v1;k2=v2`` -> dict with numeric/bool values where possible."""
@@ -52,8 +61,33 @@ def _parse_row(suite: str, row: str) -> dict:
         us_val = float(us)
     except ValueError:
         us_val = None
+    values = _parse_derived(derived)
+    values.pop("notes", None)
+    values["us_per_call"] = us_val
     return {"suite": suite, "name": name, "us_per_call": us_val,
-            "derived": _parse_derived(derived)}
+            "derived": _parse_derived(derived),
+            "values": values, "units": {"us_per_call": "us"}}
+
+
+def build_doc(selected, fast: bool, device_count: int, records, failed) -> dict:
+    """The BENCH_*.json document — one pinned shape for every PR's
+    perf-trajectory file."""
+    return {"schema": SCHEMA, "suites": list(selected), "fast": fast,
+            "device_count": device_count, "failed": list(failed),
+            "results": list(records)}
+
+
+def bench_out_path(directory: str, date: str) -> str:
+    """One BENCH file per PR: never clobber an earlier PR's series
+    landed on the same date — uniquify with a numeric suffix that keeps
+    counting past ``.2`` (``BENCH_d.json``, ``BENCH_d.2.json``,
+    ``BENCH_d.3.json``, …)."""
+    path = os.path.join(directory, f"BENCH_{date}.json")
+    suffix = 2
+    while os.path.exists(path):
+        path = os.path.join(directory, f"BENCH_{date}.{suffix}.json")
+        suffix += 1
+    return path
 
 
 def main() -> None:
@@ -111,21 +145,13 @@ def main() -> None:
 
     out_paths = [p for p in (args.json,) if p]
     if args.bench_out:
-        # One BENCH file per PR: never clobber an earlier PR's series
-        # landed on the same date — uniquify with a numeric suffix.
-        date = datetime.date.today().isoformat()
-        path = os.path.join(args.bench_out, f"BENCH_{date}.json")
-        suffix = 2
-        while os.path.exists(path):
-            path = os.path.join(args.bench_out, f"BENCH_{date}.{suffix}.json")
-            suffix += 1
-        out_paths.append(path)
+        out_paths.append(
+            bench_out_path(args.bench_out, datetime.date.today().isoformat()))
     if out_paths:
         import jax
 
-        doc = {"suites": selected, "fast": args.fast,
-               "device_count": jax.device_count(),
-               "failed": failed, "results": records}
+        doc = build_doc(selected, args.fast, jax.device_count(), records,
+                        failed)
         for path in out_paths:
             with open(path, "w") as f:
                 json.dump(doc, f, indent=2)

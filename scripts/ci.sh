@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# CI pipeline: tier-1 first (the gate every PR must keep green), then the
+# marker suites as separate named stages so a sharding or ragged failure
+# is attributable at a glance. Stages re-select subsets of tier-1 —
+# cheap, since the jit caches are per-process and each stage is its own
+# pytest process anyway.
+#
+#   scripts/ci.sh            # all stages
+#   scripts/ci.sh tier1      # just the gate
+#   scripts/ci.sh multidevice ragged clientshard
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+stage() {
+    echo "=== stage: $1 ==="
+    shift
+    python -m pytest -q "$@"
+}
+
+run_stage() {
+    case "$1" in
+        tier1)       stage tier1 -x ;;
+        multidevice) stage multidevice -m multidevice ;;
+        ragged)      stage ragged -m ragged ;;
+        clientshard) stage clientshard -m clientshard ;;
+        *) echo "unknown stage: $1 (have tier1 multidevice ragged clientshard)" >&2
+           exit 2 ;;
+    esac
+}
+
+if [ "$#" -eq 0 ]; then
+    set -- tier1 multidevice ragged clientshard
+fi
+for s in "$@"; do
+    run_stage "$s"
+done
+echo "=== all stages green ==="

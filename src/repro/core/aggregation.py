@@ -29,11 +29,16 @@ identical:
 The raveler is shared infrastructure: :class:`repro.core.trainer.
 ClientSimulator` keeps its whole scan carry (params + optimizer state)
 in the flat space, so the per-step loop never round-trips the pytree
-leaf-by-leaf.
+leaf-by-leaf. The ravel boundary itself sits at the gradient source —
+:func:`make_flat_grads_fn` wraps any ``grads_fn`` into a flat ``(N, P)``
+emitter (and shards it along a client mesh axis, DESIGN.md §8);
+:func:`reduce_flat_client_sharded` is the cross-shard reduction with the
+server update left replicated.
 """
 
 from __future__ import annotations
 
+import inspect
 import math
 from typing import Any, NamedTuple
 
@@ -146,6 +151,99 @@ def unravel_pytree(vec: jax.Array, spec: RavelSpec):
     return jax.tree_util.tree_unflatten(spec.treedef, parts)
 
 
+# ------------------------------------------------ flat grads_fn boundary
+
+def accepts_clients_kwarg(grads_fn) -> bool:
+    """True if ``grads_fn`` takes a ``clients`` keyword — the client-axis
+    sharding protocol (DESIGN.md §8): a client-aware grads_fn is called
+    with ``clients=(n_local,) int32`` global client indices and computes
+    only those rows, so per-client gradient work shards across devices.
+    A plain ``(params, key, t)`` grads_fn still works sharded — each
+    device computes the full stack and slices its rows (correct and
+    bitwise-identical, but the gradient compute is replicated). Only an
+    explicitly *named* ``clients`` parameter opts in — a bare
+    ``**kwargs`` does not, since a kwargs-tolerant grads_fn that ignores
+    ``clients`` would silently return full-population rows."""
+    try:
+        sig = inspect.signature(grads_fn)
+    except (TypeError, ValueError):
+        return False
+    return "clients" in sig.parameters
+
+
+def make_flat_grads_fn(grads_fn, spec: RavelSpec, n_clients: int):
+    """RavelSpec-aware wrapper: ``grads_fn`` → flat ``(N, P)`` emitter.
+
+    The ravel boundary lives *here*, at the gradient source, so the scan
+    body carries no per-leaf concat: the wrapped function returns the
+    flat client-stacked buffer directly, whether ``grads_fn`` emits
+
+    * a client-stacked pytree mirroring the parameter tree (raveled via
+      a cached spec; uniform-dtype gradient trees that differ from the
+      params dtype stay in their own dtype, mixed-dtype trees are cast
+      to the params dtype — accumulation in the reduce is f32-or-better
+      either way), or
+    * a single ``(N, ...)`` array — already flat up to a reshape (the
+      natively-flat fast path; single-leaf parameter trees land here).
+
+    Under an active client-sharding context (DESIGN.md §8) the wrapper
+    returns this shard's ``(n_local, P)`` rows: a client-aware grads_fn
+    (:func:`accepts_clients_kwarg`) is called with the shard's global
+    client indices; a plain grads_fn is called in full — row-sliced
+    (bitwise the rows of the unsharded call) under ``psum``, but handed
+    over *whole* under ``gather``, where every shard already holds the
+    identical replicated buffer and slicing it apart only for
+    ``all_gather`` to reassemble it would be a pure N·P round trip
+    (:func:`reduce_flat_client_sharded` skips the gradient gather on
+    full-width input).
+    """
+    from repro.core.energy import client_shard
+
+    accepts = accepts_clients_kwarg(grads_fn)
+
+    def flatten(stacked, n_rows):
+        if isinstance(stacked, jax.Array):
+            g = stacked.reshape(n_rows, -1)
+            if g.shape[1] != spec.total:
+                raise ValueError(
+                    f"flat grads_fn output has {g.shape[1]} parameters per "
+                    f"client; the parameter pytree has {spec.total}")
+            return g
+        try:
+            gspec = ravel_spec(stacked, lead_axes=1)
+        except ValueError:
+            # Mixed-dtype gradients (e.g. one layer computed in bf16)
+            # against uniform-dtype params: aggregate in the params
+            # dtype — accumulation inside reduce_flat is f32-or-better
+            # either way.
+            stacked = jax.tree_util.tree_map(
+                lambda x: x.astype(spec.dtype), stacked)
+            gspec = ravel_spec(stacked, lead_axes=1)
+        if gspec.shapes != spec.shapes or gspec.treedef != spec.treedef:
+            raise ValueError(
+                "grads_fn output does not mirror the parameter pytree; "
+                "flat-carry execution needs matching structure+shapes "
+                f"(params {spec.shapes}, grads {gspec.shapes})")
+        return ravel_stacked(stacked, gspec)
+
+    def flat_grads(params, key, t):
+        shard = client_shard()
+        if shard is None:
+            return flatten(grads_fn(params, key, t), n_clients)
+        n_local = n_clients // shard.shards
+        if accepts:
+            idx = (jax.lax.axis_index(shard.axis_name) * n_local
+                   + jnp.arange(n_local, dtype=jnp.int32))
+            return flatten(grads_fn(params, key, t, clients=idx), n_local)
+        full = flatten(grads_fn(params, key, t), n_clients)
+        if shard.reduction == "gather":
+            return full
+        off = jax.lax.axis_index(shard.axis_name) * n_local
+        return jax.lax.dynamic_slice_in_dim(full, off, n_local, axis=0)
+
+    return flat_grads
+
+
 # ----------------------------------------------------- aggregation paths
 
 def aggregate_client_grads(stacked_grads, weights: jax.Array,
@@ -191,6 +289,58 @@ def reduce_flat(g: jax.Array, weights: jax.Array, *,
     acc = jnp.promote_types(g.dtype, jnp.float32)
     out = weights.astype(acc) @ _mask_rows(g, mask).astype(acc)
     return out.astype(od)
+
+
+def reduce_flat_client_sharded(g: jax.Array, weights: jax.Array, *,
+                               axis_name: str, reduction: str = "gather",
+                               use_kernel: bool = False, out_dtype=None,
+                               mask: jax.Array | None = None
+                               ) -> tuple[jax.Array, jax.Array]:
+    """Client-sharded flat reduction: local ``(n_local, P)`` shard →
+    replicated ``((P,), weight_sum)`` across the ``axis_name`` devices.
+
+    Two reductions, both leaving the server update replicated
+    (DESIGN.md §8):
+
+    * ``"gather"`` — all_gather the gradient rows (tiled, so the global
+      ``(N, P)`` buffer is reassembled in exact row order) and replicate
+      the *identical* unsharded reduction on every device. Bit-for-bit
+      the single-device result; costs N_local·P per device per step of
+      interconnect. A ``g`` already at full population width (a plain
+      grads_fn computes it replicated on every shard —
+      :func:`make_flat_grads_fn`) skips the gradient gather; only the
+      (N,)-sized weights/mask cross the axis.
+    * ``"psum"`` — one local matvec/kernel launch over this shard's rows
+      followed by a ``(P,)`` psum. Bandwidth-optimal (the collective
+      moves P floats, not N·P) but reassociates the client sum across
+      shards — float32-tolerance, not bitwise. Partial sums travel in
+      the f32-or-better accumulation dtype and are cast to ``out_dtype``
+      only after the psum.
+    """
+    if reduction == "gather":
+        weights = jax.lax.all_gather(weights, axis_name, axis=0, tiled=True)
+        if mask is not None:
+            mask = jax.lax.all_gather(mask, axis_name, axis=0, tiled=True)
+        if g.shape[0] != weights.shape[0]:
+            g = jax.lax.all_gather(g, axis_name, axis=0, tiled=True)
+        out = reduce_flat(g, weights, use_kernel=use_kernel,
+                          out_dtype=out_dtype, mask=mask)
+        return out, jnp.sum(weights)
+    if reduction != "psum":
+        raise ValueError(
+            f"reduction must be 'gather' or 'psum', got {reduction!r}")
+    od = jnp.dtype(out_dtype) if out_dtype is not None else g.dtype
+    acc = jnp.promote_types(g.dtype, jnp.float32)
+    if use_kernel:
+        from repro.kernels.aggregate import ops as agg_ops
+
+        out = agg_ops.masked_scaled_aggregate_sharded(
+            g, weights.astype(jnp.float32), axis_name=axis_name,
+            out_dtype=od, mask=mask)
+    else:
+        partial = reduce_flat(g, weights, out_dtype=acc, mask=mask)
+        out = jax.lax.psum(partial, axis_name).astype(od)
+    return out, jax.lax.psum(jnp.sum(weights), axis_name)
 
 
 def aggregate_client_grads_flat(stacked_grads, weights: jax.Array, *,

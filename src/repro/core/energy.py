@@ -54,6 +54,7 @@ registry.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import NamedTuple
 
@@ -94,6 +95,73 @@ def _concrete(x):
         return None
 
 
+# ------------------------------------------------- client-axis sharding
+
+class ClientShard(NamedTuple):
+    """Trace-time description of an active client-axis sharding context.
+
+    axis_name : the mesh axis the client dimension is sharded over.
+    shards    : number of devices along that axis (static).
+    reduction : "gather" (all_gather rows, replicate the exact unsharded
+                reduction — bit-for-bit) or "psum" (local partial
+                reduction + psum — bandwidth-optimal, float32
+                reassociation tolerance). DESIGN.md §8.
+    """
+
+    axis_name: str
+    shards: int
+    reduction: str = "gather"
+
+
+_CLIENT_SHARD: list[ClientShard] = []
+
+
+@contextlib.contextmanager
+def client_sharding(axis_name: str, shards: int, reduction: str = "gather"):
+    """Activate a client-axis sharding context for the enclosed trace.
+
+    Inside the context every per-client draw (:func:`client_keys` and
+    friends) folds in the *global* client index — shard-local row ``i``
+    becomes ``axis_index(axis_name)·n_local + i`` — and population-global
+    reductions (:func:`population_min`; the aggregation reduce +
+    weight_sum via :func:`repro.core.aggregation.
+    reduce_flat_client_sharded`) become collectives over ``axis_name``.
+    The context is consulted at trace time only; compiled executables
+    bake the collectives in.
+    """
+    if reduction not in ("gather", "psum"):
+        raise ValueError(
+            f"reduction must be 'gather' or 'psum', got {reduction!r}")
+    _CLIENT_SHARD.append(ClientShard(axis_name, int(shards), reduction))
+    try:
+        yield
+    finally:
+        _CLIENT_SHARD.pop()
+
+
+def client_shard() -> ClientShard | None:
+    """The innermost active client-sharding context, or None."""
+    return _CLIENT_SHARD[-1] if _CLIENT_SHARD else None
+
+
+def _client_offset(n_local: int):
+    """Global index of this shard's row 0 (0 when unsharded)."""
+    shard = client_shard()
+    if shard is None:
+        return 0
+    return jax.lax.axis_index(shard.axis_name) * n_local
+
+
+def population_min(x: jax.Array) -> jax.Array:
+    """min over the client axis — exact (min is associative), so the
+    sharded value is bitwise the unsharded one."""
+    m = jnp.min(x)
+    shard = client_shard()
+    if shard is None:
+        return m
+    return jax.lax.pmin(m, shard.axis_name)
+
+
 def client_keys(key, n_clients: int) -> jax.Array:
     """(N, key) array of per-client keys via ``fold_in`` on the client index.
 
@@ -104,9 +172,14 @@ def client_keys(key, n_clients: int) -> jax.Array:
     what makes ragged-population padding bit-exact: client ``i`` of a
     padded N_max-wide run draws the same randomness as client ``i`` of
     the natural-N run (DESIGN.md §7).
+
+    Under an active :func:`client_sharding` context the folded index is
+    the *global* one (shard offset + local row), so shard-local row
+    ``i`` of a client-sharded run draws exactly the bits global client
+    ``offset + i`` draws in the unsharded run (DESIGN.md §8).
     """
-    return jax.vmap(lambda i: jax.random.fold_in(key, i))(
-        jnp.arange(n_clients))
+    idx = _client_offset(n_clients) + jnp.arange(n_clients)
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
 
 
 def client_uniform(key, n_clients: int) -> jax.Array:

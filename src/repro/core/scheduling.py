@@ -58,7 +58,12 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.energy import Arrivals, _concrete, client_randint
+from repro.core.energy import (
+    Arrivals,
+    _concrete,
+    client_randint,
+    population_min,
+)
 
 
 class Decision(NamedTuple):
@@ -156,9 +161,12 @@ class WaitForAllScheduler:
         battery = jnp.minimum(state.battery + arrivals.energy, 1.0)
         # The all-full barrier is over *active* clients only: a padded
         # row (which never harvests) must not block the whole population.
+        # population_min is a pmin across shards when the client axis is
+        # device-sharded (DESIGN.md §8) — min is exact, so the sharded
+        # barrier fires on bitwise the same step as the unsharded one.
         ready = battery if active is None else jnp.where(active > 0,
                                                          battery, 1.0)
-        fire = jnp.min(ready) >= 1.0
+        fire = population_min(ready) >= 1.0
         mask = jnp.where(fire, jnp.ones_like(battery), jnp.zeros_like(battery))
         mask = _mask_decision(mask, active)
         battery = battery - mask
@@ -271,6 +279,24 @@ def pad_scheduler(scheduler, n_total: int):
         raise ValueError(
             f"cannot pad {scheduler.n_clients} clients down to {n_total}")
     return dataclasses.replace(scheduler, n_clients=int(n_total))
+
+
+def shard_scheduler(scheduler, n_local: int):
+    """Scheduler view over one client-axis shard of ``n_local`` rows.
+
+    The client-sharded execution path (DESIGN.md §8) runs every scheduler
+    with shard-local per-client *state* — ``init`` sizes its arrays from
+    ``n_clients``, so narrowing the static width is all the built-ins
+    need (their leaves are scalar hyperparameters, replicated across the
+    client axis). A custom scheduler carrying per-client leaves must
+    define ``shard_clients(n_local)`` returning its local view; the
+    placement layer shards the leaves themselves via the leaf-shape rule
+    (:func:`repro.experiments.placement.client_leaf_specs`).
+    """
+    method = getattr(scheduler, "shard_clients", None)
+    if method is not None:
+        return method(n_local)
+    return dataclasses.replace(scheduler, n_clients=int(n_local))
 
 
 def _strict(ctor, name, n, kw, **fixed):

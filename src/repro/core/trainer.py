@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import aggregation
+from repro.core.energy import client_shard
 from repro.core.scheduling import Decision
 from repro.optim import Optimizer, apply_updates
 
@@ -65,6 +66,13 @@ class ClientSimulator:
         For exact paper semantics use ``sgd(eta)``.
     loss_fn : optional (params) -> scalar global loss, logged per step.
     use_kernel : route aggregation through the Pallas kernel path.
+
+    Under an active client-sharding context (DESIGN.md §8 — entered by
+    the placement layer's ``run_client_sharded`` / ``clients``-mesh grid
+    paths, never directly by users) the simulator runs with per-client
+    state and the gradient buffer device-local and the aggregation
+    reduced across the client mesh axis; requires flat-carry execution.
+
     flat : run the scan loop in flat parameter space (DESIGN.md §5):
         params and optimizer state live as single ``(P,)`` buffers in the
         scan carry, aggregation is one kernel/matvec per step, and the
@@ -87,6 +95,7 @@ class ClientSimulator:
         self.loss_fn = loss_fn
         self.use_kernel = use_kernel
         self.flat = flat
+        self._gfn_cache: dict = {}
 
     def _components(self, scheduler, energy):
         scheduler = self.scheduler if scheduler is None else scheduler
@@ -107,6 +116,24 @@ class ClientSimulator:
             if self.flat:
                 raise
             return None
+
+    def flat_spec(self, params):
+        """Public :class:`~repro.core.aggregation.RavelSpec` accessor —
+        the spec :meth:`run` executes under for these params (None when
+        the legacy per-leaf path would be taken). Checkpoint drivers pass
+        it to :meth:`init` / :meth:`run_carry` so a saved flat
+        :class:`SimCarry` resumes in the same layout."""
+        return self._flat_spec(params)
+
+    def _flat_grads(self, spec):
+        """Memoized RavelSpec-aware grads wrapper (the ravel boundary —
+        :func:`repro.core.aggregation.make_flat_grads_fn`)."""
+        fn = self._gfn_cache.get(spec)
+        if fn is None:
+            fn = aggregation.make_flat_grads_fn(
+                self.grads_fn, spec, int(self.p.shape[0]))
+            self._gfn_cache[spec] = fn
+        return fn
 
     def init(self, key, params, *, scheduler=None, energy=None,
              spec=None) -> SimCarry:
@@ -137,49 +164,49 @@ class ClientSimulator:
         their own zero-padded, active-renormalized p); ``active_mask``
         is the (N,) 0/1 existing-client mask."""
         scheduler, energy = self._components(scheduler, energy)
+        shard = client_shard()
+        if shard is not None and spec is None:
+            raise ValueError(
+                "client-axis sharding (DESIGN.md §8) requires flat-carry "
+                "execution: uniform-dtype params and flat != False")
         p = self.p if p is None else p
         key, k_arr, k_sched, k_grad = jax.random.split(carry.key, 4)
         energy_state, arr = energy.arrivals(carry.energy_state, carry.t, k_arr)
         sched_state, dec = scheduler.step(carry.sched_state, carry.t, k_sched,
                                           arr, active=active_mask)
-        params_tree = (aggregation.unravel_pytree(carry.params, spec)
-                       if spec is not None else carry.params)
-        stacked = self.grads_fn(params_tree, k_grad, carry.t)
         weights = aggregation.client_weights(p, dec)
         if active_mask is not None:
             # Defensive exactness: zero weight for rows that don't exist
             # even if a custom scheduler leaked probability mass to them
             # (×1 on active rows — bit-exact).
             weights = weights * active_mask
+        wsum = None
         if spec is not None:
-            try:
-                gspec = aggregation.ravel_spec(stacked, lead_axes=1)
-            except ValueError:
-                # Mixed-dtype gradients (e.g. one layer computed in
-                # bf16) against uniform-dtype params: aggregate in the
-                # params dtype — accumulation inside reduce_flat is
-                # f32-or-better either way.
-                stacked = jax.tree_util.tree_map(
-                    lambda x: x.astype(spec.dtype), stacked)
-                gspec = aggregation.ravel_spec(stacked, lead_axes=1)
-            if gspec.shapes != spec.shapes or gspec.treedef != spec.treedef:
-                raise ValueError(
-                    "grads_fn output does not mirror the parameter pytree; "
-                    "flat-carry execution needs matching structure+shapes "
-                    f"(params {spec.shapes}, grads {gspec.shapes})")
-            g = aggregation.ravel_stacked(stacked, gspec)
-            agg = aggregation.reduce_flat(g, weights,
-                                          use_kernel=self.use_kernel,
-                                          mask=active_mask)
+            params_tree = aggregation.unravel_pytree(carry.params, spec)
+            # The ravel boundary lives inside the wrapper: the scan body
+            # sees one flat (N, P) — or, sharded, (n_local, P) — buffer
+            # and carries no per-leaf concat.
+            g = self._flat_grads(spec)(params_tree, k_grad, carry.t)
+            if shard is not None:
+                agg, wsum = aggregation.reduce_flat_client_sharded(
+                    g, weights, axis_name=shard.axis_name,
+                    reduction=shard.reduction,
+                    use_kernel=self.use_kernel, mask=active_mask)
+            else:
+                agg = aggregation.reduce_flat(g, weights,
+                                              use_kernel=self.use_kernel,
+                                              mask=active_mask)
         elif self.flat is False:
             # Full legacy semantics: per-leaf reductions (and per-leaf
             # kernel launches), leaf dtypes untouched — the escape hatch
             # and the reference the flat paths are tested against.
+            stacked = self.grads_fn(carry.params, k_grad, carry.t)
             agg = (aggregation.aggregate_client_grads_kernel_per_leaf(
                        stacked, weights, active_mask) if self.use_kernel
                    else aggregation.aggregate_client_grads(stacked, weights,
                                                            active_mask))
         else:
+            stacked = self.grads_fn(carry.params, k_grad, carry.t)
             agg = aggregation.aggregate_client_grads_flat(
                 stacked, weights, use_kernel=self.use_kernel,
                 mask=active_mask)
@@ -192,7 +219,7 @@ class ClientSimulator:
         out = {
             "loss": loss,
             "participation": dec.mask,
-            "weight_sum": jnp.sum(weights),
+            "weight_sum": jnp.sum(weights) if wsum is None else wsum,
         }
         new_carry = SimCarry(params=params, opt_state=opt_state,
                              sched_state=sched_state, energy_state=energy_state,
@@ -230,21 +257,23 @@ class ClientSimulator:
         carry = self.init(key, params, scheduler=scheduler, energy=energy,
                           spec=spec)
 
-        def body(c, _):
-            return self._step(c, scheduler, energy, spec, p, active_mask)
-
         def unflatten(p):
             return aggregation.unravel_pytree(p, spec) if spec is not None else p
 
         if eval_fn is None:
-            carry, outs = jax.lax.scan(body, carry, None, length=num_steps)
-            return unflatten(carry.params), self._history(outs)
+            carry, history = self.run_carry(
+                carry, num_steps, scheduler=scheduler, energy=energy,
+                p=p, active_mask=active_mask, spec=spec)
+            return unflatten(carry.params), history
 
         if eval_every <= 0:
             eval_every = num_steps
         if num_steps % eval_every != 0:
             raise ValueError(
                 f"num_steps={num_steps} must divide by eval_every={eval_every}")
+
+        def body(c, _):
+            return self._step(c, scheduler, energy, spec, p, active_mask)
 
         def chunk(c, _):
             c, outs = jax.lax.scan(body, c, None, length=eval_every)
@@ -255,6 +284,30 @@ class ClientSimulator:
         outs = jax.tree_util.tree_map(
             lambda x: x.reshape((num_steps,) + x.shape[2:]), outs)
         return unflatten(carry.params), self._history(outs), evals
+
+    def run_carry(self, carry: SimCarry, num_steps: int, *, scheduler=None,
+                  energy=None, p=None, active_mask=None, spec=None
+                  ) -> tuple[SimCarry, SimHistory]:
+        """Advance an existing carry ``num_steps`` rounds as one scan.
+
+        The checkpoint/resume entry point: a :class:`SimCarry` from
+        :meth:`init` (or from a restored checkpoint — the carry is an
+        ordinary pytree, so :func:`repro.checkpoint.save_pytree` /
+        ``restore_pytree`` round-trip it) resumes bitwise-identically to
+        the uninterrupted run, because the whole step stream is a pure
+        function of the carry. ``spec`` must be the
+        :meth:`flat_spec` of the original params when the carry is flat
+        (the default execution mode), None for the legacy pytree carry.
+        Returns the advanced carry (same layout) and the chunk's
+        :class:`SimHistory`.
+        """
+        scheduler, energy = self._components(scheduler, energy)
+
+        def body(c, _):
+            return self._step(c, scheduler, energy, spec, p, active_mask)
+
+        carry, outs = jax.lax.scan(body, carry, None, length=num_steps)
+        return carry, self._history(outs)
 
     @staticmethod
     def _history(outs) -> SimHistory:
@@ -275,6 +328,7 @@ def build_energy_train_step(
     n_clients: int,
     p: jax.Array | None = None,
     aux_loss_weight: float = 0.0,
+    flat: bool = False,
 ):
     """SPMD train step with the paper's weighting baked into the loss.
 
@@ -289,6 +343,16 @@ def build_energy_train_step(
     The aux loss (router load-balance) is weighted by mean(coeff·N) so a
     masked client contributes nothing to router statistics either — see
     DESIGN.md §4 (MoE note).
+
+    ``flat=True`` routes the gradient through the same RavelSpec-aware
+    flat boundary as :class:`ClientSimulator` (DESIGN.md §5/§8): the
+    loss-path gradient is raveled into one ``(P,)`` buffer, optimizer
+    state lives flat, and the pytree view is rebuilt only at the
+    ``TrainState.params`` boundary. Elementwise-optimizer numerics are
+    bitwise unchanged. Leave False (the default) for pjit-sharded
+    training — per-leaf optimizer state follows the parameter
+    PartitionSpecs (``repro.sharding.rules``), a single flat buffer
+    cannot.
     """
     if p is None:
         p = jnp.full((n_clients,), 1.0 / n_clients, jnp.float32)
@@ -316,8 +380,18 @@ def build_energy_train_step(
         weights = aggregation.client_weights(p, Decision(mask=mask, scale=scale))
         grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
         (total, mean_loss), grads = grad_fn(state.params, batch, weights)
-        updates, opt_state = optimizer.update(grads, state.opt_state, state.params)
-        params = apply_updates(state.params, updates)
+        if flat:
+            spec = aggregation.ravel_spec(state.params)
+            gflat = aggregation.ravel_pytree(
+                jax.tree_util.tree_map(lambda g: g.astype(spec.dtype), grads),
+                spec)
+            pflat = aggregation.ravel_pytree(state.params, spec)
+            updates, opt_state = optimizer.update(gflat, state.opt_state, pflat)
+            params = aggregation.unravel_pytree(pflat + updates, spec)
+        else:
+            updates, opt_state = optimizer.update(grads, state.opt_state,
+                                                  state.params)
+            params = apply_updates(state.params, updates)
         metrics = {
             "weighted_loss": total,
             "loss": mean_loss,
@@ -327,7 +401,12 @@ def build_energy_train_step(
         return TrainState(params=params, opt_state=opt_state, step=state.step + 1), metrics
 
     def init_state(params) -> TrainState:
-        return TrainState(params=params, opt_state=optimizer.init(params),
+        if flat:
+            spec = aggregation.ravel_spec(params)
+            opt_state = optimizer.init(aggregation.ravel_pytree(params, spec))
+        else:
+            opt_state = optimizer.init(params)
+        return TrainState(params=params, opt_state=opt_state,
                           step=jnp.zeros((), jnp.int32))
 
     return init_state, train_step

@@ -42,7 +42,12 @@ from repro.experiments.engine import (
     run_grid_sequential,
     subpopulation_p,
 )
-from repro.experiments.placement import make_cell_mesh
+from repro.experiments.placement import (
+    make_cell_mesh,
+    make_client_mesh,
+    make_grid_mesh,
+    run_client_sharded,
+)
 from repro.experiments.results import GridResult, default_metric, seed_stats
 from repro.experiments.scenario import (
     ARRIVAL_KINDS,
@@ -72,8 +77,10 @@ __all__ = [
     "axis_names", "build_components", "check_unique_names", "clear_cache",
     "default_metric", "default_taus", "execute_cells", "get_axis", "get_grid",
     "get_study", "grid_names", "grid_summary", "make_cell_mesh",
-    "make_energy_process", "population_mask", "register_axis",
+    "make_client_mesh", "make_energy_process", "make_grid_mesh",
+    "population_mask", "register_axis",
     "register_grid", "register_study", "register_taus_profile",
-    "resolve_taus_profile", "run_grid", "run_grid_sequential",
+    "resolve_taus_profile", "run_client_sharded", "run_grid",
+    "run_grid_sequential",
     "scenario_grid", "seed_stats", "study_names", "subpopulation_p",
 ]

@@ -196,6 +196,7 @@ def execute_cells(
     eval_every: int = 0,
     mesh=None,
     sequential: bool = False,
+    client_reduction: str = "gather",
 ) -> dict[str, CellResult]:
     """Execute scenario × seed cells with a prebuilt simulator.
 
@@ -220,6 +221,12 @@ def execute_cells(
     (``history.participation``) are cropped back to the natural n.
     ``grads_fn`` must always emit N_cap rows — ragged cells simply
     ignore the rows of clients that don't exist.
+
+    ``mesh`` may carry a ``clients`` axis (1-D ``make_client_mesh`` or
+    2-D ``make_grid_mesh``, DESIGN.md §8): each cell's client axis is
+    then sharded within the cell, ``client_reduction`` selecting the
+    cross-shard aggregation (``"gather"`` — bitwise vs the vmap path —
+    or ``"psum"``).
     """
     scenarios = list(scenarios)
     names = check_unique_names(scenarios)
@@ -298,7 +305,8 @@ def execute_cells(
             out = placement.run_group_sharded(
                 sch_batch, en_batch, active_batch, p_batch, params0, keys,
                 sim=sim, num_steps=num_steps, n_scenarios=len(members),
-                mesh=mesh, eval_fn=eval_fn, eval_every=eval_every)
+                mesh=mesh, eval_fn=eval_fn, eval_every=eval_every,
+                reduction=client_reduction)
         else:
             out = _run_group(sch_batch, en_batch, active_batch, p_batch,
                              params0, keys, sim=sim, num_steps=num_steps,
@@ -337,11 +345,15 @@ def run_grid(
     standalone ``ClientSimulator.run(PRNGKey(s), ...)`` of the same cell
     (up to float reassociation introduced by batching).
 
-    ``mesh`` (a 1-D ``jax.sharding.Mesh``, e.g.
+    ``mesh`` (a ``jax.sharding.Mesh``, e.g.
     :func:`repro.experiments.placement.make_cell_mesh`) shards each
     group's flattened (scenario × seed) cell axis across devices
-    (DESIGN.md §5). Without a mesh — or with a 1-device mesh — execution
-    takes the single-device vmap path, bit-for-bit as before.
+    (DESIGN.md §5); a mesh with a ``clients`` axis
+    (:func:`~repro.experiments.placement.make_client_mesh` /
+    :func:`~repro.experiments.placement.make_grid_mesh`) additionally
+    shards each cell's client axis within the cell (DESIGN.md §8).
+    Without a mesh — or with a 1-device mesh — execution takes the
+    single-device vmap path, bit-for-bit as before.
 
     The jit cache is keyed on ``sim`` by identity, so repeated calls
     with a fresh simulator (or fresh grads_fn/eval_fn lambdas) re-trace

@@ -1,8 +1,11 @@
-"""Placement layer: device-sharded grid execution (DESIGN.md §5).
+"""Placement layer: device-sharded grid execution (DESIGN.md §5, §8).
 
 :func:`repro.experiments.run_grid` batches a structure-group's cells as
 ``vmap(scenarios) ∘ vmap(seeds)`` on one device. This module places the
-same computation across a device mesh instead:
+same computation across a device mesh instead, along two composable
+axes:
+
+**Cell axis** (``"cells"``, DESIGN.md §5) — across-cell parallelism:
 
 1. the (scenario S × seed R) cell block is **flattened** into one cell
    axis C = S·R (scheduler/energy leaves repeated over seeds, PRNG keys
@@ -12,12 +15,31 @@ same computation across a device mesh instead:
    producing NaNs — and the pad is sliced off before results are
    reshaped back to (S, R, ...),
 3. the block executes under ``shard_map``: cells sharded along the
-   mesh's single axis, ``params0`` replicated, each device running the
-   same jitted ``vmap(ClientSimulator.run)`` over its local cells.
+   cell axis, ``params0`` replicated, each device running the same
+   jitted ``vmap(ClientSimulator.run)`` over its local cells.
+
+**Client axis** (``"clients"``, DESIGN.md §8) — within-cell parallelism
+for populations one device cannot hold: every per-client operand — the
+component leaves whose leading (post-cell) dimension is the population
+capacity, the ``active_mask`` / ``p`` ragged operands, the scheduler and
+energy *state*, and the ``(N, P)`` gradient buffer — is sharded over the
+client axis, while params / optimizer state stay **replicated** (every
+shard applies the identical server update, so no parameter broadcast is
+ever needed). The per-step reduction crosses the axis once: by default
+an ``all_gather`` of the gradient rows followed by the *identical*
+unsharded reduction on every shard (bit-for-bit the single-device
+numbers), or — ``reduction="psum"`` — one local matvec/kernel launch
+plus a ``(P,)`` psum (bandwidth-optimal, f32-reassociation tolerance).
+Per-client RNG folds in *global* client indices
+(:func:`repro.core.energy.client_sharding`), so shard-local rows draw
+exactly the unsharded run's bits.
+
+The two axes compose: ``make_grid_mesh(cells=4, clients=2)`` runs 4-way
+cell sharding with each cell's population split over 2 devices.
 
 Single-device callers never enter this module — ``run_grid`` without a
 ``mesh`` (or with a 1-device mesh) takes the pure-vmap path bit-for-bit
-unchanged. CPU CI exercises the sharded path via
+unchanged. CPU CI exercises the sharded paths via
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
 (``tests/conftest.py``).
 """
@@ -32,8 +54,27 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec
 
+from repro.core.energy import client_sharding
+from repro.core.scheduling import shard_scheduler
+from repro.core.trainer import SimHistory
+
 #: Default mesh-axis name for the flattened (scenario × seed) cell axis.
 CELL_AXIS = "cells"
+
+#: Mesh-axis name for within-cell client sharding. Unlike the cell axis
+#: (any single-axis name works, for back-compat), the client axis is
+#: recognized *by this name*.
+CLIENT_AXIS = "clients"
+
+
+def _device_slice(n_devices: int | None):
+    devices = jax.devices()
+    if n_devices is not None:
+        if not 1 <= n_devices <= len(devices):
+            raise ValueError(
+                f"n_devices={n_devices} outside [1, {len(devices)}]")
+        devices = devices[:n_devices]
+    return devices
 
 
 def make_cell_mesh(n_devices: int | None = None, *,
@@ -44,21 +85,87 @@ def make_cell_mesh(n_devices: int | None = None, *,
     flat mesh regardless of how production training meshes are shaped
     (``repro.launch.mesh`` re-exports this for drivers).
     """
-    devices = jax.devices()
-    if n_devices is not None:
-        if not 1 <= n_devices <= len(devices):
-            raise ValueError(
-                f"n_devices={n_devices} outside [1, {len(devices)}]")
-        devices = devices[:n_devices]
-    return Mesh(np.array(devices), (axis_name,))
+    return Mesh(np.array(_device_slice(n_devices)), (axis_name,))
+
+
+def make_client_mesh(n_devices: int | None = None) -> Mesh:
+    """1-D ``("clients",)`` mesh: within-cell client-axis sharding only
+    (DESIGN.md §8). The population capacity must divide the mesh size."""
+    return Mesh(np.array(_device_slice(n_devices)), (CLIENT_AXIS,))
+
+
+def make_grid_mesh(cells: int, clients: int) -> Mesh:
+    """2-D ``(cells, clients)`` mesh over the first ``cells·clients``
+    devices: cell sharding across the first axis composed with
+    within-cell client sharding across the second."""
+    devices = _device_slice(cells * clients)
+    return Mesh(np.array(devices).reshape(cells, clients),
+                (CELL_AXIS, CLIENT_AXIS))
+
+
+def _mesh_axes(mesh: Mesh) -> tuple[str | None, str | None]:
+    """(cell_axis, client_axis) names of a grid mesh, either possibly
+    None. 1-D meshes keep the legacy rule — any axis name is the cell
+    axis — unless the axis is literally named ``"clients"``; 2-D meshes
+    must be (cell_axis, "clients")."""
+    names = mesh.axis_names
+    if len(names) == 1:
+        if names[0] == CLIENT_AXIS:
+            return None, CLIENT_AXIS
+        return names[0], None
+    if len(names) == 2 and names[1] == CLIENT_AXIS \
+            and names[0] != CLIENT_AXIS:
+        return names[0], CLIENT_AXIS
+    raise ValueError(
+        "grid sharding needs a 1-D mesh (the flattened cell axis, or a "
+        f"'{CLIENT_AXIS}' axis for within-cell sharding) or a 2-D "
+        f"(cells, '{CLIENT_AXIS}') mesh; got axes {names} — build one "
+        "with make_cell_mesh() / make_client_mesh() / make_grid_mesh()")
 
 
 def _cell_axis(mesh: Mesh) -> str:
-    if len(mesh.axis_names) != 1:
+    """Legacy validator: the (sole) cell axis of a cells-only mesh."""
+    cell_ax, client_ax = _mesh_axes(mesh)
+    if client_ax is not None or cell_ax is None:
         raise ValueError(
-            "grid sharding needs a 1-D mesh (the flattened cell axis); got "
-            f"axes {mesh.axis_names} — build one with make_cell_mesh()")
-    return mesh.axis_names[0]
+            f"expected a cells-only 1-D mesh, got axes {mesh.axis_names}")
+    return cell_ax
+
+
+def _check_client_shards(n_cap: int, shards: int) -> int:
+    if n_cap % shards != 0:
+        raise ValueError(
+            f"client-axis sharding needs the population capacity to divide "
+            f"the '{CLIENT_AXIS}' mesh axis: N_cap={n_cap} over {shards} "
+            f"shards (pad the population to a multiple — DESIGN.md §8)")
+    return n_cap // shards
+
+
+def client_leaf_specs(tree, n_cap: int, *, client_axis: str,
+                      cell_axis: str | None = None, lead: int = 0):
+    """Per-leaf ``PartitionSpec`` list (``tree_leaves`` order) for a
+    component under client sharding: a leaf whose axis ``lead`` (the
+    first post-batch axis) has the population capacity ``n_cap`` is
+    treated as per-client and sharded over ``client_axis``; every other
+    leaf (scalar hyperparameters) is replicated across it. ``lead=1``
+    with ``cell_axis`` set prepends cell sharding on axis 0 (the grid
+    path). Returned as a flat list — the sharded runners pass component
+    *leaves* through ``shard_map`` and unflatten inside the body, so
+    registered-dataclass constructors only ever see (local) arrays.
+
+    The rule is shape-based: a non-per-client hyperparameter vector that
+    coincidentally has length ``n_cap`` on that axis would be sharded
+    too — a component with such a leaf must not be run client-sharded
+    (none of the built-ins has one).
+    """
+    lead_spec = (cell_axis,) * lead
+
+    def one(leaf):
+        if leaf.ndim > lead and leaf.shape[lead] == n_cap:
+            return PartitionSpec(*lead_spec, client_axis)
+        return PartitionSpec(*lead_spec)
+
+    return [one(leaf) for leaf in jax.tree_util.tree_leaves(tree)]
 
 
 def flatten_cells(scheduler, energy, keys, *, n_scenarios: int,
@@ -96,26 +203,57 @@ def pad_cells(tree, n_cells: int, n_devices: int):
 
 
 @partial(jax.jit,
-         static_argnames=("sim", "num_steps", "eval_fn", "eval_every", "mesh"))
+         static_argnames=("sim", "num_steps", "eval_fn", "eval_every", "mesh",
+                          "reduction"))
 def _run_group_sharded(scheduler, energy, active, p, params0, keys, *, sim,
                        num_steps: int, eval_fn=None, eval_every: int = 0,
-                       mesh: Mesh):
+                       mesh: Mesh, reduction: str = "gather"):
     """shard_map'd twin of ``engine._run_group``.
 
     ``scheduler`` / ``energy`` / ``keys`` leaves carry a leading
     (device-divisible) flat cell axis, as do the optional
     ``active`` / ``p`` ragged-population operands (both None for
-    uniform grids); ``params0`` is replicated. Each device vmaps the
-    simulator scan over its local cells. Compiled once per (sim, group
-    structure, mesh) — probe ``_run_group_sharded._cache_size()`` to
-    assert trace counts.
+    uniform cells-only grids); ``params0`` is replicated. Each device
+    vmaps the simulator scan over its local cells. When the mesh
+    carries a ``clients`` axis, each cell's per-client operands are
+    additionally sharded over it and the simulator runs under a
+    :func:`repro.core.energy.client_sharding` context (DESIGN.md §8) —
+    ``p`` is then always materialized by the caller. Compiled once per
+    (sim, group structure, mesh) — probe
+    ``_run_group_sharded._cache_size()`` to assert trace counts.
     """
     from repro.experiments.engine import CellResult
 
-    axis = _cell_axis(mesh)
-    cells, replicated = PartitionSpec(axis), PartitionSpec()
+    cell_ax, client_ax = _mesh_axes(mesh)
+    cells = PartitionSpec(cell_ax) if cell_ax is not None else PartitionSpec()
+    replicated = PartitionSpec()
+    sch_leaves, sch_def = jax.tree_util.tree_flatten(scheduler)
+    en_leaves, en_def = jax.tree_util.tree_flatten(energy)
 
-    def local(sch, en, act, pw, ks, p0):
+    if client_ax is None:
+        in_specs = ([cells] * len(sch_leaves), [cells] * len(en_leaves),
+                    cells, cells, cells, replicated)
+        out_specs = cells
+    else:
+        n_cap = int(sim.p.shape[0])
+        _check_client_shards(n_cap, mesh.shape[client_ax])
+        percell = lambda t: client_leaf_specs(
+            t, n_cap, client_axis=client_ax, cell_axis=cell_ax, lead=1)
+        rows = PartitionSpec(cell_ax, client_ax)
+        in_specs = (percell(scheduler), percell(energy), rows, rows, cells,
+                    replicated)
+        out_specs = CellResult(
+            params=cells,
+            history=SimHistory(loss=cells,
+                               participation=PartitionSpec(
+                                   cell_ax, None, client_ax),
+                               weight_sum=cells),
+            evals=cells)
+
+    def local(sch_lv, en_lv, act, pw, ks, p0):
+        sch = jax.tree_util.tree_unflatten(sch_def, sch_lv)
+        en = jax.tree_util.tree_unflatten(en_def, en_lv)
+
         def one(s, e, a, w, k):
             out = sim.run(k, p0, num_steps, scheduler=s, energy=e,
                           p=w, active_mask=a,
@@ -123,22 +261,108 @@ def _run_group_sharded(scheduler, energy, active, p, params0, keys, *, sim,
             return CellResult(*out) if eval_fn is not None \
                 else CellResult(*out, None)
 
-        return jax.vmap(one, in_axes=(0, 0, 0, 0, 0))(sch, en, act, pw, ks)
+        over_cells = jax.vmap(one, in_axes=(0, 0, 0, 0, 0))
+        if client_ax is None:
+            return over_cells(sch, en, act, pw, ks)
+        shards = mesh.shape[client_ax]
+        sch = shard_scheduler(sch, int(sim.p.shape[0]) // shards)
+        with client_sharding(client_ax, shards, reduction):
+            return over_cells(sch, en, act, pw, ks)
+
+    fn = shard_map(local, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_rep=False)
+    return fn(sch_leaves, en_leaves, active, p, keys, params0)
+
+
+@partial(jax.jit,
+         static_argnames=("sim", "num_steps", "eval_fn", "eval_every", "mesh",
+                          "reduction"))
+def _run_cell_client_sharded(scheduler, energy, active, p, params0, key, *,
+                             sim, num_steps: int, eval_fn=None,
+                             eval_every: int = 0, mesh: Mesh,
+                             reduction: str = "gather"):
+    """Single-cell client-sharded execution: one population spanning the
+    whole ``clients`` mesh (no cell axis, no cell vmap)."""
+    client_ax = CLIENT_AXIS
+    n_cap = int(sim.p.shape[0])
+    shards = mesh.shape[client_ax]
+    n_local = _check_client_shards(n_cap, shards)
+    percell = lambda t: client_leaf_specs(t, n_cap, client_axis=client_ax)
+    rows, replicated = PartitionSpec(client_ax), PartitionSpec()
+    hist = SimHistory(loss=replicated,
+                      participation=PartitionSpec(None, client_ax),
+                      weight_sum=replicated)
+    out_specs = (replicated, hist) if eval_fn is None \
+        else (replicated, hist, replicated)
+    sch_leaves, sch_def = jax.tree_util.tree_flatten(scheduler)
+    en_leaves, en_def = jax.tree_util.tree_flatten(energy)
+
+    def local(sch_lv, en_lv, act, pw, k, p0):
+        sch = shard_scheduler(
+            jax.tree_util.tree_unflatten(sch_def, sch_lv), n_local)
+        en = jax.tree_util.tree_unflatten(en_def, en_lv)
+        with client_sharding(client_ax, shards, reduction):
+            return sim.run(k, p0, num_steps, scheduler=sch, energy=en,
+                           p=pw, active_mask=act,
+                           eval_fn=eval_fn, eval_every=eval_every)
 
     fn = shard_map(local, mesh=mesh,
-                   in_specs=(cells, cells, cells, cells, cells, replicated),
-                   out_specs=cells, check_rep=False)
-    return fn(scheduler, energy, active, p, keys, params0)
+                   in_specs=(percell(scheduler), percell(energy), rows, rows,
+                             replicated, replicated),
+                   out_specs=out_specs, check_rep=False)
+    return fn(sch_leaves, en_leaves, active, p, key, params0)
 
 
 def clear_cache() -> None:
     """Drop compiled sharded-grid executables (see engine.clear_cache)."""
     _run_group_sharded.clear_cache()
+    _run_cell_client_sharded.clear_cache()
+
+
+def run_client_sharded(sim, key, params0, num_steps: int, *, scheduler=None,
+                       energy=None, mesh: Mesh, p=None, active_mask=None,
+                       eval_fn=None, eval_every: int = 0,
+                       reduction: str = "gather"):
+    """Run ONE cell with its client axis sharded across ``mesh``.
+
+    The within-cell entry point (DESIGN.md §8) for populations a single
+    device cannot hold: arrivals/battery state, scheduler rows,
+    ``active_mask``/``p`` and the ``(N, P)`` gradient buffer live
+    sharded over the mesh's ``clients`` axis; params and optimizer state
+    stay replicated. Same signature contract as
+    :meth:`ClientSimulator.run` (returns ``(params, history[, evals])``
+    with the participation history assembled back to the full client
+    axis). With the default ``reduction="gather"`` the result is
+    bit-for-bit the unsharded ``sim.run`` of the same cell;
+    ``reduction="psum"`` trades bitwise equality for an N-fold smaller
+    collective. The capacity ``len(sim.p)`` must divide the mesh's
+    client-axis size.
+    """
+    cell_ax, client_ax = _mesh_axes(mesh)
+    if client_ax is None:
+        raise ValueError(
+            f"run_client_sharded needs a mesh with a '{CLIENT_AXIS}' axis; "
+            f"got axes {mesh.axis_names}")
+    if cell_ax is not None and mesh.shape[cell_ax] != 1:
+        raise ValueError(
+            "run_client_sharded executes a single cell — the mesh's cell "
+            f"axis must have size 1, got {mesh.shape[cell_ax]}")
+    scheduler = sim.scheduler if scheduler is None else scheduler
+    energy = sim.energy if energy is None else energy
+    if scheduler is None or energy is None:
+        raise ValueError("scheduler/energy must be given (or set on sim)")
+    if p is None:
+        p = sim.p
+    return _run_cell_client_sharded(
+        scheduler, energy, active_mask, p, params0, key, sim=sim,
+        num_steps=num_steps, eval_fn=eval_fn, eval_every=eval_every,
+        mesh=mesh, reduction=reduction)
 
 
 def run_group_sharded(scheduler, energy, active, p, params0, keys, *, sim,
                       num_steps: int, n_scenarios: int, mesh: Mesh,
-                      eval_fn=None, eval_every: int = 0):
+                      eval_fn=None, eval_every: int = 0,
+                      reduction: str = "gather"):
     """Execute one structure-group's (S × R) cell block across ``mesh``.
 
     Flatten → pad → shard_map → slice off padding → reshape to (S, R).
@@ -147,16 +371,28 @@ def run_group_sharded(scheduler, energy, active, p, params0, keys, *, sim,
     the cell axis exactly like the components. Per-cell numerics match
     the vmap path to float32 reassociation tolerance (each cell is the
     same ``ClientSimulator.run`` under the same per-seed PRNG key).
+
+    A mesh carrying a ``clients`` axis additionally shards every
+    per-client operand of every cell across it (DESIGN.md §8);
+    ``reduction`` selects the cross-shard aggregation (``"gather"`` —
+    bitwise — or ``"psum"``).
     """
-    _cell_axis(mesh)  # validate before any device work
+    cell_ax, client_ax = _mesh_axes(mesh)  # validate before any device work
     r = keys.shape[0]
     n_cells = n_scenarios * r
+    if client_ax is not None and p is None:
+        # The simulator's constructor default cannot be used sharded —
+        # the closed-over full (N,) vector would be replicated against
+        # (n_local,) decisions — so materialize it as a sharded operand.
+        p = jnp.broadcast_to(sim.p, (n_scenarios,) + sim.p.shape)
     sch_c, en_c, active_c, p_c, keys_c = flatten_cells(
         scheduler, energy, keys, n_scenarios=n_scenarios, active=active, p=p)
+    cell_shards = mesh.shape[cell_ax] if cell_ax is not None else 1
     (sch_c, en_c, active_c, p_c, keys_c), _ = pad_cells(
-        (sch_c, en_c, active_c, p_c, keys_c), n_cells, mesh.size)
+        (sch_c, en_c, active_c, p_c, keys_c), n_cells, cell_shards)
     out = _run_group_sharded(sch_c, en_c, active_c, p_c, params0, keys_c,
                              sim=sim, num_steps=num_steps, eval_fn=eval_fn,
-                             eval_every=eval_every, mesh=mesh)
+                             eval_every=eval_every, mesh=mesh,
+                             reduction=reduction)
     return jax.tree_util.tree_map(
         lambda x: x[:n_cells].reshape((n_scenarios, r) + x.shape[1:]), out)

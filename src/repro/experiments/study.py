@@ -46,20 +46,27 @@ from repro.experiments.scenario import FIG1_SCHEDULERS, Scenario
 class ExecutionConfig:
     """How a study executes — everything that is not *what* to run.
 
-    mesh : 1-D device mesh for cell-sharded execution (DESIGN.md §5);
-        None (or 1 device) → single-device vmap path.
+    mesh : device mesh for sharded execution: 1-D cells mesh
+        (DESIGN.md §5), 1-D ``clients`` mesh (within-cell client-axis
+        sharding, DESIGN.md §8) or 2-D ``(cells, clients)`` grid mesh
+        (:func:`repro.experiments.placement.make_grid_mesh`); None (or
+        1 device) → single-device vmap path.
     eval_fn : optional (params) -> metric pytree, evaluated inside the
         compiled loop every ``eval_every`` steps.
     eval_every : eval chunk length; 0 → one eval at the end when
         ``eval_fn`` is set.
     sequential : run the per-cell baseline (one traced scan per cell)
         instead of the batched engine — for cross-checks and timing.
+    client_reduction : cross-shard aggregation under a ``clients`` mesh
+        axis: ``"gather"`` (bitwise vs the vmap path) or ``"psum"``
+        (bandwidth-optimal, f32 tolerance). Ignored without one.
     """
 
     mesh: Any = None
     eval_fn: Callable | None = None
     eval_every: int = 0
     sequential: bool = False
+    client_reduction: str = "gather"
 
 
 class Study:
@@ -199,7 +206,8 @@ class Study:
             [sc for sc, _ in cells], sim=sim, params0=params0,
             num_steps=self.num_steps, seeds=self.seeds(),
             eval_fn=cfg.eval_fn, eval_every=cfg.eval_every,
-            mesh=cfg.mesh, sequential=cfg.sequential)
+            mesh=cfg.mesh, sequential=cfg.sequential,
+            client_reduction=cfg.client_reduction)
         axes = dict(self._sweep_axes())
         axes["seed"] = self._seed_values()
         return GridResult(

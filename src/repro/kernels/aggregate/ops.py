@@ -35,3 +35,21 @@ def masked_scaled_aggregate(g, w, block_p: int = 2048, out_dtype=None,
     return masked_scaled_aggregate_kernel(
         g, w, mask, block_p=block_p, interpret=_interpret(),
         out_dtype=out_dtype)
+
+
+def masked_scaled_aggregate_sharded(g, w, *, axis_name: str,
+                                    block_p: int = 2048, out_dtype=None,
+                                    mask=None):
+    """Client-sharded operands (DESIGN.md §8): each device launches the
+    tiled kernel over its local ``(n_local, P)`` gradient rows, then the
+    ``(P,)`` partials psum across ``axis_name``. The in-kernel and
+    cross-device accumulation both stay f32; the result is cast to
+    ``out_dtype`` only after the collective, so low-precision outputs
+    never round-trip through the reduction."""
+    import jax.numpy as jnp
+
+    partial = masked_scaled_aggregate(g, w, block_p=block_p,
+                                      out_dtype=jnp.float32, mask=mask)
+    out = jax.lax.psum(partial, axis_name)
+    od = jnp.dtype(out_dtype) if out_dtype is not None else g.dtype
+    return out.astype(od)

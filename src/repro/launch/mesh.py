@@ -6,6 +6,8 @@ touches jax device state (device count locks on first jax init).
   single pod : (16, 16)    axes ("data", "model")   = 256 chips
   multi-pod  : (2, 16, 16) axes ("pod", "data", "model") = 512 chips
   cell mesh  : (D,)        axis ("cells",)   — scenario-grid sharding
+  client mesh: (D,)        axis ("clients",) — within-cell client sharding
+  grid mesh  : (Dc, Dn)    axes ("cells", "clients") — both, composed
 
 The dry-run launcher sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512``
 before any jax import so 512 placeholder CPU devices exist.
@@ -16,10 +18,17 @@ from __future__ import annotations
 import jax
 
 # Grid sharding wants a flat 1-D mesh over the (scenario × seed) cell
-# axis regardless of how training meshes are shaped; the factory lives
-# with the placement layer (DESIGN.md §5) and is re-exported here so
-# drivers import every mesh from one module.
-from repro.experiments.placement import CELL_AXIS, make_cell_mesh  # noqa: F401
+# axis regardless of how training meshes are shaped; within-cell client
+# sharding (DESIGN.md §8) adds the composable "clients" axis. The
+# factories live with the placement layer (DESIGN.md §5) and are
+# re-exported here so drivers import every mesh from one module.
+from repro.experiments.placement import (  # noqa: F401
+    CELL_AXIS,
+    CLIENT_AXIS,
+    make_cell_mesh,
+    make_client_mesh,
+    make_grid_mesh,
+)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -27,6 +27,10 @@ def pytest_configure(config):
         "markers",
         "ragged: ragged client populations (mask-aware padded grids, "
         "DESIGN.md §7) — select with `-m ragged`")
+    config.addinivalue_line(
+        "markers",
+        "clientshard: within-cell client-axis sharding (DESIGN.md §8) — "
+        "select with `-m clientshard`")
 
 
 def pytest_collection_modifyitems(config, items):

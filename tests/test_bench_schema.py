@@ -1,0 +1,83 @@
+"""Regression tests pinning the BENCH_*.json series schema and the
+--bench-out non-clobbering rule (benchmarks/run.py).
+
+The perf-trajectory files are compared across PRs, so their shape is a
+contract: every emitted series must carry ``name`` / ``values`` /
+``units`` keys, and same-date files must uniquify with ``.N`` suffixes
+that keep counting past ``.2``.
+"""
+
+import json
+import os
+import sys
+
+import pytest
+
+# benchmarks/ is a repo-root package (like run.py's own `sys.path.insert`);
+# derive the root from this file so collection works from any cwd.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks import run as bench_run  # noqa: E402
+
+
+ROWS = [
+    ("fig1", "fig1_alg1_periodic,123,acc_mean=0.5;acc_std=0.01;n_nan=0"),
+    ("fig1", "quadgrid_sharded_speedup,4567,speedup=3.82;devices=8;"
+             "sharded_faster=True"),
+    ("theory", "bound_floor,0,floor=1.733"),
+    ("fig1", "largeN_sharded_N10240,99,devices=8;iters=10"),
+]
+
+
+def test_every_series_has_name_values_units_keys():
+    for suite, row in ROWS:
+        rec = bench_run._parse_row(suite, row)
+        for key in ("name", "values", "units"):
+            assert key in rec, f"series missing {key!r}: {rec}"
+        assert isinstance(rec["values"], dict) and rec["values"]
+        assert rec["units"]["us_per_call"] == "us"
+        # us_per_call is a value like any other, so downstream tooling
+        # can read one flat dict per series.
+        assert rec["values"]["us_per_call"] == rec["us_per_call"]
+
+
+def test_parse_row_values_are_typed():
+    rec = bench_run._parse_row(
+        "fig1", "x,10,speedup=2.5;devices=8;ok=True;label=warm")
+    assert rec["values"]["speedup"] == 2.5
+    assert rec["values"]["devices"] == 8.0
+    assert rec["values"]["ok"] is True
+    assert rec["values"]["label"] == "warm"
+    assert rec["values"]["us_per_call"] == 10.0
+
+
+def test_build_doc_schema_and_roundtrip():
+    records = [bench_run._parse_row(s, r) for s, r in ROWS]
+    doc = bench_run.build_doc(["fig1", "theory"], True, 8, records, [])
+    assert doc["schema"] == bench_run.SCHEMA
+    assert doc["device_count"] == 8
+    loaded = json.loads(json.dumps(doc))
+    for rec in loaded["results"]:
+        assert {"name", "values", "units"} <= set(rec)
+
+
+def test_bench_out_keeps_counting_suffixes(tmp_path):
+    """Non-clobbering must keep appending .N past .2 — a PR landing
+    fourth on one date writes BENCH_d.4.json, overwriting nothing."""
+    d, date = str(tmp_path), "2026-07-27"
+    paths = []
+    for expected in ("BENCH_2026-07-27.json", "BENCH_2026-07-27.2.json",
+                     "BENCH_2026-07-27.3.json", "BENCH_2026-07-27.4.json"):
+        path = bench_run.bench_out_path(d, date)
+        assert path == str(tmp_path / expected)
+        (tmp_path / expected).write_text("{}")
+        paths.append(path)
+    assert len(set(paths)) == 4
+
+
+def test_bench_out_is_gap_tolerant(tmp_path):
+    """A hole in the sequence (say .2 was deleted) is refilled without
+    touching later files."""
+    (tmp_path / "BENCH_2026-07-27.json").write_text("{}")
+    (tmp_path / "BENCH_2026-07-27.3.json").write_text("{}")
+    path = bench_run.bench_out_path(str(tmp_path), "2026-07-27")
+    assert path.endswith("BENCH_2026-07-27.2.json")

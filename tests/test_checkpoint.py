@@ -1,4 +1,7 @@
-"""Checkpoint roundtrip / retention / validation tests."""
+"""Checkpoint roundtrip / retention / validation tests — including the
+flat ``SimCarry`` save/restore/resume contract (DESIGN.md §5/§8): a
+simulator run interrupted mid-scan and resumed from an npz checkpoint
+must be bitwise the uninterrupted run."""
 
 import os
 
@@ -64,3 +67,101 @@ def test_manager_empty_raises(tmp_path):
     cm = CheckpointManager(str(tmp_path / "none"))
     with pytest.raises(FileNotFoundError):
         cm.restore(tree())
+
+
+# ------------------------------------------------- flat SimCarry round-trip
+
+def _sim_setup(optimizer):
+    from repro.core import ClientSimulator, make_quadratic
+    from repro.core.energy import make_arrivals
+    from repro.core.scheduling import make_scheduler
+
+    n, dim, steps = 6, 4, 30
+    prob = make_quadratic(jax.random.PRNGKey(3), n_clients=n, dim=dim,
+                          hetero=1.0)
+    w_star = prob.w_star
+    sim = ClientSimulator(
+        grads_fn=lambda w, k, t: {"w": prob.all_grads(w["w"])},
+        p=prob.p, optimizer=optimizer,
+        loss_fn=lambda w: jnp.sum((w["w"] - w_star) ** 2))
+    scheduler = make_scheduler("battery_adaptive", n)
+    energy = make_arrivals("binary", n, steps + 1)
+    params0 = {"w": jnp.full((dim,), 4.0)}
+    return sim, scheduler, energy, params0, steps
+
+
+def _cat_history(a, b):
+    return jax.tree_util.tree_map(
+        lambda x, y: jnp.concatenate([x, y]), a, b)
+
+
+@pytest.mark.parametrize("opt_name", ["sgd", "adam"])
+def test_flat_simcarry_checkpoint_resume_bitwise(tmp_path, opt_name):
+    """Save the flat SimCarry mid-run, restore it from disk into a
+    zeroed template, resume — history and final params bitwise equal to
+    the uninterrupted scan. Covers stateless (sgd) and stateful (adam —
+    flat (P,) moment buffers in the carry) optimizers, plus the
+    scheduler/energy state and the PRNG key surviving the npz trip."""
+    from repro import optim
+
+    optimizer = optim.sgd(0.02) if opt_name == "sgd" else optim.adam(0.01)
+    sim, scheduler, energy, params0, steps = _sim_setup(optimizer)
+    key = jax.random.PRNGKey(9)
+    spec = sim.flat_spec(params0)
+    assert spec is not None  # uniform-dtype params → flat carry
+
+    # Uninterrupted reference.
+    ref_params, ref_hist = sim.run(key, params0, steps, scheduler=scheduler,
+                                   energy=energy)
+
+    # First leg, checkpoint, restore into a zeroed same-structure
+    # template, second leg.
+    cut = 12
+    carry = sim.init(key, params0, scheduler=scheduler, energy=energy,
+                     spec=spec)
+    carry, hist1 = sim.run_carry(carry, cut, scheduler=scheduler,
+                                 energy=energy, spec=spec)
+    path = str(tmp_path / "carry.npz")
+    save_pytree(path, carry)
+    template = jax.tree_util.tree_map(jnp.zeros_like, carry)
+    restored = restore_pytree(path, template)
+    for a, b in zip(jax.tree_util.tree_leaves(carry),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    restored = jax.tree_util.tree_map(jnp.asarray, restored)
+    carry2, hist2 = sim.run_carry(restored, steps - cut, scheduler=scheduler,
+                                  energy=energy, spec=spec)
+
+    from repro.core import aggregation
+    final = aggregation.unravel_pytree(carry2.params, spec)
+    np.testing.assert_array_equal(np.asarray(final["w"]),
+                                  np.asarray(ref_params["w"]))
+    hist = _cat_history(hist1, hist2)
+    np.testing.assert_array_equal(np.asarray(hist.loss),
+                                  np.asarray(ref_hist.loss))
+    np.testing.assert_array_equal(np.asarray(hist.participation),
+                                  np.asarray(ref_hist.participation))
+    np.testing.assert_array_equal(np.asarray(hist.weight_sum),
+                                  np.asarray(ref_hist.weight_sum))
+
+
+def test_run_carry_matches_run_single_leg():
+    """run() is init + run_carry: one uncut run_carry leg reproduces
+    run() bitwise (the refactor guarantee)."""
+    from repro import optim
+    from repro.core import aggregation
+
+    sim, scheduler, energy, params0, steps = _sim_setup(optim.sgd(0.02))
+    key = jax.random.PRNGKey(4)
+    spec = sim.flat_spec(params0)
+    ref_params, ref_hist = sim.run(key, params0, steps, scheduler=scheduler,
+                                   energy=energy)
+    carry = sim.init(key, params0, scheduler=scheduler, energy=energy,
+                     spec=spec)
+    carry, hist = sim.run_carry(carry, steps, scheduler=scheduler,
+                                energy=energy, spec=spec)
+    final = aggregation.unravel_pytree(carry.params, spec)
+    np.testing.assert_array_equal(np.asarray(final["w"]),
+                                  np.asarray(ref_params["w"]))
+    np.testing.assert_array_equal(np.asarray(hist.loss),
+                                  np.asarray(ref_hist.loss))

@@ -79,6 +79,43 @@ def test_full_participation_equals_plain_sgd():
     np.testing.assert_allclose(s1.params["w"], expected, rtol=1e-5)
 
 
+def test_flat_loss_path_matches_per_leaf():
+    """build_energy_train_step(flat=True) — gradient raveled to one (P,)
+    buffer, flat optimizer state — is bitwise the per-leaf update for
+    elementwise optimizers (the ravel is a pure relayout)."""
+    from repro.optim import adam
+
+    n, b, dim = 4, 3, 5
+    params, batch, x = make(n, b, dim)
+    params = {"w": params["w"], "v": jnp.ones((dim,))}
+
+    def loss2(p, bt):
+        diff = p["w"][None, :] - bt["x"] * p["v"][None, :]
+        return jnp.sum(diff * diff, axis=-1)
+
+    mask = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+    scale = jnp.asarray([2.0, 1.0, 1.0, 3.0])
+    outs = {}
+    for flat in (False, True):
+        init_state, step = build_energy_train_step(
+            per_example_loss_fn=loss2, optimizer=adam(0.05), n_clients=n,
+            flat=flat)
+        state = init_state(params)
+        for _ in range(3):
+            state, metrics = jax.jit(step)(state, batch, mask, scale)
+        outs[flat] = (state, metrics)
+    for leaf in ("w", "v"):
+        np.testing.assert_array_equal(
+            np.asarray(outs[False][0].params[leaf]),
+            np.asarray(outs[True][0].params[leaf]))
+    np.testing.assert_array_equal(
+        np.asarray(outs[False][1]["weighted_loss"]),
+        np.asarray(outs[True][1]["weighted_loss"]))
+    # flat=True carries its optimizer moments as single (P,) buffers
+    flat_state = outs[True][0]
+    assert flat_state.opt_state.mu.shape == (2 * dim,)
+
+
 def test_per_example_coefficients():
     w = jnp.asarray([0.4, 0.0, 0.6])
     ids = jnp.asarray([0, 0, 1, 1, 2, 2])
