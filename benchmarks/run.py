@@ -69,6 +69,38 @@ def _parse_row(suite: str, row: str) -> dict:
             "values": values, "units": {"us_per_call": "us"}}
 
 
+def check_distinct_timings(records, threshold: int = 3) -> None:
+    """Reject mass-duplicated timings across distinct series names.
+
+    Regression guard for the fig1 attribution bug, where every
+    ``fig1_<scenario>`` row reported the identical grid-total
+    microseconds — 12 series names, one number. A duplicated timing is
+    legitimate only when the row *declares* its source via a
+    ``timing_ref=<origin series>`` derived field (speedup/summary rows
+    quote the measurement they annotate). Within one suite, ``threshold``
+    or more distinct names sharing one non-zero ``us_per_call`` without
+    such an attribution is an error. Zero/None values are exempt —
+    derived series (crossovers, dry-run tables) use 0 as "not a timing".
+    """
+    groups: dict = {}
+    for r in records:
+        us = r.get("us_per_call")
+        if not us:
+            continue
+        if "timing_ref" in (r.get("derived") or {}):
+            continue
+        groups.setdefault((r.get("suite"), us), set()).add(r.get("name"))
+    bad = {k: sorted(names) for k, names in groups.items()
+           if len(names) >= threshold}
+    if bad:
+        lines = [f"  suite={suite!r} us_per_call={us}: {names}"
+                 for (suite, us), names in sorted(bad.items())]
+        raise ValueError(
+            "duplicated timing attributed to multiple series (add a "
+            "timing_ref derived field or time each series honestly):\n"
+            + "\n".join(lines))
+
+
 def build_doc(selected, fast: bool, device_count: int, records, failed) -> dict:
     """The BENCH_*.json document — one pinned shape for every PR's
     perf-trajectory file."""
@@ -142,6 +174,12 @@ def main() -> None:
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             failed.append(name)
+
+    try:
+        check_distinct_timings(records)
+    except ValueError:
+        traceback.print_exc()
+        failed.append("timing-attribution")
 
     out_paths = [p for p in (args.json,) if p]
     if args.bench_out:

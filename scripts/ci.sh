@@ -8,6 +8,7 @@
 #   scripts/ci.sh            # all stages
 #   scripts/ci.sh tier1      # just the gate
 #   scripts/ci.sh multidevice ragged clientshard
+#   scripts/ci.sh kernels    # Pallas kernel suites + bench smoke
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -24,13 +25,22 @@ run_stage() {
         multidevice) stage multidevice -m multidevice ;;
         ragged)      stage ragged -m ragged ;;
         clientshard) stage clientshard -m clientshard ;;
-        *) echo "unknown stage: $1 (have tier1 multidevice ragged clientshard)" >&2
+        kernels)
+            # Kernel correctness (interpret-mode vs oracles) plus a bench
+            # harness smoke: the micro-bench suite must run end-to-end and
+            # emit schema-valid JSON (timing-attribution guard included).
+            stage kernels tests/test_kernels.py tests/test_kernels_properties.py \
+                tests/test_fused_update.py
+            python -m benchmarks.run --only kernels_bench --fast \
+                --json /tmp/bench_kernels_smoke.json >/dev/null
+            ;;
+        *) echo "unknown stage: $1 (have tier1 multidevice ragged clientshard kernels)" >&2
            exit 2 ;;
     esac
 }
 
 if [ "$#" -eq 0 ]; then
-    set -- tier1 multidevice ragged clientshard
+    set -- tier1 multidevice ragged clientshard kernels
 fi
 for s in "$@"; do
     run_stage "$s"

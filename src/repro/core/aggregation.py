@@ -53,6 +53,35 @@ def client_weights(p: jax.Array, decision: Decision) -> jax.Array:
     return p * decision.mask * decision.scale
 
 
+# ----------------------------------------------------- reduction grammar
+
+_REDUCTION_MODES = ("gather", "psum", "fused")
+
+
+def parse_reduction(reduction: str) -> tuple[str, Any]:
+    """Parse a cross-shard reduction string → ``(mode, wire_dtype)``.
+
+    Grammar (DESIGN.md §9): ``gather | psum | psum_bf16 | fused |
+    fused_bf16``. The optional ``_bf16`` suffix quantizes the ``(P,)``
+    partial sums *on the wire only* — each shard's partial is cast to
+    bf16, gathered, and accumulated locally in f32 (quantize-then-
+    exact-accumulate; a plain psum of bf16 operands would accumulate in
+    bf16 and compound rounding with shard count). ``gather`` admits no
+    wire dtype: it is the bit-for-bit differential oracle, and rounding
+    the wire would contradict that contract.
+    """
+    mode, _, wire = reduction.partition("_")
+    if mode not in _REDUCTION_MODES or wire not in ("", "bf16"):
+        raise ValueError(
+            f"reduction must be one of gather, psum[_bf16], fused[_bf16]; "
+            f"got {reduction!r}")
+    if wire and mode == "gather":
+        raise ValueError(
+            "gather is the bitwise oracle and takes no wire dtype; "
+            f"got {reduction!r}")
+    return mode, (jnp.bfloat16 if wire else None)
+
+
 def _mask_rows(leaf: jax.Array, mask: jax.Array | None) -> jax.Array:
     """Zero the masked-out client rows of an (N, ...) buffer.
 
@@ -236,7 +265,7 @@ def make_flat_grads_fn(grads_fn, spec: RavelSpec, n_clients: int):
                    + jnp.arange(n_local, dtype=jnp.int32))
             return flatten(grads_fn(params, key, t, clients=idx), n_local)
         full = flatten(grads_fn(params, key, t), n_clients)
-        if shard.reduction == "gather":
+        if parse_reduction(shard.reduction)[0] == "gather":
             return full
         off = jax.lax.axis_index(shard.axis_name) * n_local
         return jax.lax.dynamic_slice_in_dim(full, off, n_local, axis=0)
@@ -291,10 +320,29 @@ def reduce_flat(g: jax.Array, weights: jax.Array, *,
     return out.astype(od)
 
 
+def _cross_shard_sum(partial: jax.Array, axis_name: str,
+                     wire_dtype=None) -> jax.Array:
+    """Sum ``(P,)`` partials across ``axis_name`` shards.
+
+    ``wire_dtype=None`` is a plain psum. With a wire dtype (bf16), each
+    shard's partial is *quantized once* for the collective, then the
+    gathered partials are accumulated locally in f32-or-better — so the
+    rounding error is one cast per shard, independent of shard count. A
+    psum of bf16 operands would instead accumulate in bf16, compounding
+    rounding with every add in the reduction tree.
+    """
+    if wire_dtype is None:
+        return jax.lax.psum(partial, axis_name)
+    acc = jnp.promote_types(partial.dtype, jnp.float32)
+    wired = jax.lax.all_gather(partial.astype(wire_dtype), axis_name, axis=0)
+    return jnp.sum(wired.astype(acc), axis=0)
+
+
 def reduce_flat_client_sharded(g: jax.Array, weights: jax.Array, *,
                                axis_name: str, reduction: str = "gather",
                                use_kernel: bool = False, out_dtype=None,
-                               mask: jax.Array | None = None
+                               mask: jax.Array | None = None,
+                               wire_dtype=None
                                ) -> tuple[jax.Array, jax.Array]:
     """Client-sharded flat reduction: local ``(n_local, P)`` shard →
     replicated ``((P,), weight_sum)`` across the ``axis_name`` devices.
@@ -311,13 +359,29 @@ def reduce_flat_client_sharded(g: jax.Array, weights: jax.Array, *,
       :func:`make_flat_grads_fn`) skips the gradient gather; only the
       (N,)-sized weights/mask cross the axis.
     * ``"psum"`` — one local matvec/kernel launch over this shard's rows
-      followed by a ``(P,)`` psum. Bandwidth-optimal (the collective
-      moves P floats, not N·P) but reassociates the client sum across
-      shards — float32-tolerance, not bitwise. Partial sums travel in
-      the f32-or-better accumulation dtype and are cast to ``out_dtype``
-      only after the psum.
+      followed by a ``(P,)`` cross-shard sum. Bandwidth-optimal (the
+      collective moves P floats, not N·P) but reassociates the client
+      sum across shards — float32-tolerance, not bitwise. Partial sums
+      travel in the f32-or-better accumulation dtype and are cast to
+      ``out_dtype`` only after the collective. ``"psum_bf16"`` (or an
+      explicit ``wire_dtype``) additionally quantizes the partials to
+      bf16 *on the wire only* — local accumulation stays f32 on both
+      sides of the collective (:func:`_cross_shard_sum`), halving
+      collective bytes for one rounding per shard.
+
+    ``"fused"`` is rejected here: the fused reduce-and-update owns the
+    parameter step as well and lives in :func:`fused_flat_sgd_update`.
     """
-    if reduction == "gather":
+    mode, parsed_wire = parse_reduction(reduction)
+    if wire_dtype is None:
+        wire_dtype = parsed_wire
+    if mode == "fused":
+        raise ValueError(
+            "reduction 'fused' bundles the parameter update; use "
+            "fused_flat_sgd_update (trainer routes it automatically)")
+    if mode == "gather":
+        if wire_dtype is not None:
+            raise ValueError("gather is bitwise; wire_dtype is not allowed")
         weights = jax.lax.all_gather(weights, axis_name, axis=0, tiled=True)
         if mask is not None:
             mask = jax.lax.all_gather(mask, axis_name, axis=0, tiled=True)
@@ -326,21 +390,69 @@ def reduce_flat_client_sharded(g: jax.Array, weights: jax.Array, *,
         out = reduce_flat(g, weights, use_kernel=use_kernel,
                           out_dtype=out_dtype, mask=mask)
         return out, jnp.sum(weights)
-    if reduction != "psum":
-        raise ValueError(
-            f"reduction must be 'gather' or 'psum', got {reduction!r}")
     od = jnp.dtype(out_dtype) if out_dtype is not None else g.dtype
     acc = jnp.promote_types(g.dtype, jnp.float32)
+    partial = reduce_flat(g, weights, use_kernel=use_kernel,
+                          out_dtype=acc, mask=mask)
+    out = _cross_shard_sum(partial, axis_name, wire_dtype).astype(od)
+    return out, jax.lax.psum(jnp.sum(weights), axis_name)
+
+
+def fused_flat_sgd_update(g: jax.Array, weights: jax.Array,
+                          params: jax.Array, opt_state, optimizer, *,
+                          mask: jax.Array | None = None,
+                          use_kernel: bool = False, shard=None,
+                          wire_dtype=None):
+    """Fused reduce-and-update (DESIGN.md §9): mask-select, per-client
+    scaling, ``(N, P) → (P,)`` reduction, and the flat SGD parameter
+    step in **one** pass — a single Pallas launch when ``use_kernel``
+    (``masked_scaled_aggregate_update``), a single XLA-fusable matvec +
+    axpy otherwise. Returns ``(new_params, new_opt_state, weight_sum)``.
+
+    Only engages for a tagged plain-SGD optimizer (``kind == "sgd"``) —
+    the kernel reproduces ``w − η·(ω_sel @ g)`` exactly; anything
+    stateful (momentum, Adam) or nonlinear in the gradient (clipping)
+    must keep the unfused reduce → update split.
+
+    Sharded (``shard`` a ``ClientShard``): each device's kernel emits
+    its local update *delta* ``−η·(ω_sel @ g_local)``; SGD is linear in
+    the gradient, so ``params + Σ_shards delta`` equals the update of
+    the global reduction. The collective stays ``(P,)``-sized
+    (:func:`_cross_shard_sum`; ``wire_dtype`` quantizes it bf16-on-the-
+    wire with f32 accumulation), and the replicated parameters absorb
+    the summed delta in f32 before casting back.
+    """
+    from repro.optim.optimizers import SGDState, resolve_lr
+
+    if getattr(optimizer, "kind", "") != "sgd":
+        raise ValueError(
+            "fused_flat_sgd_update requires a plain sgd() optimizer "
+            f"(kind='sgd'); got kind={getattr(optimizer, 'kind', '')!r}")
+    eta = resolve_lr(optimizer.hyper, opt_state.step)
+    new_state = SGDState(step=opt_state.step + 1)
+    w32 = weights.astype(jnp.float32)
+    if shard is None:
+        if use_kernel:
+            from repro.kernels.aggregate import ops as agg_ops
+
+            new_params = agg_ops.masked_scaled_aggregate_update(
+                g, w32, eta, params, mask)
+        else:
+            agg = reduce_flat(g, weights, out_dtype=jnp.float32, mask=mask)
+            new_params = (params.astype(jnp.float32)
+                          - eta * agg).astype(params.dtype)
+        return new_params, new_state, jnp.sum(weights)
     if use_kernel:
         from repro.kernels.aggregate import ops as agg_ops
 
-        out = agg_ops.masked_scaled_aggregate_sharded(
-            g, weights.astype(jnp.float32), axis_name=axis_name,
-            out_dtype=od, mask=mask)
+        delta = agg_ops.masked_scaled_aggregate_update(g, w32, eta, None, mask)
     else:
-        partial = reduce_flat(g, weights, out_dtype=acc, mask=mask)
-        out = jax.lax.psum(partial, axis_name).astype(od)
-    return out, jax.lax.psum(jnp.sum(weights), axis_name)
+        agg = reduce_flat(g, weights, out_dtype=jnp.float32, mask=mask)
+        delta = -eta * agg
+    delta = _cross_shard_sum(delta, shard.axis_name, wire_dtype)
+    new_params = (params.astype(jnp.float32) + delta).astype(params.dtype)
+    wsum = jax.lax.psum(jnp.sum(weights), shard.axis_name)
+    return new_params, new_state, wsum
 
 
 def aggregate_client_grads_flat(stacked_grads, weights: jax.Array, *,

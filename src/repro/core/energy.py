@@ -103,9 +103,13 @@ class ClientShard(NamedTuple):
     axis_name : the mesh axis the client dimension is sharded over.
     shards    : number of devices along that axis (static).
     reduction : "gather" (all_gather rows, replicate the exact unsharded
-                reduction — bit-for-bit) or "psum" (local partial
-                reduction + psum — bandwidth-optimal, float32
-                reassociation tolerance). DESIGN.md §8.
+                reduction — bit-for-bit), "psum[_bf16]" (local partial
+                reduction + (P,) collective — bandwidth-optimal, float32
+                reassociation tolerance), or "fused[_bf16]" (psum wiring
+                plus the SGD parameter update fused into the local
+                kernel launch). ``_bf16`` quantizes the collective's
+                payload to bf16-on-the-wire with f32 accumulation.
+                DESIGN.md §8–9.
     """
 
     axis_name: str
@@ -129,9 +133,11 @@ def client_sharding(axis_name: str, shards: int, reduction: str = "gather"):
     The context is consulted at trace time only; compiled executables
     bake the collectives in.
     """
-    if reduction not in ("gather", "psum"):
-        raise ValueError(
-            f"reduction must be 'gather' or 'psum', got {reduction!r}")
+    # Validate against the shared grammar (lazy import: aggregation
+    # imports this module back for client_shard()).
+    from repro.core.aggregation import parse_reduction
+
+    parse_reduction(reduction)
     _CLIENT_SHARD.append(ClientShard(axis_name, int(shards), reduction))
     try:
         yield

@@ -17,6 +17,7 @@ Two execution modes cover the paper-scale and framework-scale regimes:
 
 from __future__ import annotations
 
+import functools
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -140,7 +141,13 @@ class ClientSimulator:
         """Build the scan carry; with ``spec`` params/opt_state are flat."""
         scheduler, energy = self._components(scheduler, energy)
         if spec is not None:
+            leaves = jax.tree_util.tree_leaves(params)
             params = aggregation.ravel_pytree(params, spec)
+            if len(leaves) == 1 and params is leaves[0]:
+                # Single-leaf ravel is a no-op reshape returning the
+                # caller's array itself; the carry must own its storage
+                # because run_carry donates it (DESIGN.md §9).
+                params = jnp.array(params, copy=True)
         k_sched, k_energy, k_run = jax.random.split(key, 3)
         return SimCarry(
             params=params,
@@ -181,6 +188,8 @@ class ClientSimulator:
             # (×1 on active rows — bit-exact).
             weights = weights * active_mask
         wsum = None
+        agg = params = opt_state = None
+        fusable = getattr(self.optimizer, "kind", "") == "sgd"
         if spec is not None:
             params_tree = aggregation.unravel_pytree(carry.params, spec)
             # The ravel boundary lives inside the wrapper: the scan body
@@ -188,10 +197,30 @@ class ClientSimulator:
             # and carries no per-leaf concat.
             g = self._flat_grads(spec)(params_tree, k_grad, carry.t)
             if shard is not None:
-                agg, wsum = aggregation.reduce_flat_client_sharded(
-                    g, weights, axis_name=shard.axis_name,
-                    reduction=shard.reduction,
-                    use_kernel=self.use_kernel, mask=active_mask)
+                mode, wire = aggregation.parse_reduction(shard.reduction)
+                if mode == "fused":
+                    if not fusable:
+                        raise ValueError(
+                            "reduction 'fused' bundles the SGD parameter "
+                            "update into the reduction kernel and needs a "
+                            "plain sgd() optimizer (kind='sgd'); use "
+                            "'psum' for stateful/clipped optimizers")
+                    params, opt_state, wsum = aggregation.fused_flat_sgd_update(
+                        g, weights, carry.params, carry.opt_state,
+                        self.optimizer, mask=active_mask,
+                        use_kernel=self.use_kernel, shard=shard,
+                        wire_dtype=wire)
+                else:
+                    agg, wsum = aggregation.reduce_flat_client_sharded(
+                        g, weights, axis_name=shard.axis_name,
+                        reduction=shard.reduction,
+                        use_kernel=self.use_kernel, mask=active_mask)
+            elif self.use_kernel and fusable:
+                # Unsharded fused fast path: identical f32 op sequence to
+                # reduce → −η·agg → add, collapsed into one Pallas launch.
+                params, opt_state, _ = aggregation.fused_flat_sgd_update(
+                    g, weights, carry.params, carry.opt_state,
+                    self.optimizer, mask=active_mask, use_kernel=True)
             else:
                 agg = aggregation.reduce_flat(g, weights,
                                               use_kernel=self.use_kernel,
@@ -210,8 +239,10 @@ class ClientSimulator:
             agg = aggregation.aggregate_client_grads_flat(
                 stacked, weights, use_kernel=self.use_kernel,
                 mask=active_mask)
-        updates, opt_state = self.optimizer.update(agg, carry.opt_state, carry.params)
-        params = apply_updates(carry.params, updates)
+        if params is None:
+            updates, opt_state = self.optimizer.update(
+                agg, carry.opt_state, carry.params)
+            params = apply_updates(carry.params, updates)
         loss_params = (aggregation.unravel_pytree(params, spec)
                        if spec is not None else params)
         loss = (self.loss_fn(loss_params) if self.loss_fn is not None
@@ -285,9 +316,16 @@ class ClientSimulator:
             lambda x: x.reshape((num_steps,) + x.shape[2:]), outs)
         return unflatten(carry.params), self._history(outs), evals
 
+    def _scan_steps(self, carry: SimCarry, num_steps: int, scheduler, energy,
+                    p, active_mask, spec):
+        def body(c, _):
+            return self._step(c, scheduler, energy, spec, p, active_mask)
+
+        return jax.lax.scan(body, carry, None, length=num_steps)
+
     def run_carry(self, carry: SimCarry, num_steps: int, *, scheduler=None,
-                  energy=None, p=None, active_mask=None, spec=None
-                  ) -> tuple[SimCarry, SimHistory]:
+                  energy=None, p=None, active_mask=None, spec=None,
+                  donate: bool = True) -> tuple[SimCarry, SimHistory]:
         """Advance an existing carry ``num_steps`` rounds as one scan.
 
         The checkpoint/resume entry point: a :class:`SimCarry` from
@@ -300,19 +338,46 @@ class ClientSimulator:
         (the default execution mode), None for the legacy pytree carry.
         Returns the advanced carry (same layout) and the chunk's
         :class:`SimHistory`.
+
+        When called at the top level (not under an enclosing trace) on a
+        **flat** carry, the scan runs under a jit that **donates** the
+        input carry: the flat ``(P,)`` params/opt-state buffers alias
+        the output instead of holding two live copies of the largest
+        state in the loop (DESIGN.md §9). The input ``carry`` is
+        consumed — rebind the result, as every call site here already
+        does; restored checkpoints stay valid because donation consumes
+        the device buffer, not the file. ``donate=False`` opts out.
+        Legacy pytree carries (``spec=None``) never donate — their
+        params leaves are the caller's own arrays. Under an outer trace
+        (vmap/jit of a caller) the scan inlines as before and donation
+        is the caller's concern.
         """
         scheduler, energy = self._components(scheduler, energy)
-
-        def body(c, _):
-            return self._step(c, scheduler, energy, spec, p, active_mask)
-
-        carry, outs = jax.lax.scan(body, carry, None, length=num_steps)
+        if donate and spec is not None and jax.core.trace_state_clean():
+            carry, outs = _run_carry_donated(
+                carry, scheduler, energy, p, active_mask,
+                sim=self, num_steps=int(num_steps), spec=spec)
+        else:
+            carry, outs = self._scan_steps(carry, num_steps, scheduler,
+                                           energy, p, active_mask, spec)
         return carry, self._history(outs)
 
     @staticmethod
     def _history(outs) -> SimHistory:
         return SimHistory(loss=outs["loss"], participation=outs["participation"],
                           weight_sum=outs["weight_sum"])
+
+
+@functools.partial(jax.jit, static_argnames=("sim", "num_steps", "spec"),
+                   donate_argnums=(0,))
+def _run_carry_donated(carry, scheduler, energy, p, active_mask, *,
+                       sim: ClientSimulator, num_steps: int, spec):
+    """Top-level jit of the :meth:`ClientSimulator.run_carry` scan with
+    the carry donated — input params/opt-state buffers alias the outputs.
+    ``sim`` is static (hashed by identity; its fields select the trace),
+    so each simulator instance owns its compiled executable."""
+    return sim._scan_steps(carry, num_steps, scheduler, energy, p,
+                           active_mask, spec)
 
 
 class TrainState(NamedTuple):
@@ -329,6 +394,7 @@ def build_energy_train_step(
     p: jax.Array | None = None,
     aux_loss_weight: float = 0.0,
     flat: bool = False,
+    use_kernel: bool = False,
 ):
     """SPMD train step with the paper's weighting baked into the loss.
 
@@ -349,10 +415,14 @@ def build_energy_train_step(
     loss-path gradient is raveled into one ``(P,)`` buffer, optimizer
     state lives flat, and the pytree view is rebuilt only at the
     ``TrainState.params`` boundary. Elementwise-optimizer numerics are
-    bitwise unchanged. Leave False (the default) for pjit-sharded
-    training — per-leaf optimizer state follows the parameter
-    PartitionSpecs (``repro.sharding.rules``), a single flat buffer
-    cannot.
+    bitwise unchanged. With a plain tagged ``sgd()`` optimizer the flat
+    step further routes through :func:`repro.core.aggregation.
+    fused_flat_sgd_update` — the whole reduce-and-update as one fused
+    pass (a single Pallas launch when ``use_kernel``, DESIGN.md §9); the
+    f32 op sequence is unchanged. Leave ``flat`` False (the default) for
+    pjit-sharded training — per-leaf optimizer state follows the
+    parameter PartitionSpecs (``repro.sharding.rules``), a single flat
+    buffer cannot.
     """
     if p is None:
         p = jnp.full((n_clients,), 1.0 / n_clients, jnp.float32)
@@ -386,8 +456,19 @@ def build_energy_train_step(
                 jax.tree_util.tree_map(lambda g: g.astype(spec.dtype), grads),
                 spec)
             pflat = aggregation.ravel_pytree(state.params, spec)
-            updates, opt_state = optimizer.update(gflat, state.opt_state, pflat)
-            params = aggregation.unravel_pytree(pflat + updates, spec)
+            if getattr(optimizer, "kind", "") == "sgd":
+                # The SPMD gradient is already reduced over examples, so
+                # the fused op sees it as a one-client stack with unit
+                # weight: one fused reduce-and-update pass (single Pallas
+                # launch under use_kernel) replaces update+apply.
+                pnew, opt_state, _ = aggregation.fused_flat_sgd_update(
+                    gflat[None, :], jnp.ones((1,), jnp.float32), pflat,
+                    state.opt_state, optimizer, use_kernel=use_kernel)
+                params = aggregation.unravel_pytree(pnew, spec)
+            else:
+                updates, opt_state = optimizer.update(gflat, state.opt_state,
+                                                      pflat)
+                params = aggregation.unravel_pytree(pflat + updates, spec)
         else:
             updates, opt_state = optimizer.update(grads, state.opt_state,
                                                   state.params)

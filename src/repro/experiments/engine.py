@@ -196,7 +196,7 @@ def execute_cells(
     eval_every: int = 0,
     mesh=None,
     sequential: bool = False,
-    client_reduction: str = "gather",
+    client_reduction: str = "psum",
 ) -> dict[str, CellResult]:
     """Execute scenario × seed cells with a prebuilt simulator.
 
@@ -225,8 +225,10 @@ def execute_cells(
     ``mesh`` may carry a ``clients`` axis (1-D ``make_client_mesh`` or
     2-D ``make_grid_mesh``, DESIGN.md §8): each cell's client axis is
     then sharded within the cell, ``client_reduction`` selecting the
-    cross-shard aggregation (``"gather"`` — bitwise vs the vmap path —
-    or ``"psum"``).
+    cross-shard aggregation — ``"psum"`` (default, bandwidth-optimal,
+    f32 tolerance vs the vmap path), ``"gather"`` (bitwise oracle), or
+    ``"fused[_bf16]"`` / ``"psum_bf16"`` (fused reduce-and-update kernel
+    and/or bf16 wire; DESIGN.md §9).
     """
     scenarios = list(scenarios)
     names = check_unique_names(scenarios)

@@ -207,7 +207,7 @@ def pad_cells(tree, n_cells: int, n_devices: int):
                           "reduction"))
 def _run_group_sharded(scheduler, energy, active, p, params0, keys, *, sim,
                        num_steps: int, eval_fn=None, eval_every: int = 0,
-                       mesh: Mesh, reduction: str = "gather"):
+                       mesh: Mesh, reduction: str = "psum"):
     """shard_map'd twin of ``engine._run_group``.
 
     ``scheduler`` / ``energy`` / ``keys`` leaves carry a leading
@@ -280,7 +280,7 @@ def _run_group_sharded(scheduler, energy, active, p, params0, keys, *, sim,
 def _run_cell_client_sharded(scheduler, energy, active, p, params0, key, *,
                              sim, num_steps: int, eval_fn=None,
                              eval_every: int = 0, mesh: Mesh,
-                             reduction: str = "gather"):
+                             reduction: str = "psum"):
     """Single-cell client-sharded execution: one population spanning the
     whole ``clients`` mesh (no cell axis, no cell vmap)."""
     client_ax = CLIENT_AXIS
@@ -322,7 +322,7 @@ def clear_cache() -> None:
 def run_client_sharded(sim, key, params0, num_steps: int, *, scheduler=None,
                        energy=None, mesh: Mesh, p=None, active_mask=None,
                        eval_fn=None, eval_every: int = 0,
-                       reduction: str = "gather"):
+                       reduction: str = "psum"):
     """Run ONE cell with its client axis sharded across ``mesh``.
 
     The within-cell entry point (DESIGN.md §8) for populations a single
@@ -332,11 +332,13 @@ def run_client_sharded(sim, key, params0, num_steps: int, *, scheduler=None,
     stay replicated. Same signature contract as
     :meth:`ClientSimulator.run` (returns ``(params, history[, evals])``
     with the participation history assembled back to the full client
-    axis). With the default ``reduction="gather"`` the result is
-    bit-for-bit the unsharded ``sim.run`` of the same cell;
-    ``reduction="psum"`` trades bitwise equality for an N-fold smaller
-    collective. The capacity ``len(sim.p)`` must divide the mesh's
-    client-axis size.
+    axis). The default ``reduction="psum"`` is bandwidth-optimal (the
+    collective moves P floats, not N·P — float32 reassociation
+    tolerance vs the unsharded run); ``reduction="gather"`` is the
+    bit-for-bit differential oracle, and ``"fused[_bf16]"`` /
+    ``"psum_bf16"`` select the fused reduce-and-update kernel and/or a
+    bf16 wire (DESIGN.md §9 decision table). The capacity ``len(sim.p)``
+    must divide the mesh's client-axis size.
     """
     cell_ax, client_ax = _mesh_axes(mesh)
     if client_ax is None:
@@ -362,7 +364,7 @@ def run_client_sharded(sim, key, params0, num_steps: int, *, scheduler=None,
 def run_group_sharded(scheduler, energy, active, p, params0, keys, *, sim,
                       num_steps: int, n_scenarios: int, mesh: Mesh,
                       eval_fn=None, eval_every: int = 0,
-                      reduction: str = "gather"):
+                      reduction: str = "psum"):
     """Execute one structure-group's (S × R) cell block across ``mesh``.
 
     Flatten → pad → shard_map → slice off padding → reshape to (S, R).
@@ -374,8 +376,9 @@ def run_group_sharded(scheduler, energy, active, p, params0, keys, *, sim,
 
     A mesh carrying a ``clients`` axis additionally shards every
     per-client operand of every cell across it (DESIGN.md §8);
-    ``reduction`` selects the cross-shard aggregation (``"gather"`` —
-    bitwise — or ``"psum"``).
+    ``reduction`` selects the cross-shard aggregation — ``"psum"``
+    (default, bandwidth-optimal), ``"gather"`` (the bitwise oracle), or
+    ``"fused[_bf16]"`` / ``"psum_bf16"`` (DESIGN.md §9).
     """
     cell_ax, client_ax = _mesh_axes(mesh)  # validate before any device work
     r = keys.shape[0]

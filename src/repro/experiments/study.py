@@ -58,15 +58,18 @@ class ExecutionConfig:
     sequential : run the per-cell baseline (one traced scan per cell)
         instead of the batched engine — for cross-checks and timing.
     client_reduction : cross-shard aggregation under a ``clients`` mesh
-        axis: ``"gather"`` (bitwise vs the vmap path) or ``"psum"``
-        (bandwidth-optimal, f32 tolerance). Ignored without one.
+        axis — ``"psum"`` (default: bandwidth-optimal, f32 tolerance vs
+        the vmap path), ``"gather"`` (the bitwise differential oracle),
+        ``"fused[_bf16]"`` (fused reduce-and-update kernel, plain sgd()
+        only), or ``"psum_bf16"`` (bf16-on-the-wire partials, f32
+        accumulation) — DESIGN.md §9. Ignored without a clients axis.
     """
 
     mesh: Any = None
     eval_fn: Callable | None = None
     eval_every: int = 0
     sequential: bool = False
-    client_reduction: str = "gather"
+    client_reduction: str = "psum"
 
 
 class Study:

@@ -2,9 +2,24 @@
 mode on CPU; Mosaic-compiled on TPU):
 
 * ``aggregate`` — masked/scaled client-gradient aggregation (the paper's
-  server update, eq. 11/12)
+  server update, eq. 11/12) and the fused reduce-and-update step
 * ``flash_attention`` — blockwise causal/sliding-window GQA attention
 * ``ssm_scan`` — chunked gated-linear-recurrence (Mamba2 SSD / mLSTM)
 
 Each ships ``ops.py`` (jit'd wrapper) and ``ref.py`` (pure-jnp oracle).
 """
+
+from jax.experimental.pallas import tpu as pltpu
+
+#: The installed jax's TPU compiler-params dataclass: jax < 0.5 exposes
+#: ``TPUCompilerParams``, newer releases renamed it ``CompilerParams``.
+#: One shim for every kernel package (``tests/test_kernels.py`` pins
+#: that this resolves to whichever symbol the installed jax exports).
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the installed jax's TPU compiler-params object — the shared
+    seam for the ``CompilerParams`` / ``TPUCompilerParams`` rename."""
+    return CompilerParams(**kwargs)

@@ -45,6 +45,33 @@ def _agg_kernel_masked(w_ref, m_ref, g_ref, o_ref):
                          preferred_element_type=jnp.float32).astype(o_ref.dtype)
 
 
+def _agg_update_kernel(eta_ref, w_ref, m_ref, g_ref, p_ref, o_ref):
+    # eta: (1, 1) f32; w, m: (1, N) f32; g: (N, bp); p, o: (1, bp).
+    # The fused server step (DESIGN.md §9): mask-select, weighted
+    # reduction, and the SGD update in one tile visit — the gradient
+    # block is read from HBM exactly once and no (P,)-sized aggregate
+    # ever materializes outside VMEM. Accumulation is f32 (MXU
+    # contract); the parameter tile is upcast, updated in f32, and cast
+    # back only on the way out.
+    g = g_ref[...].astype(jnp.float32)
+    g = jnp.where(m_ref[...].T > 0, g, 0.0)
+    acc = jnp.dot(w_ref[...], g, preferred_element_type=jnp.float32)
+    o_ref[...] = (p_ref[...].astype(jnp.float32)
+                  - eta_ref[0, 0] * acc).astype(o_ref.dtype)
+
+
+def _agg_delta_kernel(eta_ref, w_ref, m_ref, g_ref, o_ref):
+    # Same fused tile minus the parameter operand: emits the local
+    # update *delta* −eta·(w @ g_sel). The client-sharded step psums
+    # this (P,)-sized delta across shards and adds it to the replicated
+    # parameters — SGD is linear in the gradient, so the sum of local
+    # deltas equals the delta of the global reduction.
+    g = g_ref[...].astype(jnp.float32)
+    g = jnp.where(m_ref[...].T > 0, g, 0.0)
+    acc = jnp.dot(w_ref[...], g, preferred_element_type=jnp.float32)
+    o_ref[...] = (-eta_ref[0, 0] * acc).astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("block_p", "interpret", "out_dtype"))
 def masked_scaled_aggregate_kernel(g, w, mask=None, *, block_p: int = 2048,
@@ -93,4 +120,74 @@ def masked_scaled_aggregate_kernel(g, w, mask=None, *, block_p: int = 2048,
             out_shape=out_shape,
             interpret=interpret,
         )(w_op, m_op, g)
+    return out[0, :p]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_p", "interpret", "out_dtype"))
+def masked_scaled_aggregate_update_kernel(g, w, eta, params=None, mask=None,
+                                          *, block_p: int = 2048,
+                                          interpret: bool = False,
+                                          out_dtype=None):
+    """Fused reduce-and-update: one tiled launch over the parameter axis.
+
+    g: (N, P); w: (N,); eta: scalar learning rate.
+
+    * ``params`` given ((P,)): returns ``params − eta·(w_sel @ g)`` —
+      the whole flat SGD server step (mask-select, per-client scaling,
+      client-axis reduction, parameter update) as a single Pallas
+      program. Output dtype is ``params.dtype`` unless ``out_dtype``
+      overrides it.
+    * ``params`` None: returns the update *delta* ``−eta·(w_sel @ g)``
+      — the client-sharded form, where the (P,)-sized delta psums
+      across shards before the replicated parameters absorb it
+      (``out_dtype`` then defaults to f32 so partials travel in the
+      accumulation dtype).
+
+    ``mask`` is the (N,) 0/1 active-row operand; masked rows are
+    zero-*selected* inside the tile before the MXU matvec (exact zeros
+    even for inf/NaN garbage rows). In-kernel accumulation is f32
+    regardless of input dtypes; ``eta`` rides a (1, 1) operand
+    replicated to every grid step.
+    """
+    n, p = g.shape
+    bp = min(block_p, p)
+    pad = (-p) % bp
+    if pad:
+        g = jnp.pad(g, ((0, 0), (0, pad)))
+    pp = p + pad
+    if out_dtype is None:
+        out_dtype = jnp.float32 if params is None else params.dtype
+    out_shape = jax.ShapeDtypeStruct((1, pp), jnp.dtype(out_dtype))
+    w_op = w.reshape(1, n).astype(jnp.float32)
+    # mask=None runs the same program under an all-ones select — a
+    # bit-exact identity on every row, unlike a ×mask multiplicand.
+    m_op = (jnp.ones((1, n), jnp.float32) if mask is None
+            else mask.reshape(1, n).astype(jnp.float32))
+    eta_op = jnp.asarray(eta, jnp.float32).reshape(1, 1)
+    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    vec_spec = pl.BlockSpec((1, n), lambda i: (0, 0))
+    g_spec = pl.BlockSpec((n, bp), lambda i: (0, i))
+    tile_spec = pl.BlockSpec((1, bp), lambda i: (0, i))
+    if params is None:
+        out = pl.pallas_call(
+            _agg_delta_kernel,
+            grid=(pp // bp,),
+            in_specs=[scalar_spec, vec_spec, vec_spec, g_spec],
+            out_specs=tile_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(eta_op, w_op, m_op, g)
+    else:
+        p_op = params.reshape(1, p)
+        if pad:
+            p_op = jnp.pad(p_op, ((0, 0), (0, pad)))
+        out = pl.pallas_call(
+            _agg_update_kernel,
+            grid=(pp // bp,),
+            in_specs=[scalar_spec, vec_spec, vec_spec, g_spec, tile_spec],
+            out_specs=tile_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(eta_op, w_op, m_op, g, p_op)
     return out[0, :p]

@@ -10,13 +10,22 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.aggregate.aggregate import masked_scaled_aggregate_kernel
+from repro.kernels.aggregate.aggregate import (
+    masked_scaled_aggregate_kernel,
+    masked_scaled_aggregate_update_kernel,
+)
 
 _VMEM_BUDGET = 8 * 1024 * 1024
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _fit_block(n: int, itemsize: int, block_p: int) -> int:
+    while block_p > 128 and n * block_p * itemsize > _VMEM_BUDGET:
+        block_p //= 2
+    return block_p
 
 
 def masked_scaled_aggregate(g, w, block_p: int = 2048, out_dtype=None,
@@ -28,12 +37,28 @@ def masked_scaled_aggregate(g, w, block_p: int = 2048, out_dtype=None,
     active-row operand: masked rows are zero-selected inside the tile
     (exact-zero contribution even for non-finite rows).
     """
-    n = g.shape[0]
-    itemsize = g.dtype.itemsize
-    while block_p > 128 and n * block_p * itemsize > _VMEM_BUDGET:
-        block_p //= 2
+    block_p = _fit_block(g.shape[0], g.dtype.itemsize, block_p)
     return masked_scaled_aggregate_kernel(
         g, w, mask, block_p=block_p, interpret=_interpret(),
+        out_dtype=out_dtype)
+
+
+def masked_scaled_aggregate_update(g, w, eta, params=None, mask=None, *,
+                                   block_p: int = 2048, out_dtype=None):
+    """Fused reduce-and-update (DESIGN.md §9), one tiled launch:
+
+    * ``params`` given: ``params − eta·(w_sel @ g)`` — the full flat SGD
+      server step (output in ``params.dtype`` unless overridden).
+    * ``params`` None: the local delta ``−eta·(w_sel @ g)`` in f32 (the
+      client-sharded form; the caller psums the delta across shards).
+
+    ``mask`` rows are zero-selected inside the tile (exact-zero
+    contribution even for non-finite rows); in-kernel accumulation is
+    f32 either way.
+    """
+    block_p = _fit_block(g.shape[0], g.dtype.itemsize, block_p)
+    return masked_scaled_aggregate_update_kernel(
+        g, w, eta, params, mask, block_p=block_p, interpret=_interpret(),
         out_dtype=out_dtype)
 
 

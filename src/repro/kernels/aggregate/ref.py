@@ -10,3 +10,18 @@ def masked_scaled_aggregate_ref(g, w, mask=None):
     if mask is not None:
         g32 = jnp.where(mask.reshape(-1, 1) > 0, g32, 0.0)
     return jnp.einsum("n,np->p", w.astype(jnp.float32), g32).astype(g.dtype)
+
+
+def masked_scaled_aggregate_update_ref(g, w, eta, params=None, mask=None):
+    """Oracle for the fused reduce-and-update kernel: with ``params``
+    returns ``params − eta·(w_sel @ g)`` (in ``params.dtype``), without
+    it the f32 delta ``−eta·(w_sel @ g)``. Accumulation f32 throughout;
+    masked rows are dropped by a row select, never a multiply."""
+    g32 = g.astype(jnp.float32)
+    if mask is not None:
+        g32 = jnp.where(mask.reshape(-1, 1) > 0, g32, 0.0)
+    acc = jnp.einsum("n,np->p", w.astype(jnp.float32), g32)
+    eta = jnp.asarray(eta, jnp.float32)
+    if params is None:
+        return -eta * acc
+    return (params.astype(jnp.float32) - eta * acc).astype(params.dtype)

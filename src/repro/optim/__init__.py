@@ -15,6 +15,7 @@ from repro.optim.optimizers import (
     apply_updates,
     chain_clip,
     momentum,
+    resolve_lr,
     sgd,
 )
 from repro.optim.schedules import (
@@ -32,6 +33,7 @@ __all__ = [
     "adamw",
     "apply_updates",
     "chain_clip",
+    "resolve_lr",
     "constant_schedule",
     "cosine_schedule",
     "inverse_time_schedule",

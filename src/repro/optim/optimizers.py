@@ -19,12 +19,23 @@ Schedule = Callable[[jax.Array], jax.Array]
 class Optimizer(NamedTuple):
     init: Callable[[Any], Any]
     update: Callable[..., tuple[Any, Any]]  # (grads, state, params) -> (updates, state)
+    # Fusion tag (DESIGN.md §9): ``kind`` names the update rule when it is
+    # simple enough for a fused kernel to reproduce ("sgd"), and ``hyper``
+    # carries the hyperparameters the kernel needs (for sgd: the lr /
+    # schedule). Wrappers like chain_clip stay untagged — their update is
+    # not linear in the gradient, so fusion must not engage.
+    kind: str = ""
+    hyper: Any = None
 
 
-def _resolve_lr(lr, step):
+def resolve_lr(lr, step):
+    """Evaluate a float-or-schedule learning rate at ``step`` (f32)."""
     if callable(lr):
         return lr(step)
     return jnp.asarray(lr, jnp.float32)
+
+
+_resolve_lr = resolve_lr
 
 
 class SGDState(NamedTuple):
@@ -42,7 +53,7 @@ def sgd(lr) -> Optimizer:
         updates = jax.tree_util.tree_map(lambda g: -eta * g, grads)
         return updates, SGDState(step=state.step + 1)
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, kind="sgd", hyper=lr)
 
 
 class MomentumState(NamedTuple):

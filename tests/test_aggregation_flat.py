@@ -194,15 +194,21 @@ def test_flat_carry_run_matches_legacy(opt, use_kernel):
 def test_flat_carry_one_kernel_call_per_step(monkeypatch):
     """Tracing the whole scan loop with use_kernel=True must hit the
     kernel entry point exactly once — one launch per step regardless of
-    the number of parameter leaves."""
+    the number of parameter leaves. A tagged plain sgd() optimizer
+    routes through the *fused* reduce-and-update op (DESIGN.md §9); the
+    unfused reduce must not run at all on that path."""
     calls = []
-    real = agg_ops.masked_scaled_aggregate
+    real = agg_ops.masked_scaled_aggregate_update
 
     def counting(g, w, *a, **kw):
         calls.append(g.shape)
         return real(g, w, *a, **kw)
 
-    monkeypatch.setattr(agg_ops, "masked_scaled_aggregate", counting)
+    def no_unfused(*a, **kw):
+        raise AssertionError("unfused reduce reached on the fused sgd path")
+
+    monkeypatch.setattr(agg_ops, "masked_scaled_aggregate_update", counting)
+    monkeypatch.setattr(agg_ops, "masked_scaled_aggregate", no_unfused)
     n = 4
     params, grads_fn, loss_fn = _dict_problem(n)
     sim = ClientSimulator(
@@ -212,6 +218,32 @@ def test_flat_carry_one_kernel_call_per_step(monkeypatch):
     sim.run(jax.random.PRNGKey(0), params, 10)
     # The scan body traces once; a per-leaf implementation would record
     # len(params) == 3 shapes here.
+    total = 3 * 5 + 7 + 2 * 3 * 5
+    assert calls == [(n, total)]
+
+
+def test_flat_carry_stateful_optimizer_keeps_unfused_kernel(monkeypatch):
+    """adam (untagged) must keep the reduce → update split: exactly one
+    unfused kernel launch per step, never the fused sgd op."""
+    calls = []
+    real = agg_ops.masked_scaled_aggregate
+
+    def counting(g, w, *a, **kw):
+        calls.append(g.shape)
+        return real(g, w, *a, **kw)
+
+    def no_fused(*a, **kw):
+        raise AssertionError("fused sgd op reached with a stateful optimizer")
+
+    monkeypatch.setattr(agg_ops, "masked_scaled_aggregate", counting)
+    monkeypatch.setattr(agg_ops, "masked_scaled_aggregate_update", no_fused)
+    n = 4
+    params, grads_fn, loss_fn = _dict_problem(n)
+    sim = ClientSimulator(
+        grads_fn=grads_fn, scheduler=make_scheduler("alg1", n),
+        energy=BinaryArrivals([0.5] * n), p=jnp.full((n,), 0.25),
+        optimizer=adam(0.05), use_kernel=True)
+    sim.run(jax.random.PRNGKey(0), params, 10)
     total = 3 * 5 + 7 + 2 * 3 * 5
     assert calls == [(n, total)]
 

@@ -74,6 +74,60 @@ def test_bench_out_keeps_counting_suffixes(tmp_path):
     assert len(set(paths)) == 4
 
 
+def _rec(name, us, derived=None, suite="fig1"):
+    return {"suite": suite, "name": name, "us_per_call": us,
+            "derived": derived or {}, "values": {"us_per_call": us},
+            "units": {"us_per_call": "us"}}
+
+
+def test_duplicated_timings_across_names_rejected():
+    """The fig1 attribution bug: many distinct series quoting one grid
+    total. Three or more unattributed names on one value must fail."""
+    records = [_rec(f"fig1_s{i}", 4321.0) for i in range(3)]
+    with pytest.raises(ValueError, match="fig1_s0"):
+        bench_run.check_distinct_timings(records)
+
+
+def test_duplicated_timings_allowed_with_timing_ref():
+    """Speedup/summary rows may quote another row's measurement when
+    they say so via timing_ref."""
+    records = [
+        _rec("largeN_fused_N4096", 777.0),
+        _rec("largeN_speedup_N4096", 777.0,
+             {"timing_ref": "largeN_fused_N4096"}),
+        _rec("largeN_summary", 777.0, {"timing_ref": "largeN_fused_N4096"}),
+    ]
+    bench_run.check_distinct_timings(records)  # no raise
+
+
+def test_two_way_collisions_and_zero_rows_tolerated():
+    """Pairs can legitimately tie (quantised clocks); 0/None mark
+    derived rows that never claim to be timings."""
+    records = [
+        _rec("a", 5.0), _rec("b", 5.0),                 # pair: fine
+        _rec("bound_floor", 0, suite="theory"),          # 0 exempt
+        _rec("bound_tail", 0, suite="theory"),
+        _rec("largeN_crossover", 0),
+        _rec("roofline_x", None, suite="roofline_table"),
+        _rec("roofline_y", None, suite="roofline_table"),
+        _rec("roofline_z", None, suite="roofline_table"),
+    ]
+    bench_run.check_distinct_timings(records)  # no raise
+
+
+def test_duplicates_grouped_per_suite():
+    """The same value in different suites is coincidence, not
+    mass-attribution — grouping is (suite, us)."""
+    records = [_rec("a", 9.0, suite="fig1"),
+               _rec("b", 9.0, suite="theory"),
+               _rec("c", 9.0, suite="kernels_bench")]
+    bench_run.check_distinct_timings(records)  # no raise
+    records.append(_rec("d", 9.0, suite="fig1"))
+    records.append(_rec("e", 9.0, suite="fig1"))
+    with pytest.raises(ValueError, match="suite='fig1'"):
+        bench_run.check_distinct_timings(records)
+
+
 def test_bench_out_is_gap_tolerant(tmp_path):
     """A hole in the sequence (say .2 was deleted) is refilled without
     touching later files."""

@@ -9,10 +9,13 @@ produces *exactly* the numbers of the single-device vmap path, across
 all six schedulers × all four arrival families, including ragged
 (masked) cells.
 
-The default ``reduction="gather"`` is the bitwise contract (the global
-gradient buffer is reassembled in exact row order and every shard
-replays the identical unsharded reduction); ``reduction="psum"`` is the
-bandwidth-optimal production mode, held to float32 tolerance. Combined
+``reduction="gather"`` is the bitwise contract (the global gradient
+buffer is reassembled in exact row order and every shard replays the
+identical unsharded reduction) — the differential oracle every other
+mode is held against. The *default* under an active clients axis is
+``"psum"`` (DESIGN.md §9): bandwidth-optimal, float32-reassociation
+tolerance; ``"fused[_bf16]"`` additionally folds the SGD update into
+the local launch, and ``"psum_bf16"`` quantizes the wire. Combined
 ``(cells, clients)`` meshes must keep the one-trace-per-structure
 guarantee of the cell-sharded path.
 """
@@ -138,7 +141,8 @@ def test_client_sharded_matches_vmap_bitwise(sim, params0, scheduler,
         "n_clients": list(pops), "seeds": seeds})
     plain = study.run(sim=sim, params0=params0)
     sharded = study.run(sim=sim, params0=params0,
-                        config=ExecutionConfig(mesh=make_client_mesh()))
+                        config=ExecutionConfig(mesh=make_client_mesh(),
+                                               client_reduction="gather"))
     for n in pops:
         name = f"{scheduler}_{arrivals}_n{n}"
         assert sharded[name].history.participation.shape == \
@@ -162,7 +166,8 @@ def test_single_cell_run_client_sharded_bitwise(sim, params0):
     key = jax.random.PRNGKey(0)
     pu, hu = sim.run(key, params0, 20, scheduler=scheduler, energy=energy)
     ps, hs = run_client_sharded(sim, key, params0, 20, scheduler=scheduler,
-                                energy=energy, mesh=make_client_mesh())
+                                energy=energy, mesh=make_client_mesh(),
+                                reduction="gather")
     np.testing.assert_array_equal(np.asarray(pu), np.asarray(ps))
     np.testing.assert_array_equal(np.asarray(hu.loss), np.asarray(hs.loss))
     np.testing.assert_array_equal(np.asarray(hu.participation),
@@ -191,7 +196,8 @@ def test_large_population_cell_bitwise():
     params0 = jnp.full((dim,), 2.0)
     pu, hu = sim.run(key, params0, steps, scheduler=scheduler, energy=energy)
     ps, hs = run_client_sharded(sim, key, params0, steps, scheduler=scheduler,
-                                energy=energy, mesh=make_client_mesh())
+                                energy=energy, mesh=make_client_mesh(),
+                                reduction="gather")
     np.testing.assert_array_equal(np.asarray(pu), np.asarray(ps))
     np.testing.assert_array_equal(np.asarray(hu.loss), np.asarray(hs.loss))
     np.testing.assert_array_equal(np.asarray(hu.participation),
@@ -210,7 +216,8 @@ def test_eval_chunked_run_client_sharded(sim, params0, loss_fn):
     ps, hs, es = run_client_sharded(sim, key, params0, 20,
                                     scheduler=scheduler, energy=energy,
                                     mesh=make_client_mesh(),
-                                    eval_fn=loss_fn, eval_every=10)
+                                    eval_fn=loss_fn, eval_every=10,
+                                    reduction="gather")
     assert es.shape == (2,)
     np.testing.assert_array_equal(np.asarray(eu), np.asarray(es))
     np.testing.assert_array_equal(np.asarray(hu.loss), np.asarray(hs.loss))
@@ -279,7 +286,8 @@ def test_psum_reduction_matches_gather(sim, params0):
         "scheduler": "alg2", "arrivals": "binary",
         "n_clients": [5, 8], "seeds": 2})
     gather = study.run(sim=sim, params0=params0,
-                       config=ExecutionConfig(mesh=make_client_mesh()))
+                       config=ExecutionConfig(mesh=make_client_mesh(),
+                                              client_reduction="gather"))
     psum = study.run(sim=sim, params0=params0,
                      config=ExecutionConfig(mesh=make_client_mesh(),
                                             client_reduction="psum"))
@@ -316,6 +324,63 @@ def test_kernel_path_client_sharded(master, params0, loss_fn):
         np.testing.assert_array_equal(
             np.asarray(plain[name].history.participation),
             np.asarray(kern[name].history.participation))
+
+
+@clientshard
+def test_default_client_reduction_is_psum():
+    """The production default under a clients axis is psum (DESIGN.md
+    §9 decision table); gather remains opt-in as the bitwise oracle."""
+    assert ExecutionConfig().client_reduction == "psum"
+    import inspect
+
+    sig = inspect.signature(run_client_sharded)
+    assert sig.parameters["reduction"].default == "psum"
+
+
+@clientshard
+@multidevice
+@pytest.mark.parametrize("reduction", ["fused", "fused_bf16", "psum_bf16"])
+def test_fused_and_wire_modes_match_gather(sim, params0, reduction):
+    """The fused reduce-and-update modes and the bf16-wire psum agree
+    with the bitwise gather oracle to their documented tolerances
+    (DESIGN.md §9); participation (RNG + scheduling, no reduction
+    involved) stays exact."""
+    study = Study("cs", num_steps=15, axes={
+        "scheduler": "alg2", "arrivals": "binary",
+        "n_clients": [5, 8], "seeds": 2})
+    gather = study.run(sim=sim, params0=params0,
+                       config=ExecutionConfig(mesh=make_client_mesh(),
+                                              client_reduction="gather"))
+    other = study.run(sim=sim, params0=params0,
+                      config=ExecutionConfig(mesh=make_client_mesh(),
+                                             client_reduction=reduction))
+    # bf16 wire: one quantization of the (P,) partial per shard per
+    # step, f32 accumulation on both sides — bf16-relative tolerance.
+    rtol, atol = (1e-5, 1e-6) if "bf16" not in reduction else (2e-2, 1e-2)
+    for name in gather:
+        np.testing.assert_allclose(np.asarray(gather[name].history.loss),
+                                   np.asarray(other[name].history.loss),
+                                   rtol=rtol, atol=atol)
+        np.testing.assert_array_equal(
+            np.asarray(gather[name].history.participation),
+            np.asarray(other[name].history.participation))
+
+
+@clientshard
+@multidevice
+def test_fused_requires_sgd(master, params0, loss_fn):
+    """reduction='fused' with a stateful optimizer is a clear
+    trace-time error, never silently-wrong numerics."""
+    from repro.optim import adam
+
+    sim = ClientSimulator(grads_fn=lambda w, k, t: master.all_grads(w),
+                          p=master.p, optimizer=adam(1e-2), loss_fn=loss_fn)
+    scheduler = make_scheduler("alg2", N_CAP)
+    energy = make_arrivals("binary", N_CAP, 6)
+    with pytest.raises(ValueError, match="sgd"):
+        run_client_sharded(sim, jax.random.PRNGKey(0), params0, 5,
+                           scheduler=scheduler, energy=energy,
+                           mesh=make_client_mesh(), reduction="fused")
 
 
 # --------------------------------------------------- client-aware grads_fn

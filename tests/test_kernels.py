@@ -158,3 +158,34 @@ def test_gla_scan_sweep(b, s, h, dk, dv, chunk):
     ref = gla_scan_ref(fold(a), fold(k), fold(v), fold(q)) \
         .reshape(b, h, s, dv).swapaxes(1, 2)
     np.testing.assert_allclose(y, ref, rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------- compiler-params shim
+
+def test_compiler_params_shim_resolves_installed_symbol():
+    """``repro.kernels.CompilerParams`` must be the one dataclass the
+    installed jax exports (``CompilerParams`` on new releases,
+    ``TPUCompilerParams`` before the rename) — every kernel module
+    imports this single shim instead of re-probing pltpu."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    import repro.kernels as rk
+
+    expected = getattr(pltpu, "CompilerParams", None) \
+        or pltpu.TPUCompilerParams
+    assert rk.CompilerParams is expected
+    params = rk.tpu_compiler_params(dimension_semantics=("arbitrary",))
+    assert isinstance(params, rk.CompilerParams)
+
+
+def test_kernel_modules_use_shared_shim():
+    """No kernel module keeps a private getattr-probe: they all bind the
+    package-level shim object."""
+    import importlib
+
+    import repro.kernels as rk
+
+    fa = importlib.import_module("repro.kernels.flash_attention.flash_attention")
+    ss = importlib.import_module("repro.kernels.ssm_scan.ssm_scan")
+    assert fa._CompilerParams is rk.CompilerParams
+    assert ss._CompilerParams is rk.CompilerParams
