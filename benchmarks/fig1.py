@@ -326,6 +326,72 @@ def _large_n_rows(iters: int = 20, dim: int = 16,
     return rows
 
 
+def _faultpath_overhead_rows(iters: int, seeds: int) -> list[str]:
+    """Fault-path overhead series (DESIGN.md §10): the same 4-scheduler
+    quadratic cells run warm three ways — no ``faults`` component at all
+    (baseline; fault-free scans compile with zero fault machinery),
+    a rate-0 ``drop`` component (the guarded per-step fault branch is in
+    the compiled scan but injects nothing), and an actively injecting
+    ``drop_corrupt`` component. The contract the series tracks: carrying
+    the rate-0 fault branch costs ≤ 5 % over the fault-free scan
+    (``within_budget``); the injecting timing is informational."""
+    from repro.core import ClientSimulator, make_quadratic
+    from repro.experiments import Scenario
+    from repro.experiments.engine import execute_cells
+    from repro.optim import sgd
+
+    n_clients, dim = 8, 64
+    problem = make_quadratic(jax.random.PRNGKey(7), n_clients=n_clients,
+                             dim=dim, hetero=1.0)
+    sim = ClientSimulator(
+        grads_fn=lambda p, k, t: problem.all_grads(p, key=k, noise=0.05),
+        p=problem.p, optimizer=sgd(0.02), loss_fn=problem.suboptimality)
+    params0 = jnp.full((dim,), 4.0)
+
+    def cells(faults, kwargs):
+        return [Scenario(name=s, scheduler=s, arrivals="periodic",
+                         n_clients=n_clients, horizon=iters + 1,
+                         faults=faults, fault_kwargs=kwargs)
+                for s in ("alg1", "alg2", "benchmark1", "benchmark2")]
+
+    def timed(scs, reps: int = 3):
+        def once():
+            res = execute_cells(scs, sim=sim, params0=params0,
+                                num_steps=iters, seeds=seeds)
+            jax.block_until_ready([c.params for c in res.values()])
+        once()                               # warm the jit cache
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.time()
+            once()
+            best = min(best, time.time() - t0)
+        return best
+
+    dt_clean = timed(cells(None, {}))
+    dt_rate0 = timed(cells("drop", {"rate": 0.0}))
+    dt_inject = timed(cells("drop_corrupt", {"drop_rate": 0.2,
+                                             "corrupt_rate": 0.05,
+                                             "scale": 3.0}))
+    overhead = dt_rate0 / dt_clean
+    n_cells = 4 * seeds
+    print(f"faultpath ({n_cells} cells x {iters} steps, warm): "
+          f"clean {dt_clean:.2f}s vs rate-0 faults {dt_rate0:.2f}s "
+          f"({overhead:.3f}x) vs injecting {dt_inject:.2f}s",
+          file=sys.stderr)
+    return [
+        f"faultpath_clean_warm,{dt_clean * 1e6:.0f},"
+        f"cells={n_cells};iters={iters}",
+        f"faultpath_rate0_warm,{dt_rate0 * 1e6:.0f},"
+        f"cells={n_cells};iters={iters};faults=drop;rate=0",
+        f"faultpath_inject_warm,{dt_inject * 1e6:.0f},"
+        f"cells={n_cells};iters={iters};faults=drop_corrupt",
+        f"faultpath_overhead,{dt_rate0 * 1e6:.0f},"
+        f"overhead={overhead:.3f};budget=1.05;"
+        f"within_budget={overhead <= 1.05};"
+        f"timing_ref=faultpath_rate0_warm",
+    ]
+
+
 def run(iters: int = 100, seeds: int = 8, n_clients: int = 8) -> list[str]:
     from repro.core import ClientSimulator
     from repro.experiments import (
@@ -447,6 +513,9 @@ def run(iters: int = 100, seeds: int = 8, n_clients: int = 8) -> list[str]:
     rows.extend(_population_scaling_rows(iters=4 * iters, seeds=seeds))
     # Within-cell client sharding at large N (DESIGN.md §8).
     rows.extend(_large_n_rows())
+    # Fault-injection path overhead (DESIGN.md §10) — same 400/160-step
+    # scale as the quadgrid series.
+    rows.extend(_faultpath_overhead_rows(iters=4 * iters, seeds=seeds))
 
     # Paper ordering on the paper's (periodic) arrivals, seed-averaged:
     # the full chain alg1 ≥ benchmark1 ≥ benchmark2 (Fig. 1), each link

@@ -7,7 +7,7 @@
 #
 #   scripts/ci.sh            # all stages
 #   scripts/ci.sh tier1      # just the gate
-#   scripts/ci.sh multidevice ragged clientshard
+#   scripts/ci.sh multidevice ragged clientshard faults
 #   scripts/ci.sh kernels    # Pallas kernel suites + bench smoke
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -25,6 +25,7 @@ run_stage() {
         multidevice) stage multidevice -m multidevice ;;
         ragged)      stage ragged -m ragged ;;
         clientshard) stage clientshard -m clientshard ;;
+        faults)      stage faults -m faults ;;
         kernels)
             # Kernel correctness (interpret-mode vs oracles) plus a bench
             # harness smoke: the micro-bench suite must run end-to-end and
@@ -34,13 +35,13 @@ run_stage() {
             python -m benchmarks.run --only kernels_bench --fast \
                 --json /tmp/bench_kernels_smoke.json >/dev/null
             ;;
-        *) echo "unknown stage: $1 (have tier1 multidevice ragged clientshard kernels)" >&2
+        *) echo "unknown stage: $1 (have tier1 multidevice ragged clientshard faults kernels)" >&2
            exit 2 ;;
     esac
 }
 
 if [ "$#" -eq 0 ]; then
-    set -- tier1 multidevice ragged clientshard kernels
+    set -- tier1 multidevice ragged clientshard faults kernels
 fi
 for s in "$@"; do
     run_stage "$s"

@@ -3,6 +3,8 @@ from repro.checkpoint.checkpoint import (
     latest_step,
     restore_pytree,
     save_pytree,
+    write_json_atomic,
 )
 
-__all__ = ["save_pytree", "restore_pytree", "CheckpointManager", "latest_step"]
+__all__ = ["save_pytree", "restore_pytree", "CheckpointManager",
+           "latest_step", "write_json_atomic"]

@@ -4,20 +4,36 @@ Leaves are flattened with ``jax.tree_util.tree_flatten_with_path`` so the
 npz carries stable, human-readable keys; restore verifies the target
 structure matches and re-dtypes leaves to the template.
 
-``CheckpointManager`` adds step-indexed directories, atomic writes
-(write-to-tmp + rename) and retention.
+``CheckpointManager`` adds step-indexed directories, atomic writes and
+retention. Writes are **crash-consistent** (DESIGN.md §10): the npz is
+written to a same-directory temp file, fsynced, renamed over the target
+with ``os.replace`` (atomic on POSIX), and the directory entry is
+fsynced — so at every instant the target path either holds the complete
+previous checkpoint or the complete new one, never a torn write. A
+checkpoint that *does* end up unreadable (torn by a pre-fix writer,
+bit-rot, truncated copy) fails restore with an error naming the file —
+and, when one npz member is bad, the offending leaf key.
 """
 
 from __future__ import annotations
 
+import json
 import os
 import re
 import shutil
 import tempfile
+import zipfile
+import zlib
 from typing import Any
 
 import jax
 import numpy as np
+
+#: Exceptions that mean "this npz is not a readable checkpoint" —
+#: truncation (BadZipFile/EOFError), torn members (zlib.error), OS-level
+#: read failures, and numpy's own format complaints (ValueError).
+_CORRUPT_ERRORS = (OSError, EOFError, ValueError, zipfile.BadZipFile,
+                   zlib.error)
 
 
 def _key_str(path) -> str:
@@ -34,7 +50,38 @@ def _key_str(path) -> str:
     return "/".join(parts)
 
 
+def _fsync_dir(directory: str) -> None:
+    """fsync a directory entry so a just-renamed file survives power loss."""
+    fd = os.open(directory, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _replace_atomic(tmp: str, path: str, directory: str) -> None:
+    """``os.replace`` + directory fsync, removing ``tmp`` on any failure."""
+    try:
+        os.replace(tmp, path)
+        _fsync_dir(directory)
+    finally:
+        # os.replace consumed tmp on success; on failure (target is a
+        # directory, cross-device link, ...) remove it so an aborted save
+        # leaves no stray temp file next to the intact previous file.
+        try:
+            os.remove(tmp)
+        except FileNotFoundError:
+            pass
+
+
 def save_pytree(path: str, tree: Any) -> None:
+    """Atomically write ``tree`` to ``path`` as a flat npz.
+
+    Durable write protocol: temp file in the destination directory →
+    ``np.savez`` into the open descriptor → ``fsync`` the data →
+    ``os.replace`` over the target → ``fsync`` the directory. A crash at
+    any point leaves the previous ``path`` contents intact.
+    """
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     arrays = {}
     for p, leaf in flat:
@@ -46,32 +93,84 @@ def save_pytree(path: str, tree: Any) -> None:
             # restore re-casts to the template dtype.
             arr = arr.astype(np.float32)
         arrays[_key_str(p)] = arr
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
-                               suffix=".tmp.npz")
-    os.close(fd)
+    directory = os.path.dirname(os.path.abspath(path))
+    os.makedirs(directory, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp.npz")
     try:
-        np.savez(tmp, **arrays)
-        os.replace(tmp, path)
-    finally:
-        if os.path.exists(tmp):
-            os.remove(tmp)
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+    except BaseException:
+        os.remove(tmp)
+        raise
+    _replace_atomic(tmp, path, directory)
+
+
+def write_json_atomic(path: str, obj: Any) -> None:
+    """Atomic, durable JSON write — same protocol as :func:`save_pytree`.
+
+    Backs the resumable-Study manifest (DESIGN.md §10): readers see
+    either the previous manifest or the new one, never a torn file.
+    """
+    directory = os.path.dirname(os.path.abspath(path))
+    os.makedirs(directory, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp.json")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(obj, f, indent=2, sort_keys=True)
+            f.write("\n")
+            f.flush()
+            os.fsync(f.fileno())
+    except BaseException:
+        os.remove(tmp)
+        raise
+    _replace_atomic(tmp, path, directory)
+
+
+def _leaf_spec(leaf) -> tuple[tuple, np.dtype]:
+    """(shape, dtype) of a template leaf — concrete arrays, scalars, and
+    abstract ``jax.ShapeDtypeStruct``-likes all work, so templates can be
+    built with ``jax.eval_shape`` without materializing buffers."""
+    if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+        return tuple(leaf.shape), np.dtype(leaf.dtype)
+    arr = np.asarray(leaf)
+    return tuple(arr.shape), arr.dtype
 
 
 def restore_pytree(path: str, template: Any) -> Any:
-    with np.load(path) as data:
+    """Load ``path`` into the structure (and dtypes) of ``template``.
+
+    Raises ``ValueError`` naming the file when the npz is unreadable
+    (truncated/corrupt), and naming the offending leaf key when one
+    member is torn or its shape disagrees with the template; ``KeyError``
+    when the checkpoint is missing a template leaf.
+    """
+    try:
+        data = np.load(path)
+    except _CORRUPT_ERRORS as e:
+        raise ValueError(
+            f"checkpoint {path} is unreadable (truncated or corrupt "
+            f"npz): {e}") from e
+    with data:
         flat, treedef = jax.tree_util.tree_flatten_with_path(template)
         leaves = []
         for p, leaf in flat:
             key = _key_str(p)
             if key not in data:
                 raise KeyError(f"checkpoint {path} missing leaf {key!r}")
-            arr = data[key]
-            if tuple(arr.shape) != tuple(np.shape(leaf)):
+            try:
+                arr = data[key]
+            except _CORRUPT_ERRORS as e:
                 raise ValueError(
-                    f"shape mismatch for {key!r}: ckpt {arr.shape} vs "
-                    f"template {np.shape(leaf)}")
-            leaves.append(arr.astype(np.asarray(leaf).dtype))
+                    f"checkpoint {path}: leaf {key!r} is corrupt "
+                    f"(truncated member?): {e}") from e
+            shape, dtype = _leaf_spec(leaf)
+            if tuple(arr.shape) != shape:
+                raise ValueError(
+                    f"checkpoint {path}: shape mismatch for {key!r}: "
+                    f"ckpt {tuple(arr.shape)} vs template {shape}")
+            leaves.append(arr.astype(dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 

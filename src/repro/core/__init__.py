@@ -35,9 +35,21 @@ from repro.core.scheduling import (
     register_scheduler,
     scheduler_names,
 )
+from repro.core.faults import (
+    CompositeFault,
+    CorruptGradients,
+    DropUpdates,
+    OfflineWindows,
+    StaleUpdates,
+    fault_family_names,
+    make_fault,
+    pad_faults,
+    register_fault_family,
+)
 from repro.core.aggregation import (
     RavelSpec,
     aggregate_client_grads,
+    compose_masks,
     aggregate_client_grads_flat,
     aggregate_client_grads_kernel,
     aggregate_client_grads_kernel_per_leaf,
@@ -72,7 +84,11 @@ __all__ = [
     "EHAppointmentScheduler", "WaitForAllScheduler", "make_scheduler",
     "mask_arrivals", "pad_scheduler", "register_scheduler",
     "scheduler_names",
+    "CompositeFault", "CorruptGradients", "DropUpdates", "OfflineWindows",
+    "StaleUpdates", "fault_family_names", "make_fault", "pad_faults",
+    "register_fault_family",
     "RavelSpec", "aggregate_client_grads", "aggregate_client_grads_flat",
+    "compose_masks",
     "aggregate_client_grads_kernel", "aggregate_client_grads_kernel_per_leaf",
     "client_weights",
     "per_example_coefficients", "ravel_pytree", "ravel_spec", "ravel_stacked",

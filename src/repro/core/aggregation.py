@@ -97,6 +97,24 @@ def _mask_rows(leaf: jax.Array, mask: jax.Array | None) -> jax.Array:
     return jnp.where(m > 0, leaf, jnp.zeros((), leaf.dtype))
 
 
+def compose_masks(*masks):
+    """Product of (N,) 0/1 row masks, None-transparent.
+
+    ``None`` means "no constraint" and drops out; all-None composes to
+    None (the unmasked fast path). With 0/1 operands the product is
+    exact — a row survives iff every mask keeps it — so composing the
+    ragged ``active_mask`` with a fault-delivery ``keep`` mask preserves
+    the DESIGN.md §7 guarantee: a row dropped by *either* contributes an
+    exact zero through :func:`_mask_rows` / the masked Pallas kernels.
+    """
+    out = None
+    for m in masks:
+        if m is None:
+            continue
+        out = m if out is None else out * m
+    return out
+
+
 # --------------------------------------------------------------- raveler
 
 class RavelSpec(NamedTuple):

@@ -1,0 +1,360 @@
+"""Client fault injection (delivery faults), as registered JAX pytrees.
+
+The paper's premise is clients that are *intermittently unable to
+participate*. The energy process models the benign case — a client with
+no energy simply does not compute. This module models the hostile
+remainder of the distributed-systems reality: a client that *did*
+compute an update which is then lost, delayed, or corrupted on its way
+to the server (cf. over-the-air aggregation with channel corruption,
+arXiv 2205.12869, and EH devices with unreliable links).
+
+Every fault family is a ``jax.tree_util.register_dataclass`` pytree,
+mirroring the arrival-family pattern (:mod:`repro.core.energy`): rates
+and window tables are leaves, so a family of faulted scenarios stacks
+leaf-wise and executes under one compiled grid computation, and a fault
+component rides through ``jit``/``vmap``/``lax.scan`` as an ordinary
+traced argument.
+
+Protocol (structural; all methods pure):
+
+    init(key, n_clients, n_params) -> state          (pytree; () if stateless)
+    apply(state, t, key, g) -> (state, g, keep)
+    pad_clients(n_total)    -> same family, per-client leaves padded
+
+``apply`` sees the flat per-client gradient buffer ``g`` of shape
+``(N, P)`` (fault injection requires flat-carry execution, DESIGN.md
+§5) and returns the possibly-transformed buffer plus ``keep`` — an
+``(N,)`` float32 0/1 *delivery* mask (1 = the update reached the
+server) or None when the family never drops. The simulator composes
+``keep`` into the existing ``active_mask`` row-select machinery
+(:func:`repro.core.aggregation.compose_masks`), so a dropped row
+contributes an *exact zero* through the masked Pallas kernels even when
+its gradient payload is NaN/inf — the DESIGN.md §7 poison-row guarantee
+is the fault-injection substrate. Zero-weighting (``weights * keep``)
+keeps ``weight_sum`` an honest record of delivered mass.
+
+Randomness is drawn with the shape-independent per-client helpers
+(:func:`repro.core.energy.client_uniform`), so a padded (ragged) run
+faults exactly the same rows as the natural-N run, and a fault family
+at rate 0 is the bitwise identity on the no-fault trajectory.
+
+Four concrete families + a combinator:
+
+* ``DropUpdates``     — Bernoulli(rate) update loss per client per round.
+* ``CorruptGradients``— Bernoulli(rate) row corruption: ``g_i <- g_i *
+                        scale`` (scale may be NaN/inf to model poison).
+* ``StaleUpdates``    — Bernoulli(rate) delay-``k`` replay: the server
+                        receives the update the client sent ``k`` rounds
+                        ago (dropped while no history exists, t < k).
+* ``OfflineWindows``  — deterministic forced-outage intervals
+                        (start/length, optionally repeating).
+* ``CompositeFault``  — apply several families in sequence, delivery
+                        masks composed multiplicatively.
+
+The module also owns the **fault-family registry**
+(:func:`register_fault_family` / :func:`make_fault`), from which the
+experiment layer builds its ``faults`` sweep axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.energy import (_check_pad, _concrete, _pad_leaf,
+                               client_uniform)
+
+#: Domain-separation constant for the per-step fault key: the simulator
+#: derives ``k_fault = fold_in(k_grad, FAULT_SALT)`` instead of widening
+#: the step's ``random.split`` arity, so every pre-existing RNG stream
+#: (scheduler, energy, gradients) is bitwise unchanged whether or not a
+#: fault component is present. The value ("FAUL") is far above any
+#: client index or counter the gradient path folds in.
+FAULT_SALT = 0x4641554C
+
+
+def _as_rate(rate, name: str = "rate"):
+    """Validate a Bernoulli rate leaf (scalar or (N,)) when concrete.
+
+    Tracers and opaque pytree-unflatten placeholders pass through
+    untouched (DESIGN.md §3) — validation/conversion fires only on
+    concrete values.
+    """
+    conc = _concrete(rate)
+    if conc is None:
+        return rate
+    if ((conc < 0) | (conc > 1)).any():
+        raise ValueError(f"{name} must lie in [0, 1], got {conc}")
+    return jnp.asarray(rate, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class DropUpdates:
+    """Bernoulli update loss: each round, client ``i``'s update is lost
+    with probability ``rate_i`` (scalar or per-client leaf)."""
+
+    rate: jax.Array
+
+    def __post_init__(self):
+        object.__setattr__(self, "rate", _as_rate(self.rate))
+
+    def init(self, key, n_clients: int, n_params: int):
+        return ()
+
+    def apply(self, state, t, key, g):
+        u = client_uniform(key, g.shape[0])
+        keep = (u >= self.rate).astype(jnp.float32)
+        return state, g, keep
+
+    def pad_clients(self, n_total: int):
+        if jnp.ndim(self.rate) == 0:
+            return self
+        pad = _check_pad(self.rate.shape[0], n_total)
+        # Padded rows never drop (rate 0) — they are masked out of the
+        # aggregation anyway; a valid rate keeps the draw finite.
+        return DropUpdates(_pad_leaf(self.rate, pad, 0.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class CorruptGradients:
+    """Bernoulli row corruption: with probability ``rate_i`` the row is
+    scaled by ``scale`` before aggregation. ``scale`` may be any float —
+    large (scaled attack), NaN/inf (poison), 0 (silent zeroing). The
+    update is still *delivered* (keep is None); pair with
+    :class:`DropUpdates` via :class:`CompositeFault` to model detected
+    corruption."""
+
+    rate: jax.Array
+    scale: jax.Array
+
+    def __post_init__(self):
+        object.__setattr__(self, "rate", _as_rate(self.rate))
+        if _concrete(self.scale) is not None or isinstance(
+                self.scale, (int, float)):
+            object.__setattr__(self, "scale",
+                               jnp.asarray(self.scale, jnp.float32))
+
+    def init(self, key, n_clients: int, n_params: int):
+        return ()
+
+    def apply(self, state, t, key, g):
+        u = client_uniform(key, g.shape[0])
+        hit = u < self.rate
+        g = jnp.where(hit[:, None], g * self.scale.astype(g.dtype), g)
+        return state, g, None
+
+    def pad_clients(self, n_total: int):
+        if jnp.ndim(self.rate) == 0:
+            return self
+        pad = _check_pad(self.rate.shape[0], n_total)
+        return CorruptGradients(_pad_leaf(self.rate, pad, 0.0), self.scale)
+
+
+@dataclasses.dataclass(frozen=True)
+class StaleUpdates:
+    """Delay-``k`` replay: with probability ``rate_i`` the server receives
+    the update client ``i`` computed ``delay`` rounds ago instead of the
+    fresh one. While no history exists (t < delay) a stale-hit row is
+    *dropped* (keep 0) rather than replayed as zero. State is a
+    ``(delay, N, P)`` float32 ring buffer of past gradient rows, indexed
+    by ``t mod delay``."""
+
+    rate: jax.Array
+    delay: int = 1
+
+    def __post_init__(self):
+        object.__setattr__(self, "rate", _as_rate(self.rate))
+        if int(self.delay) < 1:
+            raise ValueError(f"delay must be >= 1, got {self.delay}")
+        object.__setattr__(self, "delay", int(self.delay))
+
+    def init(self, key, n_clients: int, n_params: int):
+        return jnp.zeros((self.delay, n_clients, n_params), jnp.float32)
+
+    def apply(self, state, t, key, g):
+        slot = t % self.delay
+        old = state[slot]
+        u = client_uniform(key, g.shape[0])
+        hit = u < self.rate
+        replay = hit & (t >= self.delay)
+        dropped = hit & (t < self.delay)
+        g_out = jnp.where(replay[:, None], old.astype(g.dtype), g)
+        keep = 1.0 - dropped.astype(jnp.float32)
+        # Record what the client *sent* this round (the fresh gradient),
+        # after reading the slot it overwrites (the t - delay entry).
+        state = state.at[slot].set(g.astype(jnp.float32))
+        return state, g_out, keep
+
+    def pad_clients(self, n_total: int):
+        rate = self.rate
+        if jnp.ndim(rate) != 0:
+            rate = _pad_leaf(rate, _check_pad(rate.shape[0], n_total), 0.0)
+        return StaleUpdates(rate, delay=self.delay)
+
+
+@dataclasses.dataclass(frozen=True)
+class OfflineWindows:
+    """Deterministic forced-outage intervals: client ``i`` is offline
+    (update dropped) on steps ``t`` with ``0 <= (t - start_i) < length_i``,
+    repeating every ``period_i`` steps when ``period_i > 0``. All three
+    are leaves — scalar (one window profile for everyone) or (N,)."""
+
+    start: jax.Array
+    length: jax.Array
+    period: jax.Array = 0
+
+    def __post_init__(self):
+        for f in ("start", "length", "period"):
+            v = _concrete(getattr(self, f))
+            if v is None:
+                continue
+            if (v < 0).any():
+                raise ValueError(f"{f} must be >= 0, got {v}")
+            object.__setattr__(self, f,
+                               jnp.asarray(getattr(self, f), jnp.int32))
+
+    def init(self, key, n_clients: int, n_params: int):
+        return ()
+
+    def apply(self, state, t, key, g):
+        rel = t - self.start
+        pos = jnp.where(self.period > 0,
+                        rel % jnp.maximum(self.period, 1), rel)
+        off = (rel >= 0) & (pos < self.length)
+        keep = jnp.broadcast_to(1.0 - off.astype(jnp.float32),
+                                (g.shape[0],))
+        return state, g, keep
+
+    def pad_clients(self, n_total: int):
+        vals = {}
+        for f in ("start", "length", "period"):
+            v = getattr(self, f)
+            if jnp.ndim(v) != 0:
+                v = _pad_leaf(v, _check_pad(v.shape[0], n_total), 0)
+            vals[f] = v
+        # length 0 on padded rows -> never offline (and masked anyway).
+        return OfflineWindows(**vals)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompositeFault:
+    """Apply several fault families in sequence (gradient transforms
+    chain, delivery masks compose multiplicatively). Each part draws
+    from an independently folded subkey, so a composite containing two
+    Bernoulli families does not correlate their coin flips."""
+
+    parts: tuple
+
+    def __post_init__(self):
+        object.__setattr__(self, "parts", tuple(self.parts))
+        if not self.parts:
+            raise ValueError("CompositeFault needs at least one part")
+
+    def init(self, key, n_clients: int, n_params: int):
+        return tuple(p.init(jax.random.fold_in(key, i), n_clients, n_params)
+                     for i, p in enumerate(self.parts))
+
+    def apply(self, state, t, key, g):
+        from repro.core.aggregation import compose_masks
+
+        new_state, keep = [], None
+        for i, (p, s) in enumerate(zip(self.parts, state)):
+            s, g, k = p.apply(s, t, jax.random.fold_in(key, i), g)
+            new_state.append(s)
+            keep = compose_masks(keep, k)
+        return tuple(new_state), g, keep
+
+    def pad_clients(self, n_total: int):
+        return CompositeFault(tuple(p.pad_clients(n_total)
+                                    for p in self.parts))
+
+
+for _cls, _fields in ((DropUpdates, ["rate"]),
+                      (CorruptGradients, ["rate", "scale"]),
+                      (OfflineWindows, ["start", "length", "period"]),
+                      (CompositeFault, ["parts"])):
+    jax.tree_util.register_dataclass(_cls, data_fields=_fields,
+                                     meta_fields=[])
+jax.tree_util.register_dataclass(StaleUpdates, data_fields=["rate"],
+                                 meta_fields=["delay"])
+
+
+# ------------------------------------------------ fault-family registry
+
+_FAULT_FAMILIES: dict = {}
+
+
+def register_fault_family(name: str):
+    """Decorator: register a named fault-family factory with signature
+    ``(n_clients, **kw) -> fault``. :func:`make_fault` dispatches by
+    name; the experiment layer's ``faults`` sweep axis is built from
+    this registry (mirroring :func:`repro.core.energy.
+    register_arrival_family`)."""
+
+    def deco(fn):
+        _FAULT_FAMILIES[name] = fn
+        return fn
+
+    return deco
+
+
+def fault_family_names() -> list[str]:
+    return sorted(_FAULT_FAMILIES)
+
+
+def make_fault(kind: str, n_clients: int, **kw):
+    """Fault-component factory by registered family name."""
+    try:
+        factory = _FAULT_FAMILIES[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown fault kind {kind!r}; have {fault_family_names()}"
+        ) from None
+    return factory(n_clients, **kw)
+
+
+@register_fault_family("drop")
+def _drop(n_clients, *, rate=0.0):
+    return DropUpdates(rate)
+
+
+@register_fault_family("corrupt")
+def _corrupt(n_clients, *, rate=0.0, scale=0.0):
+    return CorruptGradients(rate, scale)
+
+
+@register_fault_family("stale")
+def _stale(n_clients, *, rate=0.0, delay=1):
+    return StaleUpdates(rate, delay=delay)
+
+
+@register_fault_family("offline")
+def _offline(n_clients, *, start=0, length=0, period=0):
+    return OfflineWindows(start, length, period)
+
+
+@register_fault_family("drop_corrupt")
+def _drop_corrupt(n_clients, *, drop_rate=0.0, corrupt_rate=0.0, scale=0.0):
+    """Composite convenience family: independent Bernoulli drop + row
+    corruption — the channel model of over-the-air aggregation."""
+    return CompositeFault((DropUpdates(drop_rate),
+                           CorruptGradients(corrupt_rate, scale)))
+
+
+def pad_faults(fault, n_total: int):
+    """Pad a fault component's per-client leaves to ``n_total`` rows
+    (protocol dispatch to ``pad_clients``; identity at capacity and for
+    scalar-leaf families). Padded rows are neutral — they never fault —
+    and are masked out of aggregation regardless (DESIGN.md §7)."""
+    if fault is None:
+        return None
+    try:
+        method = fault.pad_clients
+    except AttributeError:
+        raise TypeError(
+            f"{type(fault)!r} does not implement pad_clients(); ragged "
+            "client populations need every fault family to define its "
+            "padding rule") from None
+    return method(n_total)

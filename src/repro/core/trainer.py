@@ -36,12 +36,16 @@ class SimCarry(NamedTuple):
     energy_state: Any
     key: jax.Array
     t: jax.Array
+    fault_state: Any = ()     # fault-component state ((): no/stateless faults)
 
 
 class SimHistory(NamedTuple):
     loss: jax.Array           # (T,) global loss (if loss_fn given, else 0)
     participation: jax.Array  # (T, N) masks
     weight_sum: jax.Array     # (T,) Σ_i ω_i (≈1 in expectation for unbiased)
+    finite: jax.Array = None  # (T,) bool — params finite after the step
+    #                           (the per-step isfinite reduction behind
+    #                           non-finite quarantine, DESIGN.md §10)
 
 
 class ClientSimulator:
@@ -85,12 +89,13 @@ class ClientSimulator:
     """
 
     def __init__(self, *, grads_fn, p, optimizer: Optimizer,
-                 scheduler=None, energy=None,
+                 scheduler=None, energy=None, faults=None,
                  loss_fn=None, use_kernel: bool = False,
                  flat: bool | None = None):
         self.grads_fn = grads_fn
         self.scheduler = scheduler
         self.energy = energy
+        self.faults = faults
         self.p = jnp.asarray(p, jnp.float32)
         self.optimizer = optimizer
         self.loss_fn = loss_fn
@@ -106,6 +111,10 @@ class ClientSimulator:
                 "scheduler/energy must be given either at construction or "
                 "as arguments to init/step/run")
         return scheduler, energy
+
+    def _fault(self, faults):
+        """Constructor fault component unless overridden (None: no faults)."""
+        return self.faults if faults is None else faults
 
     def _flat_spec(self, params):
         """RavelSpec for flat-carry execution, or None for the legacy path."""
@@ -137,9 +146,15 @@ class ClientSimulator:
         return fn
 
     def init(self, key, params, *, scheduler=None, energy=None,
-             spec=None) -> SimCarry:
+             faults=None, spec=None) -> SimCarry:
         """Build the scan carry; with ``spec`` params/opt_state are flat."""
         scheduler, energy = self._components(scheduler, energy)
+        faults = self._fault(faults)
+        if faults is not None and spec is None:
+            raise ValueError(
+                "fault injection (repro.core.faults) requires flat-carry "
+                "execution: uniform-dtype params and flat != False "
+                "(DESIGN.md §10)")
         if spec is not None:
             leaves = jax.tree_util.tree_leaves(params)
             params = aggregation.ravel_pytree(params, spec)
@@ -149,6 +164,16 @@ class ClientSimulator:
                 # because run_carry donates it (DESIGN.md §9).
                 params = jnp.array(params, copy=True)
         k_sched, k_energy, k_run = jax.random.split(key, 3)
+        fault_state = ()
+        if faults is not None:
+            # Derived from k_run by domain-separated fold_in — never by
+            # widening the split arity — so every fault-free RNG stream
+            # is bitwise unchanged by the presence of a fault component.
+            from repro.core.faults import FAULT_SALT
+
+            fault_state = faults.init(
+                jax.random.fold_in(k_run, FAULT_SALT),
+                int(self.p.shape[0]), int(spec.total))
         return SimCarry(
             params=params,
             opt_state=self.optimizer.init(params),
@@ -156,26 +181,43 @@ class ClientSimulator:
             energy_state=energy.init(k_energy),
             key=k_run,
             t=jnp.zeros((), jnp.int32),
+            fault_state=fault_state,
         )
 
     def step(self, carry: SimCarry, scheduler=None, energy=None, *,
-             p=None, active_mask=None) -> tuple[SimCarry, dict]:
+             p=None, active_mask=None, faults=None) -> tuple[SimCarry, dict]:
         """One server round on a pytree carry (public single-step API)."""
-        return self._step(carry, scheduler, energy, None, p, active_mask)
+        return self._step(carry, scheduler, energy, None, p, active_mask,
+                          faults)
 
     def _step(self, carry: SimCarry, scheduler, energy, spec,
-              p=None, active_mask=None) -> tuple[SimCarry, dict]:
+              p=None, active_mask=None, faults=None) -> tuple[SimCarry, dict]:
         """Shared step body; ``spec`` non-None means carry.params is the
         raveled ``(P,)`` vector and aggregation stays in flat space.
         ``p`` overrides the constructor weights (ragged cells carry
         their own zero-padded, active-renormalized p); ``active_mask``
-        is the (N,) 0/1 existing-client mask."""
+        is the (N,) 0/1 existing-client mask; ``faults`` an optional
+        fault-injection component (:mod:`repro.core.faults`) applied to
+        the flat gradient buffer before aggregation."""
         scheduler, energy = self._components(scheduler, energy)
+        faults = self._fault(faults)
         shard = client_shard()
         if shard is not None and spec is None:
             raise ValueError(
                 "client-axis sharding (DESIGN.md §8) requires flat-carry "
                 "execution: uniform-dtype params and flat != False")
+        if faults is not None:
+            if spec is None:
+                raise ValueError(
+                    "fault injection (repro.core.faults) requires "
+                    "flat-carry execution: uniform-dtype params and "
+                    "flat != False (DESIGN.md §10)")
+            if shard is not None:
+                raise ValueError(
+                    "fault injection is not supported under a clients "
+                    "mesh axis (client-sharded fault state is future "
+                    "work; DESIGN.md §10) — drop the clients axis or "
+                    "the fault component")
         p = self.p if p is None else p
         key, k_arr, k_sched, k_grad = jax.random.split(carry.key, 4)
         energy_state, arr = energy.arrivals(carry.energy_state, carry.t, k_arr)
@@ -189,6 +231,8 @@ class ClientSimulator:
             weights = weights * active_mask
         wsum = None
         agg = params = opt_state = None
+        fault_state = carry.fault_state
+        row_mask = active_mask
         fusable = getattr(self.optimizer, "kind", "") == "sgd"
         if spec is not None:
             params_tree = aggregation.unravel_pytree(carry.params, spec)
@@ -196,6 +240,20 @@ class ClientSimulator:
             # sees one flat (N, P) — or, sharded, (n_local, P) — buffer
             # and carries no per-leaf concat.
             g = self._flat_grads(spec)(params_tree, k_grad, carry.t)
+            if faults is not None:
+                # Delivery faults transform the flat rows and/or return a
+                # keep mask; keep composes into the active-row select so
+                # a dropped row is an exact zero through the masked
+                # kernels even when its payload is non-finite, and
+                # zero-weighting keeps weight_sum the delivered mass.
+                from repro.core.faults import FAULT_SALT
+
+                k_fault = jax.random.fold_in(k_grad, FAULT_SALT)
+                fault_state, g, keep = faults.apply(
+                    carry.fault_state, carry.t, k_fault, g)
+                if keep is not None:
+                    weights = weights * keep
+                    row_mask = aggregation.compose_masks(active_mask, keep)
             if shard is not None:
                 mode, wire = aggregation.parse_reduction(shard.reduction)
                 if mode == "fused":
@@ -207,24 +265,24 @@ class ClientSimulator:
                             "'psum' for stateful/clipped optimizers")
                     params, opt_state, wsum = aggregation.fused_flat_sgd_update(
                         g, weights, carry.params, carry.opt_state,
-                        self.optimizer, mask=active_mask,
+                        self.optimizer, mask=row_mask,
                         use_kernel=self.use_kernel, shard=shard,
                         wire_dtype=wire)
                 else:
                     agg, wsum = aggregation.reduce_flat_client_sharded(
                         g, weights, axis_name=shard.axis_name,
                         reduction=shard.reduction,
-                        use_kernel=self.use_kernel, mask=active_mask)
+                        use_kernel=self.use_kernel, mask=row_mask)
             elif self.use_kernel and fusable:
                 # Unsharded fused fast path: identical f32 op sequence to
                 # reduce → −η·agg → add, collapsed into one Pallas launch.
                 params, opt_state, _ = aggregation.fused_flat_sgd_update(
                     g, weights, carry.params, carry.opt_state,
-                    self.optimizer, mask=active_mask, use_kernel=True)
+                    self.optimizer, mask=row_mask, use_kernel=True)
             else:
                 agg = aggregation.reduce_flat(g, weights,
                                               use_kernel=self.use_kernel,
-                                              mask=active_mask)
+                                              mask=row_mask)
         elif self.flat is False:
             # Full legacy semantics: per-leaf reductions (and per-leaf
             # kernel launches), leaf dtypes untouched — the escape hatch
@@ -247,18 +305,27 @@ class ClientSimulator:
                        if spec is not None else params)
         loss = (self.loss_fn(loss_params) if self.loss_fn is not None
                 else jnp.zeros((), jnp.float32))
+        if spec is not None:
+            finite = jnp.all(jnp.isfinite(params))
+        else:
+            finite = jnp.array(True)
+            for leaf in jax.tree_util.tree_leaves(params):
+                finite = jnp.logical_and(finite, jnp.all(jnp.isfinite(leaf)))
         out = {
             "loss": loss,
             "participation": dec.mask,
             "weight_sum": jnp.sum(weights) if wsum is None else wsum,
+            "finite": finite,
         }
         new_carry = SimCarry(params=params, opt_state=opt_state,
                              sched_state=sched_state, energy_state=energy_state,
-                             key=key, t=carry.t + 1)
+                             key=key, t=carry.t + 1,
+                             fault_state=fault_state)
         return new_carry, out
 
     def run(self, key, params, num_steps: int, *, scheduler=None, energy=None,
-            p=None, active_mask=None, eval_fn=None, eval_every: int = 0):
+            faults=None, p=None, active_mask=None, eval_fn=None,
+            eval_every: int = 0):
         """Run the whole loop as one (or a few) ``lax.scan`` computations.
 
         ``p`` / ``active_mask`` override the constructor weights and mark
@@ -284,9 +351,10 @@ class ClientSimulator:
         ``final_params`` is always the original pytree structure.
         """
         scheduler, energy = self._components(scheduler, energy)
+        faults = self._fault(faults)
         spec = self._flat_spec(params)
         carry = self.init(key, params, scheduler=scheduler, energy=energy,
-                          spec=spec)
+                          faults=faults, spec=spec)
 
         def unflatten(p):
             return aggregation.unravel_pytree(p, spec) if spec is not None else p
@@ -294,7 +362,7 @@ class ClientSimulator:
         if eval_fn is None:
             carry, history = self.run_carry(
                 carry, num_steps, scheduler=scheduler, energy=energy,
-                p=p, active_mask=active_mask, spec=spec)
+                faults=faults, p=p, active_mask=active_mask, spec=spec)
             return unflatten(carry.params), history
 
         if eval_every <= 0:
@@ -304,7 +372,8 @@ class ClientSimulator:
                 f"num_steps={num_steps} must divide by eval_every={eval_every}")
 
         def body(c, _):
-            return self._step(c, scheduler, energy, spec, p, active_mask)
+            return self._step(c, scheduler, energy, spec, p, active_mask,
+                              faults)
 
         def chunk(c, _):
             c, outs = jax.lax.scan(body, c, None, length=eval_every)
@@ -317,15 +386,17 @@ class ClientSimulator:
         return unflatten(carry.params), self._history(outs), evals
 
     def _scan_steps(self, carry: SimCarry, num_steps: int, scheduler, energy,
-                    p, active_mask, spec):
+                    p, active_mask, spec, faults=None):
         def body(c, _):
-            return self._step(c, scheduler, energy, spec, p, active_mask)
+            return self._step(c, scheduler, energy, spec, p, active_mask,
+                              faults)
 
         return jax.lax.scan(body, carry, None, length=num_steps)
 
     def run_carry(self, carry: SimCarry, num_steps: int, *, scheduler=None,
-                  energy=None, p=None, active_mask=None, spec=None,
-                  donate: bool = True) -> tuple[SimCarry, SimHistory]:
+                  energy=None, faults=None, p=None, active_mask=None,
+                  spec=None, donate: bool = True
+                  ) -> tuple[SimCarry, SimHistory]:
         """Advance an existing carry ``num_steps`` rounds as one scan.
 
         The checkpoint/resume entry point: a :class:`SimCarry` from
@@ -353,31 +424,34 @@ class ClientSimulator:
         is the caller's concern.
         """
         scheduler, energy = self._components(scheduler, energy)
+        faults = self._fault(faults)
         if donate and spec is not None and jax.core.trace_state_clean():
             carry, outs = _run_carry_donated(
-                carry, scheduler, energy, p, active_mask,
+                carry, scheduler, energy, faults, p, active_mask,
                 sim=self, num_steps=int(num_steps), spec=spec)
         else:
             carry, outs = self._scan_steps(carry, num_steps, scheduler,
-                                           energy, p, active_mask, spec)
+                                           energy, p, active_mask, spec,
+                                           faults)
         return carry, self._history(outs)
 
     @staticmethod
     def _history(outs) -> SimHistory:
         return SimHistory(loss=outs["loss"], participation=outs["participation"],
-                          weight_sum=outs["weight_sum"])
+                          weight_sum=outs["weight_sum"],
+                          finite=outs["finite"])
 
 
 @functools.partial(jax.jit, static_argnames=("sim", "num_steps", "spec"),
                    donate_argnums=(0,))
-def _run_carry_donated(carry, scheduler, energy, p, active_mask, *,
+def _run_carry_donated(carry, scheduler, energy, faults, p, active_mask, *,
                        sim: ClientSimulator, num_steps: int, spec):
     """Top-level jit of the :meth:`ClientSimulator.run_carry` scan with
     the carry donated — input params/opt-state buffers alias the outputs.
     ``sim`` is static (hashed by identity; its fields select the trace),
     so each simulator instance owns its compiled executable."""
     return sim._scan_steps(carry, num_steps, scheduler, energy, p,
-                           active_mask, spec)
+                           active_mask, spec, faults)
 
 
 class TrainState(NamedTuple):

@@ -33,10 +33,14 @@ from repro.experiments.axes import (
 )
 from repro.experiments.engine import (
     CellResult,
+    DowngradeRecord,
     check_unique_names,
     clear_cache,
+    divergence_summary,
     execute_cells,
+    execute_cells_resumable,
     grid_summary,
+    last_downgrades,
     population_mask,
     run_grid,
     run_grid_sequential,
@@ -72,11 +76,13 @@ from repro.experiments.study import (
 
 __all__ = [
     "ARRIVAL_KINDS", "FIG1_SCHEDULERS", "PAPER_TAUS",
-    "AxisSpec", "CellResult", "ExecutionConfig", "GridResult", "Scenario",
-    "Study",
+    "AxisSpec", "CellResult", "DowngradeRecord", "ExecutionConfig",
+    "GridResult", "Scenario", "Study",
     "axis_names", "build_components", "check_unique_names", "clear_cache",
-    "default_metric", "default_taus", "execute_cells", "get_axis", "get_grid",
-    "get_study", "grid_names", "grid_summary", "make_cell_mesh",
+    "default_metric", "default_taus", "divergence_summary", "execute_cells",
+    "execute_cells_resumable", "get_axis", "get_grid",
+    "get_study", "grid_names", "grid_summary", "last_downgrades",
+    "make_cell_mesh",
     "make_client_mesh", "make_energy_process", "make_grid_mesh",
     "population_mask", "register_axis",
     "register_grid", "register_study", "register_taus_profile",

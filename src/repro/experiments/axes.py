@@ -39,7 +39,7 @@ from repro.core.energy import default_taus
 
 #: Canonical order in which axes cross-multiply and appear in cell names.
 AXIS_ORDER = ("scheduler", "arrivals", "capacity", "n_clients",
-              "taus_profile", "seeds")
+              "taus_profile", "faults", "seeds")
 
 
 def _default_is_value(v) -> bool:
@@ -211,6 +211,35 @@ register_axis(
     is_value=_taus_is_value,
     doc="per-client energy-period profile: registered name, sequence, "
         "or callable(n)")
+
+
+def _apply_faults(draft: dict, value) -> None:
+    if value is None:
+        draft["faults"] = None
+    elif isinstance(value, tuple):
+        kind, kw = value
+        draft["faults"] = str(kind)
+        draft["fault_kwargs"] = dict(kw)
+    else:
+        draft["faults"] = str(value)
+
+
+def _fmt_faults(value, fixed: bool) -> str | None:
+    if value is None:
+        return None if fixed else "nofault"
+    return _fmt_arrivals(value, fixed)
+
+
+def _faults_is_value(v) -> bool:
+    return v is None or _arrivals_is_value(v)
+
+
+register_axis(
+    "faults", apply=_apply_faults, fmt=_fmt_faults,
+    is_value=_faults_is_value,
+    doc="fault-family name (repro.core.faults), (kind, kwargs), or None "
+        "for the fault-free program; faulted and fault-free cells group "
+        "into separate compiled structures")
 register_axis(
     "seeds", apply=lambda draft, value: None,
     doc="seed count or explicit list; vmapped by the engine")

@@ -34,32 +34,45 @@ both).
 
 from __future__ import annotations
 
+import dataclasses
+import hashlib
+import json
+import logging
+import os
 from functools import partial
 from typing import Any, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.trainer import ClientSimulator, SimHistory
 from repro.experiments.scenario import Scenario
+
+_LOG = logging.getLogger("repro.experiments.engine")
 
 
 class CellResult(NamedTuple):
     """Per-scenario result; every leaf carries a leading seed axis R.
 
-    params  : final model parameters, leaves (R, ...)
-    history : SimHistory with leaves (R, T, ...)
-    evals   : eval_fn outputs with leaves (R, num_evals, ...), or None
+    params   : final model parameters, leaves (R, ...)
+    history  : SimHistory with leaves (R, T, ...)
+    evals    : eval_fn outputs with leaves (R, num_evals, ...), or None
+    diverged : (R,) int32 — first step index at which the seed's params
+               went non-finite (−1: the run stayed finite throughout).
+               The per-cell quarantine record (DESIGN.md §10), computed
+               from the ``history.finite`` per-step isfinite flags.
     """
 
     params: Any
     history: SimHistory
     evals: Any = None
+    diverged: Any = None
 
 
-def _group_key(scheduler, energy):
+def _group_key(scheduler, energy, faults=None):
     """Hashable trace signature: pytree structure + leaf shapes/dtypes."""
-    leaves, treedef = jax.tree_util.tree_flatten((scheduler, energy))
+    leaves, treedef = jax.tree_util.tree_flatten((scheduler, energy, faults))
     return treedef, tuple((l.shape, str(l.dtype)) for l in leaves)
 
 
@@ -97,12 +110,15 @@ def subpopulation_p(p, n_clients: int, n_total: int | None = None) -> jax.Array:
 
 
 def _pad_built(built, n_cap: int):
-    """(scheduler, energy) built at natural n → padded to n_cap rows."""
+    """(scheduler, energy, faults) built at natural n → padded to n_cap
+    rows (``faults`` may be None)."""
     from repro.core.energy import pad_arrivals
+    from repro.core.faults import pad_faults
     from repro.core.scheduling import pad_scheduler
 
-    scheduler, energy = built
-    return (pad_scheduler(scheduler, n_cap), pad_arrivals(energy, n_cap))
+    scheduler, energy, faults = built
+    return (pad_scheduler(scheduler, n_cap), pad_arrivals(energy, n_cap),
+            pad_faults(faults, n_cap))
 
 
 def _crop_cell(cell: "CellResult", n: int, n_cap: int) -> "CellResult":
@@ -114,13 +130,49 @@ def _crop_cell(cell: "CellResult", n: int, n_cap: int) -> "CellResult":
     return cell._replace(history=hist)
 
 
+def _attach_divergence(cell: "CellResult") -> "CellResult":
+    """Fill ``CellResult.diverged`` from the per-step isfinite flags.
+
+    Host-side post-processing (the flags were the cheap in-scan
+    reduction); ``diverged[r]`` is the first step index whose post-step
+    params were non-finite for seed r, or −1 when the whole run stayed
+    finite. Divergence is absorbing under every built-in optimizer
+    (NaN params → NaN grads → NaN params), so first-bad-step plus the
+    flag tail fully characterize the quarantined trajectory.
+    """
+    fin = cell.history.finite
+    if fin is None:  # hand-built history without flags — nothing to report
+        return cell
+    bad = ~np.asarray(fin)
+    first = np.where(bad.any(axis=-1), bad.argmax(axis=-1), -1)
+    return cell._replace(diverged=jnp.asarray(first, jnp.int32))
+
+
+def divergence_summary(results: dict[str, "CellResult"]) -> dict[str, dict]:
+    """Per-cell quarantine stats: ``{name: {n_diverged, first_bad_step}}``.
+
+    ``first_bad_step`` is the earliest diverged seed's first non-finite
+    step (−1 when every seed stayed finite). The same numbers surface
+    per-study through :meth:`repro.experiments.GridResult.divergence`.
+    """
+    out = {}
+    for name, cell in results.items():
+        d = np.asarray(cell.diverged) if cell.diverged is not None \
+            else np.array([-1])
+        bad = d[d >= 0]
+        out[name] = {"n_diverged": int(bad.size),
+                     "first_bad_step": int(bad.min()) if bad.size else -1}
+    return out
+
+
 @partial(jax.jit, static_argnames=("sim", "num_steps", "eval_fn", "eval_every"))
-def _run_group(scheduler, energy, active, p, params0, keys, *,
+def _run_group(scheduler, energy, faults, active, p, params0, keys, *,
                sim: ClientSimulator, num_steps: int, eval_fn=None,
                eval_every: int = 0):
     """vmap(scenario axis) ∘ vmap(seed axis) over one simulator scan.
 
-    ``scheduler`` / ``energy`` leaves carry a leading scenario axis S;
+    ``scheduler`` / ``energy`` / ``faults`` leaves carry a leading
+    scenario axis S (``faults`` is None for fault-free groups);
     ``active`` / ``p`` are (S, N_cap) ragged-population operands (both
     None for uniform grids); ``keys`` is (R, 2). Compiled once per
     (sim, group structure) — probe ``_run_group._cache_size()`` to
@@ -133,15 +185,15 @@ def _run_group(scheduler, energy, active, p, params0, keys, *,
     call :func:`clear_cache` between sweeps.
     """
 
-    def one(sch, en, act, pw, key):
+    def one(sch, en, flt, act, pw, key):
         out = sim.run(key, params0, num_steps, scheduler=sch, energy=en,
-                      p=pw, active_mask=act,
+                      faults=flt, p=pw, active_mask=act,
                       eval_fn=eval_fn, eval_every=eval_every)
         return CellResult(*out) if eval_fn is not None else CellResult(*out, None)
 
-    over_seeds = jax.vmap(one, in_axes=(None, None, None, None, 0))
-    over_scenarios = jax.vmap(over_seeds, in_axes=(0, 0, 0, 0, None))
-    return over_scenarios(scheduler, energy, active, p, keys)
+    over_seeds = jax.vmap(one, in_axes=(None, None, None, None, None, 0))
+    over_scenarios = jax.vmap(over_seeds, in_axes=(0, 0, 0, 0, 0, None))
+    return over_scenarios(scheduler, energy, faults, active, p, keys)
 
 
 def clear_cache() -> None:
@@ -185,6 +237,63 @@ def _resolve_sim(sim, grads_fn, p, optimizer, loss_fn, use_kernel):
                            loss_fn=loss_fn, use_kernel=use_kernel)
 
 
+# ------------------------------------------------- graceful degradation
+
+#: Reduction fallback order (DESIGN.md §10): each step strips one
+#: requirement — fused kernel first, then the bf16 wire, then the psum
+#: collective — ending at ``gather``, the bitwise-oracle path with no
+#: mesh-shape preconditions beyond a divisible cell axis.
+_REDUCTION_LADDER: dict[str, tuple[str, ...]] = {
+    "fused_bf16": ("psum_bf16", "psum", "gather"),
+    "fused": ("psum", "gather"),
+    "psum_bf16": ("psum", "gather"),
+    "psum": ("gather",),
+    "gather": (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class DowngradeRecord:
+    """One structured graceful-degradation event (DESIGN.md §10).
+
+    ``stage`` is the ladder rung that moved: ``"reduction"`` (client
+    cross-shard aggregation fell one step down :data:`_REDUCTION_LADDER`)
+    or ``"placement"`` (the sharded executor was abandoned for the
+    single-device vmap path). ``group`` names the scenario cells that
+    were re-dispatched; ``error`` is the stringified ValueError that
+    triggered the move.
+    """
+
+    group: tuple[str, ...]
+    stage: str
+    from_value: str
+    to_value: str
+    error: str
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+
+_LAST_DOWNGRADES: list[DowngradeRecord] = []
+
+
+def last_downgrades() -> tuple[DowngradeRecord, ...]:
+    """Downgrade records from the most recent degradable execution.
+
+    Reset at the start of every :func:`execute_cells` call; empty means
+    every group ran at its requested placement/reduction."""
+    return tuple(_LAST_DOWNGRADES)
+
+
+def _record_downgrade(group, stage, frm, to, err) -> DowngradeRecord:
+    rec = DowngradeRecord(group=tuple(group), stage=stage,
+                          from_value=str(frm), to_value=str(to),
+                          error=str(err))
+    _LAST_DOWNGRADES.append(rec)
+    _LOG.warning("degraded %s %s -> %s: %s", stage, frm, to, rec.to_json())
+    return rec
+
+
 def execute_cells(
     scenarios: Sequence[Scenario],
     *,
@@ -197,6 +306,7 @@ def execute_cells(
     mesh=None,
     sequential: bool = False,
     client_reduction: str = "psum",
+    degrade: bool = False,
 ) -> dict[str, CellResult]:
     """Execute scenario × seed cells with a prebuilt simulator.
 
@@ -229,8 +339,17 @@ def execute_cells(
     f32 tolerance vs the vmap path), ``"gather"`` (bitwise oracle), or
     ``"fused[_bf16]"`` / ``"psum_bf16"`` (fused reduce-and-update kernel
     and/or bf16 wire; DESIGN.md §9).
+
+    ``degrade=True`` arms the graceful-degradation ladder (DESIGN.md
+    §10): a group whose sharded dispatch raises ``ValueError`` (mesh
+    shape, reduction preconditions, fault/shard conflicts) is retried
+    one rung down :data:`_REDUCTION_LADDER`, and when the ladder is
+    exhausted, on the single-device vmap path. Every move is logged and
+    recorded (:func:`last_downgrades`). Off by default — precondition
+    errors raise, as before.
     """
     scenarios = list(scenarios)
+    del _LAST_DOWNGRADES[:]
     names = check_unique_names(scenarios)
     seed_list, keys = _seed_keys(seeds)
 
@@ -260,22 +379,25 @@ def execute_cells(
         results = {}
         for sc in scenarios:
             scheduler, energy = sc.build()
+            faults = sc.build_faults()
             active, p_cell = (None, None)
             if sc.n_clients != n_cap:
-                scheduler, energy = _pad_built((scheduler, energy), n_cap)
+                scheduler, energy, faults = _pad_built(
+                    (scheduler, energy, faults), n_cap)
                 active, p_cell = cell_mask_p(sc)
             per_seed = []
             for s in seed_list:
                 out = sim.run(jax.random.PRNGKey(int(s)), params0, num_steps,
                               scheduler=scheduler, energy=energy,
-                              p=p_cell, active_mask=active,
+                              faults=faults, p=p_cell, active_mask=active,
                               eval_fn=eval_fn, eval_every=eval_every)
                 cell = CellResult(*out) if eval_fn is not None \
                     else CellResult(*out, None)
                 per_seed.append(cell)
             stacked = jax.tree_util.tree_map(
                 lambda *xs: jnp.stack(xs), *per_seed)
-            results[sc.name] = _crop_cell(stacked, sc.n_clients, n_cap)
+            cell = _crop_cell(stacked, sc.n_clients, n_cap)
+            results[sc.name] = _attach_divergence(cell)
         return results
 
     sharded = mesh is not None and mesh.size > 1
@@ -287,35 +409,64 @@ def execute_cells(
     # padded structure; raggedness is then decided per group — only
     # groups that actually mix population sizes pay for mask/p operands
     # (and uniform groups keep their mask-free jit cache entries).
-    built = [sc.build() for sc in scenarios]
+    built = [sc.build() + (sc.build_faults(),) for sc in scenarios]
     padded = [b if sc.n_clients == n_cap else _pad_built(b, n_cap)
               for sc, b in zip(scenarios, built)]
     groups: dict[Any, list[int]] = {}
-    for idx, (sch, en) in enumerate(padded):
-        groups.setdefault(_group_key(sch, en), []).append(idx)
+    for idx, (sch, en, flt) in enumerate(padded):
+        groups.setdefault(_group_key(sch, en, flt), []).append(idx)
 
     results: list[CellResult | None] = [None] * len(scenarios)
     for members in groups.values():
         ragged = any(scenarios[i].n_clients != n_cap for i in members)
         sch_batch = _stack([padded[i][0] for i in members])
         en_batch = _stack([padded[i][1] for i in members])
+        # A fault-free group's components are all None — tree_map over
+        # all-None pytrees has no leaves and returns None, so the group
+        # dispatches the pre-fault-layer program verbatim.
+        flt_batch = _stack([padded[i][2] for i in members])
         active_batch, p_batch = None, None
         if ragged:
             masks, ps = zip(*(cell_mask_p(scenarios[i]) for i in members))
             active_batch, p_batch = jnp.stack(masks), jnp.stack(ps)
+
+        def run_vmap():
+            return _run_group(sch_batch, en_batch, flt_batch, active_batch,
+                              p_batch, params0, keys, sim=sim,
+                              num_steps=num_steps, eval_fn=eval_fn,
+                              eval_every=eval_every)
+
         if sharded:
-            out = placement.run_group_sharded(
-                sch_batch, en_batch, active_batch, p_batch, params0, keys,
-                sim=sim, num_steps=num_steps, n_scenarios=len(members),
-                mesh=mesh, eval_fn=eval_fn, eval_every=eval_every,
-                reduction=client_reduction)
+            member_names = [names[i] for i in members]
+            reduction = client_reduction
+            while True:
+                try:
+                    out = placement.run_group_sharded(
+                        sch_batch, en_batch, active_batch, p_batch, params0,
+                        keys, sim=sim, num_steps=num_steps,
+                        n_scenarios=len(members), mesh=mesh, eval_fn=eval_fn,
+                        eval_every=eval_every, reduction=reduction,
+                        faults=flt_batch)
+                    break
+                except ValueError as e:
+                    if not degrade:
+                        raise
+                    lower = _REDUCTION_LADDER.get(reduction, ())
+                    if lower:
+                        _record_downgrade(member_names, "reduction",
+                                          reduction, lower[0], e)
+                        reduction = lower[0]
+                        continue
+                    _record_downgrade(member_names, "placement",
+                                      "sharded", "vmap", e)
+                    out = run_vmap()
+                    break
         else:
-            out = _run_group(sch_batch, en_batch, active_batch, p_batch,
-                             params0, keys, sim=sim, num_steps=num_steps,
-                             eval_fn=eval_fn, eval_every=eval_every)
+            out = run_vmap()
         for j, idx in enumerate(members):
             cell = jax.tree_util.tree_map(lambda x: x[j], out)
-            results[idx] = _crop_cell(cell, scenarios[idx].n_clients, n_cap)
+            cell = _crop_cell(cell, scenarios[idx].n_clients, n_cap)
+            results[idx] = _attach_divergence(cell)
     return dict(zip(names, results))
 
 
@@ -399,6 +550,273 @@ def run_grid_sequential(
     return execute_cells(scenarios, sim=sim, params0=params0,
                          num_steps=num_steps, seeds=seeds, eval_fn=eval_fn,
                          eval_every=eval_every, sequential=True)
+
+
+# --------------------------------------------- preemption-safe execution
+
+#: Manifest schema tag — bump on incompatible layout changes.
+MANIFEST_FORMAT = "study-manifest/v1"
+
+
+@partial(jax.jit, static_argnames=("sim", "spec"))
+def _init_group(scheduler, energy, faults, keys, params0, *,
+                sim: ClientSimulator, spec):
+    """(S, R) batch of fresh scan carries — vmap(scenarios)∘vmap(seeds)
+    of :meth:`ClientSimulator.init`. The carry template for checkpoint
+    restore is ``jax.eval_shape`` of this function."""
+
+    def one(sch, en, flt, key):
+        return sim.init(key, params0, scheduler=sch, energy=en, faults=flt,
+                        spec=spec)
+
+    over_seeds = jax.vmap(one, in_axes=(None, None, None, 0))
+    return jax.vmap(over_seeds, in_axes=(0, 0, 0, None))(
+        scheduler, energy, faults, keys)
+
+
+@partial(jax.jit, static_argnames=("sim", "num_steps", "spec"))
+def _advance_group(carry, scheduler, energy, faults, active, p, *,
+                   sim: ClientSimulator, num_steps: int, spec):
+    """Advance an (S, R) carry batch ``num_steps`` rounds — one scan per
+    lane under vmap∘vmap, the chunked twin of :data:`_run_group`.
+    Because the step stream is a pure function of the carry, chunked
+    advancement is bitwise identical to a single uninterrupted scan."""
+
+    def one(c, sch, en, flt, act, pw):
+        return sim.run_carry(c, num_steps, scheduler=sch, energy=en,
+                             faults=flt, p=pw, active_mask=act, spec=spec,
+                             donate=False)
+
+    over_seeds = jax.vmap(one, in_axes=(0, None, None, None, None, None))
+    return jax.vmap(over_seeds, in_axes=(0, 0, 0, 0, 0, 0))(
+        carry, scheduler, energy, faults, active, p)
+
+
+def _study_fingerprint(scenarios, num_steps, seed_list, params0) -> str:
+    """Content hash binding a checkpoint directory to one exact study:
+    canonical scenario specs + horizon + seeds + initial-parameter bytes.
+    Resume refuses a directory whose manifest fingerprint differs."""
+    h = hashlib.sha256()
+    for sc in scenarios:
+        d = dataclasses.asdict(sc)
+        if d.get("taus") is not None:
+            d["taus"] = np.asarray(d["taus"]).tolist()
+        h.update(json.dumps(d, sort_keys=True, default=repr).encode())
+    h.update(json.dumps({"num_steps": int(num_steps),
+                         "seeds": [int(s) for s in seed_list]}).encode())
+    for leaf in jax.tree_util.tree_leaves(params0):
+        arr = np.asarray(leaf)
+        h.update(str((arr.shape, arr.dtype.name)).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+def _history_template(n_scen, n_seeds, t, n_cap):
+    """Shape/dtype template of an (S, R, t) SimHistory chunk as saved in
+    resumable checkpoints (see :meth:`ClientSimulator._history`)."""
+    return SimHistory(
+        loss=jax.ShapeDtypeStruct((n_scen, n_seeds, t), jnp.float32),
+        participation=jax.ShapeDtypeStruct((n_scen, n_seeds, t, n_cap),
+                                           jnp.float32),
+        weight_sum=jax.ShapeDtypeStruct((n_scen, n_seeds, t), jnp.float32),
+        finite=jax.ShapeDtypeStruct((n_scen, n_seeds, t), jnp.bool_))
+
+
+def _pad_halted_history(history, num_steps: int):
+    """Extend a halted group's history to the full horizon: NaN metrics,
+    ``finite=False`` — the quarantine tail (DESIGN.md §10)."""
+    done = int(np.asarray(history.loss).shape[2])
+    pad = num_steps - done
+    if pad <= 0:
+        return history
+
+    def ext(x, value):
+        shape = x.shape[:2] + (pad,) + x.shape[3:]
+        return np.concatenate(
+            [np.asarray(x), np.full(shape, value, np.asarray(x).dtype)],
+            axis=2)
+
+    return SimHistory(loss=ext(history.loss, np.nan),
+                      participation=ext(history.participation, np.nan),
+                      weight_sum=ext(history.weight_sum, np.nan),
+                      finite=ext(history.finite, False))
+
+
+def execute_cells_resumable(
+    scenarios: Sequence[Scenario],
+    *,
+    sim: ClientSimulator,
+    params0,
+    num_steps: int,
+    seeds: int | Sequence[int] = 8,
+    checkpoint_dir: str,
+    checkpoint_every: int = 0,
+    keep: int = 3,
+    halt_on_divergence: bool = False,
+) -> dict[str, CellResult]:
+    """Preemption-safe :func:`execute_cells`: chunked scans + checkpoints.
+
+    Execution proceeds structure group by structure group (same grouping
+    as the batched path), each group advancing in ``checkpoint_every``
+    -step chunks through :data:`_advance_group`; after every chunk the
+    group's ``{carry, history}`` pytree is written atomically under
+    ``checkpoint_dir/<gid>/step_<t>.npz`` and the study manifest
+    (``manifest.json``) is rewritten. Because each chunk is a pure
+    function of the carry, a run killed at *any* point — including
+    mid-write, by ``kill -9`` — resumes from the directory and produces
+    results **bitwise identical** to the uninterrupted run: completed
+    groups restore their final checkpoint without re-execution, the
+    in-flight group restores its newest complete checkpoint and replays
+    only the tail.
+
+    The manifest binds the directory to one exact study via
+    :func:`_study_fingerprint` (scenario specs + horizon + seeds +
+    params0 bytes); resuming with anything changed raises. Layout::
+
+        {"format": "study-manifest/v1", "fingerprint": "<sha256>",
+         "num_steps": T, "checkpoint_every": K,
+         "groups": {"g000": {"members": [...], "step": t,
+                             "halted": false}, ...}}
+
+    ``halt_on_divergence=True`` stops advancing a group once **every**
+    (scenario, seed) lane has gone non-finite (divergence is absorbing);
+    the unrun tail is reported as NaN metrics with ``finite=False``.
+    Eval hooks and meshes are not supported on this path — run those
+    studies unchunked.
+    """
+    from repro.checkpoint import (CheckpointManager, latest_step,
+                                  write_json_atomic)
+    from repro.core import aggregation
+
+    scenarios = list(scenarios)
+    del _LAST_DOWNGRADES[:]  # no ladder here, but keep the report current
+    names = check_unique_names(scenarios)
+    seed_list, keys = _seed_keys(seeds)
+    num_steps = int(num_steps)
+    if checkpoint_every <= 0:
+        checkpoint_every = num_steps
+
+    n_cap = int(sim.p.shape[0])
+    over = [f"{sc.name} (N={sc.n_clients})" for sc in scenarios
+            if sc.n_clients > n_cap]
+    if over:
+        raise ValueError(
+            f"scenario population exceeds the simulator capacity "
+            f"N_cap={n_cap} (len(sim.p)): {over}")
+    spec = sim.flat_spec(params0)
+
+    built = [sc.build() + (sc.build_faults(),) for sc in scenarios]
+    padded = [b if sc.n_clients == n_cap else _pad_built(b, n_cap)
+              for sc, b in zip(scenarios, built)]
+    groups: dict[Any, list[int]] = {}
+    for idx, (sch, en, flt) in enumerate(padded):
+        groups.setdefault(_group_key(sch, en, flt), []).append(idx)
+    gids = [f"g{g:03d}" for g in range(len(groups))]
+
+    manifest_path = os.path.join(checkpoint_dir, "manifest.json")
+    fingerprint = _study_fingerprint(scenarios, num_steps, seed_list, params0)
+    manifest = {
+        "format": MANIFEST_FORMAT,
+        "fingerprint": fingerprint,
+        "num_steps": num_steps,
+        "checkpoint_every": int(checkpoint_every),
+        "groups": {gid: {"members": [names[i] for i in members],
+                         "step": 0, "halted": False}
+                   for gid, members in zip(gids, groups.values())},
+    }
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            prev = json.load(f)
+        if prev.get("format") != MANIFEST_FORMAT:
+            raise ValueError(
+                f"{manifest_path}: unknown manifest format "
+                f"{prev.get('format')!r} (want {MANIFEST_FORMAT})")
+        if prev.get("fingerprint") != fingerprint:
+            raise ValueError(
+                f"{manifest_path} belongs to a different study "
+                f"(fingerprint mismatch) — refusing to resume; use a "
+                f"fresh checkpoint_dir or delete the stale one")
+        for gid in gids:
+            got = prev["groups"].get(gid, {})
+            manifest["groups"][gid]["halted"] = bool(got.get("halted", False))
+    else:
+        write_json_atomic(manifest_path, manifest)
+
+    def save_state(mgr, gid, step, carry, history, halted):
+        mgr.save(step, {"carry": carry, "history": history})
+        manifest["groups"][gid]["step"] = step
+        manifest["groups"][gid]["halted"] = bool(halted)
+        write_json_atomic(manifest_path, manifest)
+
+    def unflatten_params(flat_params):
+        if spec is None:
+            return flat_params
+        unravel = lambda q: aggregation.unravel_pytree(q, spec)  # noqa: E731
+        return jax.vmap(jax.vmap(unravel))(jnp.asarray(flat_params))
+
+    results: list[CellResult | None] = [None] * len(scenarios)
+    for gid, members in zip(gids, groups.values()):
+        sch_batch = _stack([padded[i][0] for i in members])
+        en_batch = _stack([padded[i][1] for i in members])
+        flt_batch = _stack([padded[i][2] for i in members])
+        ragged = any(scenarios[i].n_clients != n_cap for i in members)
+        active_batch, p_batch = None, None
+        if ragged:
+            masks, ps = zip(*((population_mask(scenarios[i].n_clients, n_cap),
+                               subpopulation_p(sim.p, scenarios[i].n_clients,
+                                               n_cap))
+                              if scenarios[i].n_clients != n_cap else
+                              (jnp.ones((n_cap,), jnp.float32), sim.p)
+                              for i in members))
+            active_batch, p_batch = jnp.stack(masks), jnp.stack(ps)
+
+        mgr = CheckpointManager(os.path.join(checkpoint_dir, gid), keep=keep)
+        carry_tpl = jax.eval_shape(
+            partial(_init_group, sim=sim, spec=spec),
+            sch_batch, en_batch, flt_batch, keys, params0)
+        step = latest_step(mgr.directory)
+        halted = manifest["groups"][gid]["halted"]
+        if step is None:
+            step = 0
+            halted = False
+            carry = _init_group(sch_batch, en_batch, flt_batch, keys, params0,
+                                sim=sim, spec=spec)
+            history = None
+        else:
+            tpl = {"carry": carry_tpl,
+                   "history": _history_template(len(members), len(seed_list),
+                                                step, n_cap)}
+            state, step = mgr.restore(tpl, step)
+            carry, history = state["carry"], state["history"]
+
+        while step < num_steps and not halted:
+            chunk = min(checkpoint_every, num_steps - step)
+            carry, hist = _advance_group(
+                carry, sch_batch, en_batch, flt_batch, active_batch, p_batch,
+                sim=sim, num_steps=chunk, spec=spec)
+            hist = jax.tree_util.tree_map(np.asarray, hist)
+            history = hist if history is None else jax.tree_util.tree_map(
+                lambda a, b: np.concatenate([a, b], axis=2), history, hist)
+            step += chunk
+            if halt_on_divergence and not np.asarray(
+                    history.finite[..., -1]).any():
+                halted = True
+            save_state(mgr, gid, step, carry, history, halted)
+
+        if history is None:  # num_steps == 0 degenerate study
+            history = jax.tree_util.tree_map(
+                lambda s: np.zeros(s.shape, s.dtype),
+                _history_template(len(members), len(seed_list), 0, n_cap))
+        if halted:
+            history = _pad_halted_history(history, num_steps)
+        out = CellResult(params=unflatten_params(carry.params),
+                         history=SimHistory(*map(jnp.asarray, history)),
+                         evals=None)
+        for j, idx in enumerate(members):
+            cell = jax.tree_util.tree_map(lambda x: x[j], out)
+            cell = _crop_cell(cell, scenarios[idx].n_clients, n_cap)
+            results[idx] = _attach_divergence(cell)
+    return dict(zip(names, results))
 
 
 def grid_summary(results: dict[str, CellResult], reducer=None) -> dict[str, dict]:

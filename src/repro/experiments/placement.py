@@ -169,22 +169,24 @@ def client_leaf_specs(tree, n_cap: int, *, client_axis: str,
 
 
 def flatten_cells(scheduler, energy, keys, *, n_scenarios: int,
-                  active=None, p=None):
+                  active=None, p=None, faults=None):
     """(S-stacked components, (R, 2) keys) → C = S·R flat cell arrays.
 
     Cell ``c = s·R + r`` pairs scenario ``s`` with seed ``r``, matching
     ``x.reshape(S, R, ...)`` on the way back out. ``active`` / ``p`` are
-    the optional (S, N_cap) ragged-population operands, repeated over
-    seeds like the components (None passes through).
+    the optional (S, N_cap) ragged-population operands, ``faults`` the
+    optional S-stacked fault component, repeated over seeds like the
+    components (None passes through).
     """
     r = keys.shape[0]
     rep = lambda x: jnp.repeat(x, r, axis=0)
     sch_c = jax.tree_util.tree_map(rep, scheduler)
     en_c = jax.tree_util.tree_map(rep, energy)
+    flt_c = jax.tree_util.tree_map(rep, faults)
     active_c = jax.tree_util.tree_map(rep, active)
     p_c = jax.tree_util.tree_map(rep, p)
     keys_c = jnp.tile(keys, (n_scenarios, 1))
-    return sch_c, en_c, active_c, p_c, keys_c
+    return sch_c, en_c, flt_c, active_c, p_c, keys_c
 
 
 def pad_cells(tree, n_cells: int, n_devices: int):
@@ -205,9 +207,10 @@ def pad_cells(tree, n_cells: int, n_devices: int):
 @partial(jax.jit,
          static_argnames=("sim", "num_steps", "eval_fn", "eval_every", "mesh",
                           "reduction"))
-def _run_group_sharded(scheduler, energy, active, p, params0, keys, *, sim,
-                       num_steps: int, eval_fn=None, eval_every: int = 0,
-                       mesh: Mesh, reduction: str = "psum"):
+def _run_group_sharded(scheduler, energy, faults, active, p, params0, keys,
+                       *, sim, num_steps: int, eval_fn=None,
+                       eval_every: int = 0, mesh: Mesh,
+                       reduction: str = "psum"):
     """shard_map'd twin of ``engine._run_group``.
 
     ``scheduler`` / ``energy`` / ``keys`` leaves carry a leading
@@ -229,9 +232,16 @@ def _run_group_sharded(scheduler, energy, active, p, params0, keys, *, sim,
     replicated = PartitionSpec()
     sch_leaves, sch_def = jax.tree_util.tree_flatten(scheduler)
     en_leaves, en_def = jax.tree_util.tree_flatten(energy)
+    flt_leaves, flt_def = jax.tree_util.tree_flatten(faults)
+    if flt_leaves and client_ax is not None:
+        raise ValueError(
+            "fault injection is not supported under a clients mesh axis "
+            "(DESIGN.md §10) — use a cells-only mesh or drop the fault "
+            "component")
 
     if client_ax is None:
         in_specs = ([cells] * len(sch_leaves), [cells] * len(en_leaves),
+                    [cells] * len(flt_leaves),
                     cells, cells, cells, replicated)
         out_specs = cells
     else:
@@ -240,38 +250,40 @@ def _run_group_sharded(scheduler, energy, active, p, params0, keys, *, sim,
         percell = lambda t: client_leaf_specs(
             t, n_cap, client_axis=client_ax, cell_axis=cell_ax, lead=1)
         rows = PartitionSpec(cell_ax, client_ax)
-        in_specs = (percell(scheduler), percell(energy), rows, rows, cells,
-                    replicated)
+        in_specs = (percell(scheduler), percell(energy), [], rows, rows,
+                    cells, replicated)
         out_specs = CellResult(
             params=cells,
             history=SimHistory(loss=cells,
                                participation=PartitionSpec(
                                    cell_ax, None, client_ax),
-                               weight_sum=cells),
+                               weight_sum=cells,
+                               finite=cells),
             evals=cells)
 
-    def local(sch_lv, en_lv, act, pw, ks, p0):
+    def local(sch_lv, en_lv, flt_lv, act, pw, ks, p0):
         sch = jax.tree_util.tree_unflatten(sch_def, sch_lv)
         en = jax.tree_util.tree_unflatten(en_def, en_lv)
+        flt = jax.tree_util.tree_unflatten(flt_def, flt_lv)
 
-        def one(s, e, a, w, k):
-            out = sim.run(k, p0, num_steps, scheduler=s, energy=e,
+        def one(s, e, f, a, w, k):
+            out = sim.run(k, p0, num_steps, scheduler=s, energy=e, faults=f,
                           p=w, active_mask=a,
                           eval_fn=eval_fn, eval_every=eval_every)
             return CellResult(*out) if eval_fn is not None \
                 else CellResult(*out, None)
 
-        over_cells = jax.vmap(one, in_axes=(0, 0, 0, 0, 0))
+        over_cells = jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 0))
         if client_ax is None:
-            return over_cells(sch, en, act, pw, ks)
+            return over_cells(sch, en, flt, act, pw, ks)
         shards = mesh.shape[client_ax]
         sch = shard_scheduler(sch, int(sim.p.shape[0]) // shards)
         with client_sharding(client_ax, shards, reduction):
-            return over_cells(sch, en, act, pw, ks)
+            return over_cells(sch, en, flt, act, pw, ks)
 
     fn = shard_map(local, mesh=mesh, in_specs=in_specs,
                    out_specs=out_specs, check_rep=False)
-    return fn(sch_leaves, en_leaves, active, p, keys, params0)
+    return fn(sch_leaves, en_leaves, flt_leaves, active, p, keys, params0)
 
 
 @partial(jax.jit,
@@ -291,7 +303,8 @@ def _run_cell_client_sharded(scheduler, energy, active, p, params0, key, *,
     rows, replicated = PartitionSpec(client_ax), PartitionSpec()
     hist = SimHistory(loss=replicated,
                       participation=PartitionSpec(None, client_ax),
-                      weight_sum=replicated)
+                      weight_sum=replicated,
+                      finite=replicated)
     out_specs = (replicated, hist) if eval_fn is None \
         else (replicated, hist, replicated)
     sch_leaves, sch_def = jax.tree_util.tree_flatten(scheduler)
@@ -363,7 +376,7 @@ def run_client_sharded(sim, key, params0, num_steps: int, *, scheduler=None,
 
 def run_group_sharded(scheduler, energy, active, p, params0, keys, *, sim,
                       num_steps: int, n_scenarios: int, mesh: Mesh,
-                      eval_fn=None, eval_every: int = 0,
+                      faults=None, eval_fn=None, eval_every: int = 0,
                       reduction: str = "psum"):
     """Execute one structure-group's (S × R) cell block across ``mesh``.
 
@@ -381,6 +394,12 @@ def run_group_sharded(scheduler, energy, active, p, params0, keys, *, sim,
     ``"fused[_bf16]"`` / ``"psum_bf16"`` (DESIGN.md §9).
     """
     cell_ax, client_ax = _mesh_axes(mesh)  # validate before any device work
+    if client_ax is not None and (
+            faults is not None or sim.faults is not None):
+        raise ValueError(
+            "fault injection is not supported under a clients mesh axis "
+            "(DESIGN.md §10) — use a cells-only mesh or drop the fault "
+            "component")
     r = keys.shape[0]
     n_cells = n_scenarios * r
     if client_ax is not None and p is None:
@@ -388,14 +407,15 @@ def run_group_sharded(scheduler, energy, active, p, params0, keys, *, sim,
         # the closed-over full (N,) vector would be replicated against
         # (n_local,) decisions — so materialize it as a sharded operand.
         p = jnp.broadcast_to(sim.p, (n_scenarios,) + sim.p.shape)
-    sch_c, en_c, active_c, p_c, keys_c = flatten_cells(
-        scheduler, energy, keys, n_scenarios=n_scenarios, active=active, p=p)
+    sch_c, en_c, flt_c, active_c, p_c, keys_c = flatten_cells(
+        scheduler, energy, keys, n_scenarios=n_scenarios, active=active, p=p,
+        faults=faults)
     cell_shards = mesh.shape[cell_ax] if cell_ax is not None else 1
-    (sch_c, en_c, active_c, p_c, keys_c), _ = pad_cells(
-        (sch_c, en_c, active_c, p_c, keys_c), n_cells, cell_shards)
-    out = _run_group_sharded(sch_c, en_c, active_c, p_c, params0, keys_c,
-                             sim=sim, num_steps=num_steps, eval_fn=eval_fn,
-                             eval_every=eval_every, mesh=mesh,
-                             reduction=reduction)
+    (sch_c, en_c, flt_c, active_c, p_c, keys_c), _ = pad_cells(
+        (sch_c, en_c, flt_c, active_c, p_c, keys_c), n_cells, cell_shards)
+    out = _run_group_sharded(sch_c, en_c, flt_c, active_c, p_c, params0,
+                             keys_c, sim=sim, num_steps=num_steps,
+                             eval_fn=eval_fn, eval_every=eval_every,
+                             mesh=mesh, reduction=reduction)
     return jax.tree_util.tree_map(
         lambda x: x[:n_cells].reshape((n_scenarios, r) + x.shape[1:]), out)

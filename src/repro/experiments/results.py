@@ -70,11 +70,15 @@ class GridResult(Mapping):
     """
 
     def __init__(self, cells: dict, labels: dict, axes: dict,
-                 name: str = "grid"):
+                 name: str = "grid", downgrades: tuple = ()):
         self._cells = dict(cells)
         self._labels = {k: dict(v) for k, v in labels.items()}
         self.axes = {k: tuple(v) for k, v in axes.items()}
         self.name = name
+        #: graceful-degradation events recorded while executing this grid
+        #: (:class:`repro.experiments.engine.DowngradeRecord`); empty when
+        #: every group ran at its requested placement/reduction.
+        self.downgrades = tuple(downgrades)
 
     # ------------------------------------------------------------ mapping
 
@@ -154,7 +158,8 @@ class GridResult(Mapping):
 
         axes = {a: tuple(surviving(a, vals))
                 for a, vals in self.axes.items() if a not in scalar}
-        return GridResult(cells, labels, axes, name=self.name)
+        return GridResult(cells, labels, axes, name=self.name,
+                          downgrades=self.downgrades)
 
     def only(self):
         """The single CellResult of a fully-selected grid."""
@@ -193,14 +198,26 @@ class GridResult(Mapping):
         return {key: seed_stats(np.concatenate(vs))
                 for key, vs in groups.items()}
 
+    def divergence(self) -> dict[str, dict]:
+        """Per-cell quarantine report (DESIGN.md §10):
+        ``{name: {"n_diverged", "first_bad_step"}}`` — how many seeds
+        went non-finite and the earliest first-bad-step (−1: none).
+        Delegates to :func:`repro.experiments.engine.divergence_summary`.
+        """
+        from repro.experiments.engine import divergence_summary
+
+        return divergence_summary(self._cells)
+
     # ------------------------------------------------------------- export
 
     def to_records(self, metric: Callable | None = None) -> list[dict]:
-        """One flat record per cell: name + axis labels + seed stats."""
+        """One flat record per cell: name + axis labels + seed stats +
+        the quarantine fields (``n_diverged`` / ``first_bad_step``)."""
         metric = default_metric if metric is None else metric
+        div = self.divergence()
         return [
             {"name": name, **self._labels[name],
-             **seed_stats(metric(cell))}
+             **seed_stats(metric(cell)), **div[name]}
             for name, cell in self._cells.items()
         ]
 

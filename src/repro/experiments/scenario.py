@@ -61,6 +61,11 @@ class Scenario:
     pads ragged populations to the simulator capacity under an active
     mask (DESIGN.md §7), so mixed-N scenario lists batch into one
     compiled computation per scheduler × arrival structure.
+
+    ``faults`` optionally names a fault-injection family
+    (:mod:`repro.core.faults` registry; ``fault_kwargs`` feeds its
+    factory). ``None`` — the default — runs the fault-free program,
+    bit-identical to pre-fault-layer builds.
     """
 
     name: str
@@ -71,6 +76,8 @@ class Scenario:
     taus: Sequence[int] | None = None
     scheduler_kwargs: dict = dataclasses.field(default_factory=dict)
     arrival_kwargs: dict = dataclasses.field(default_factory=dict)
+    faults: str | None = None
+    fault_kwargs: dict = dataclasses.field(default_factory=dict)
 
     def build(self):
         """Materialize the (scheduler, energy) pytree pair."""
@@ -79,6 +86,14 @@ class Scenario:
         energy = make_arrivals(self.arrivals, self.n_clients, self.horizon,
                                taus=self.taus, **self.arrival_kwargs)
         return scheduler, energy
+
+    def build_faults(self):
+        """Materialize the fault component (None when fault-free)."""
+        if self.faults is None:
+            return None
+        from repro.core.faults import make_fault
+
+        return make_fault(self.faults, self.n_clients, **self.fault_kwargs)
 
 
 def scenario_grid(

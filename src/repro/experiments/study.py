@@ -63,6 +63,22 @@ class ExecutionConfig:
         ``"fused[_bf16]"`` (fused reduce-and-update kernel, plain sgd()
         only), or ``"psum_bf16"`` (bf16-on-the-wire partials, f32
         accumulation) — DESIGN.md §9. Ignored without a clients axis.
+    degrade : arm the graceful-degradation ladder (DESIGN.md §10): a
+        group whose sharded dispatch raises ``ValueError`` retries one
+        reduction rung down (fused → psum → gather) and finally on the
+        single-device vmap path, recording every move
+        (``GridResult.downgrades``). Off by default — errors raise.
+    checkpoint_dir : directory for preemption-safe execution
+        (:func:`repro.experiments.engine.execute_cells_resumable`): the
+        study runs in checkpointed chunks and a killed run resumes from
+        here, bitwise identical to the uninterrupted run. Incompatible
+        with ``mesh`` / ``sequential`` / ``eval_fn``.
+    checkpoint_every : chunk length between checkpoints (0 → one chunk,
+        i.e. checkpoint only at the end).
+    checkpoint_keep : retained checkpoints per structure group.
+    halt_on_divergence : stop advancing a structure group once every
+        (scenario, seed) lane has gone non-finite; the unrun tail
+        reports NaN metrics with ``finite=False``. Resumable path only.
     """
 
     mesh: Any = None
@@ -70,6 +86,11 @@ class ExecutionConfig:
     eval_every: int = 0
     sequential: bool = False
     client_reduction: str = "psum"
+    degrade: bool = False
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 0
+    checkpoint_keep: int = 3
+    halt_on_divergence: bool = False
 
 
 class Study:
@@ -205,18 +226,35 @@ class Study:
             sim = self.simulator(grads_fn=grads_fn, p=p, optimizer=optimizer,
                                  loss_fn=loss_fn, use_kernel=use_kernel)
         cells = self._resolve_labeled()
-        results = engine.execute_cells(
-            [sc for sc, _ in cells], sim=sim, params0=params0,
-            num_steps=self.num_steps, seeds=self.seeds(),
-            eval_fn=cfg.eval_fn, eval_every=cfg.eval_every,
-            mesh=cfg.mesh, sequential=cfg.sequential,
-            client_reduction=cfg.client_reduction)
+        if cfg.checkpoint_dir is not None:
+            conflicts = [n for n, v in (("mesh", cfg.mesh),
+                                        ("sequential", cfg.sequential),
+                                        ("eval_fn", cfg.eval_fn)) if v]
+            if conflicts:
+                raise ValueError(
+                    f"checkpoint_dir (resumable execution) is incompatible "
+                    f"with {conflicts} — run those studies unchunked")
+            results = engine.execute_cells_resumable(
+                [sc for sc, _ in cells], sim=sim, params0=params0,
+                num_steps=self.num_steps, seeds=self.seeds(),
+                checkpoint_dir=cfg.checkpoint_dir,
+                checkpoint_every=cfg.checkpoint_every,
+                keep=cfg.checkpoint_keep,
+                halt_on_divergence=cfg.halt_on_divergence)
+        else:
+            results = engine.execute_cells(
+                [sc for sc, _ in cells], sim=sim, params0=params0,
+                num_steps=self.num_steps, seeds=self.seeds(),
+                eval_fn=cfg.eval_fn, eval_every=cfg.eval_every,
+                mesh=cfg.mesh, sequential=cfg.sequential,
+                client_reduction=cfg.client_reduction, degrade=cfg.degrade)
         axes = dict(self._sweep_axes())
         axes["seed"] = self._seed_values()
         return GridResult(
             cells={sc.name: results[sc.name] for sc, _ in cells},
             labels={sc.name: labels for sc, labels in cells},
-            axes=axes, name=self.name)
+            axes=axes, name=self.name,
+            downgrades=engine.last_downgrades())
 
 
 def build_components(*, scheduler: str, arrivals, n_clients: int,

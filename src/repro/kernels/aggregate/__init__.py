@@ -1,4 +1,5 @@
-from repro.kernels.aggregate.ops import masked_scaled_aggregate
+from repro.kernels.aggregate.ops import compose_masks, masked_scaled_aggregate
 from repro.kernels.aggregate.ref import masked_scaled_aggregate_ref
 
-__all__ = ["masked_scaled_aggregate", "masked_scaled_aggregate_ref"]
+__all__ = ["compose_masks", "masked_scaled_aggregate",
+           "masked_scaled_aggregate_ref"]

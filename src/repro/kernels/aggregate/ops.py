@@ -10,6 +10,9 @@ from __future__ import annotations
 
 import jax
 
+from repro.core.aggregation import compose_masks  # noqa: F401  (re-export:
+# the mask operand of every kernel below accepts a composed product of
+# active/delivery masks — canonical impl lives with the mask machinery)
 from repro.kernels.aggregate.aggregate import (
     masked_scaled_aggregate_kernel,
     masked_scaled_aggregate_update_kernel,

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointManager, latest_step
 from repro.configs import get_config
 from repro.core.energy import arrival_family_names
 from repro.data import GlobalBatcher, make_lm_tokens
@@ -53,8 +53,21 @@ def main(argv=None):
                     choices=arrival_family_names())
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="legacy params-only checkpoints")
     ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="full-state resumable checkpoints (train state + "
+                         "scheduler/energy state + data RNG), written "
+                         "atomically every --ckpt-every steps")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the latest checkpoint in "
+                         "--checkpoint-dir; the resumed run is bitwise "
+                         "identical to the uninterrupted one")
+    ap.add_argument("--halt-at", type=int, default=0,
+                    help="stop right after the full-state checkpoint at "
+                         "this step (simulated preemption; components are "
+                         "still built for the full --steps horizon)")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
 
@@ -87,6 +100,26 @@ def main(argv=None):
     sched_state = scheduler.init(k_sched)
     energy_state = energy.init(k_energy)
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    full_ckpt = (CheckpointManager(args.checkpoint_dir)
+                 if args.checkpoint_dir else None)
+
+    start_step = 0
+    if args.resume:
+        # The loop state is exactly (train state, scheduler state, energy
+        # state, data RNG): restoring all four and re-entering the loop at
+        # the saved step replays the identical step stream, so a resumed
+        # run is bitwise equal to the uninterrupted one (DESIGN.md §10).
+        if full_ckpt is None:
+            raise SystemExit("--resume requires --checkpoint-dir")
+        last = latest_step(args.checkpoint_dir)
+        if last is not None:
+            template = {"state": state, "sched_state": sched_state,
+                        "energy_state": energy_state, "k_batch": k_batch}
+            restored, start_step = full_ckpt.restore(template, last)
+            state, sched_state = restored["state"], restored["sched_state"]
+            energy_state, k_batch = (restored["energy_state"],
+                                     restored["k_batch"])
+            print(f"resumed from {full_ckpt.path(start_step)}")
 
     @jax.jit
     def sched_step(sched, en, sstate, estate, t, k):
@@ -99,7 +132,7 @@ def main(argv=None):
 
     t_start = time.time()
     losses = []
-    for step in range(args.steps):
+    for step in range(start_step, args.steps):
         k_batch, kb, ks = jax.random.split(k_batch, 3)
         batch_raw = batcher.sample(kb)
         batch = {
@@ -124,13 +157,32 @@ def main(argv=None):
                   f"{args.n_clients}  wsum={float(metrics['weight_sum']):.3f}")
         if ckpt and step and step % args.ckpt_every == 0:
             ckpt.save(step, state.params)
+        if full_ckpt and (step + 1) % args.ckpt_every == 0:
+            full_ckpt.save(step + 1, {
+                "state": state, "sched_state": sched_state,
+                "energy_state": energy_state, "k_batch": k_batch})
+        if args.halt_at and step + 1 == args.halt_at:
+            if full_ckpt is None:
+                raise SystemExit("--halt-at requires --checkpoint-dir")
+            if (step + 1) % args.ckpt_every != 0:
+                full_ckpt.save(step + 1, {
+                    "state": state, "sched_state": sched_state,
+                    "energy_state": energy_state, "k_batch": k_batch})
+            print(f"halted at step {step + 1} (simulated preemption)")
+            return losses
 
     dt = time.time() - t_start
-    print(f"done: {args.steps} steps in {dt:.1f}s "
-          f"({args.steps / dt:.2f} steps/s); "
-          f"loss {losses[0]:.4f} -> {np.mean(losses[-10:]):.4f}")
+    done = args.steps - start_step
+    tail = (f"loss {losses[0]:.4f} -> {np.mean(losses[-10:]):.4f}"
+            if losses else "already complete")
+    print(f"done: {done} steps in {dt:.1f}s "
+          f"({max(done, 1) / dt:.2f} steps/s); {tail}")
     if ckpt:
         ckpt.save(args.steps, state.params)
+    if full_ckpt:
+        full_ckpt.save(args.steps, {
+            "state": state, "sched_state": sched_state,
+            "energy_state": energy_state, "k_batch": k_batch})
     return losses
 
 

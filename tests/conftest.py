@@ -31,6 +31,11 @@ def pytest_configure(config):
         "markers",
         "clientshard: within-cell client-axis sharding (DESIGN.md §8) — "
         "select with `-m clientshard`")
+    config.addinivalue_line(
+        "markers",
+        "faults: fault injection, non-finite quarantine and "
+        "preemption-safe resumable execution (DESIGN.md §10) — select "
+        "with `-m faults`")
 
 
 def pytest_collection_modifyitems(config, items):

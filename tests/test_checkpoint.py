@@ -69,6 +69,87 @@ def test_manager_empty_raises(tmp_path):
         cm.restore(tree())
 
 
+# ------------------------------------------- crash consistency (DESIGN.md §10)
+
+def _no_stray_tmps(directory):
+    return [f for f in os.listdir(directory) if ".tmp." in f] == []
+
+
+@pytest.mark.faults
+def test_crash_mid_write_leaves_previous_intact(tmp_path, monkeypatch):
+    """A writer that dies mid-``np.savez`` must leave the previous
+    checkpoint byte-identical and no stray temp file — the atomic
+    protocol only publishes a fully-written, fsynced npz."""
+    cm = CheckpointManager(str(tmp_path), keep=3)
+    cm.save(10, tree())
+    before = open(cm.path(10), "rb").read()
+
+    real_savez = np.savez
+
+    def torn_savez(f, **arrays):
+        real_savez(f, **{k: v for k, v in list(arrays.items())[:1]})
+        raise OSError("disk full")
+
+    monkeypatch.setattr(np, "savez", torn_savez)
+    with pytest.raises(OSError, match="disk full"):
+        cm.save(20, tree())
+    monkeypatch.undo()
+
+    assert open(cm.path(10), "rb").read() == before
+    assert not os.path.exists(cm.path(20))
+    assert _no_stray_tmps(str(tmp_path))
+    got, step = cm.restore(tree())
+    assert step == 10
+
+
+@pytest.mark.faults
+def test_failed_replace_removes_temp(tmp_path, monkeypatch):
+    """If the final ``os.replace`` itself fails, the temp file is cleaned
+    up and the target path is untouched."""
+    p = str(tmp_path / "ck.npz")
+    save_pytree(p, tree())
+    before = open(p, "rb").read()
+    monkeypatch.setattr(os, "replace",
+                        lambda a, b: (_ for _ in ()).throw(OSError("EXDEV")))
+    with pytest.raises(OSError, match="EXDEV"):
+        save_pytree(p, tree())
+    monkeypatch.undo()
+    assert open(p, "rb").read() == before
+    assert _no_stray_tmps(str(tmp_path))
+
+
+@pytest.mark.faults
+def test_truncated_npz_raises_unreadable(tmp_path):
+    p = str(tmp_path / "ck.npz")
+    save_pytree(p, tree())
+    blob = open(p, "rb").read()
+    open(p, "wb").write(blob[: len(blob) // 2])
+    with pytest.raises(ValueError, match="unreadable"):
+        restore_pytree(p, tree())
+
+
+@pytest.mark.faults
+def test_corrupt_member_names_offending_key(tmp_path):
+    """Bit-rot inside one npz member fails restore with an error naming
+    that leaf key, not a generic zip traceback."""
+    import zipfile
+
+    big = {"params": {"w": jnp.arange(4096.0)},
+           "step": jnp.asarray(7, jnp.int32)}
+    p = str(tmp_path / "ck.npz")
+    save_pytree(p, big)
+    with zipfile.ZipFile(p) as z:
+        info = z.getinfo("params/w.npy")
+    # Flip bytes well inside the stored member's data region (past the
+    # 30-byte local header + name + npy header).
+    offset = info.header_offset + 30 + len(info.filename) + 512
+    with open(p, "r+b") as f:
+        f.seek(offset)
+        f.write(b"\xff" * 64)
+    with pytest.raises(ValueError, match="params/w"):
+        restore_pytree(p, big)
+
+
 # ------------------------------------------------- flat SimCarry round-trip
 
 def _sim_setup(optimizer):

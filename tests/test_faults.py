@@ -1,0 +1,343 @@
+"""Fault-injection + non-finite quarantine tests (DESIGN.md §10).
+
+The load-bearing guarantees:
+
+* **Fault-free configs are bitwise unchanged** — every registered fault
+  family at rate/size 0 reproduces the no-fault trajectory exactly, for
+  every scheduler. The fault layer composes through the existing RNG
+  streams by domain-separated ``fold_in`` (never by widening a split
+  arity), so arming it cannot perturb a clean run.
+* **Dropped rows are exact zeros** through the masked aggregation
+  kernels — a dropped client's gradient may be NaN-poisoned and still
+  contributes nothing.
+* **Quarantine** — a NaN-diverged cell is reported (``diverged``
+  first-bad-step per seed) while sibling cells of the same grid are
+  bitwise unaffected.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_quadratic
+from repro.core.energy import make_arrivals
+from repro.core.faults import (
+    FAULT_SALT,
+    DropUpdates,
+    fault_family_names,
+    make_fault,
+    pad_faults,
+)
+from repro.core.scheduling import make_scheduler
+from repro.core.trainer import ClientSimulator
+from repro.experiments import ExecutionConfig, Scenario, Study, engine
+from repro.optim import sgd
+
+pytestmark = pytest.mark.faults
+
+ALL_SCHEDULERS = ("alg1", "alg2", "benchmark1", "benchmark2", "oracle",
+                  "battery_adaptive")
+
+#: Every registered family at its do-nothing setting.
+RATE0 = {
+    "drop": {"rate": 0.0},
+    "corrupt": {"rate": 0.0, "scale": 0.0},
+    "stale": {"rate": 0.0, "delay": 2},
+    "offline": {"start": 0, "length": 0},
+    "drop_corrupt": {"drop_rate": 0.0, "corrupt_rate": 0.0, "scale": 0.0},
+}
+
+N, DIM, STEPS = 8, 6, 25
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_quadratic(jax.random.PRNGKey(2), n_clients=N, dim=DIM)
+
+
+@pytest.fixture(scope="module")
+def sim(problem):
+    return ClientSimulator(
+        grads_fn=lambda p, k, t: problem.all_grads(p, key=k, noise=0.05),
+        p=problem.p, optimizer=sgd(0.02), loss_fn=problem.suboptimality)
+
+
+def params0():
+    return jnp.full((DIM,), 4.0)
+
+
+def _cells(sim, scenarios, seeds=2, **kw):
+    return engine.execute_cells(scenarios, sim=sim, params0=params0(),
+                                num_steps=STEPS, seeds=seeds, **kw)
+
+
+def _assert_cells_bitwise(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ------------------------------------------------ registry & pytree basics
+
+def test_registry_families():
+    assert set(RATE0) <= set(fault_family_names())
+
+
+def test_fault_components_are_pytrees():
+    for kind, kw in RATE0.items():
+        f = make_fault(kind, N, **kw)
+        leaves, treedef = jax.tree_util.tree_flatten(f)
+        back = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert type(back) is type(f)
+
+
+def test_make_fault_unknown_kind_raises():
+    with pytest.raises(ValueError, match="fault"):
+        make_fault("meteor_strike", N)
+
+
+def test_rate_validation():
+    with pytest.raises(ValueError):
+        DropUpdates(rate=1.5)
+    with pytest.raises(ValueError):
+        DropUpdates(rate=-0.1)
+
+
+def test_pad_faults_none_passthrough():
+    assert pad_faults(None, 16) is None
+
+
+def test_pad_faults_unknown_component_raises():
+    with pytest.raises(TypeError):
+        pad_faults(object(), 16)
+
+
+# --------------------------------------------- rate-0 bitwise regression
+
+@pytest.mark.parametrize("scheduler", ALL_SCHEDULERS)
+def test_rate0_faults_bitwise_identical(sim, scheduler):
+    """Every fault family at rate 0 reproduces the fault-free grid
+    exactly — all schedulers, same seeds, bit for bit."""
+    base = Scenario(name="clean", scheduler=scheduler, arrivals="binary",
+                    n_clients=N, horizon=STEPS + 1)
+    armed = [Scenario(name=k, scheduler=scheduler, arrivals="binary",
+                      n_clients=N, horizon=STEPS + 1, faults=k,
+                      fault_kwargs=dict(kw)) for k, kw in RATE0.items()]
+    res = _cells(sim, [base] + armed)
+    ref = np.asarray(res["clean"].history.loss)
+    for k in RATE0:
+        np.testing.assert_array_equal(
+            np.asarray(res[k].history.loss), ref, err_msg=k)
+        for la, lb in zip(jax.tree_util.tree_leaves(res[k].params),
+                          jax.tree_util.tree_leaves(res["clean"].params)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+        assert np.all(np.asarray(res[k].diverged) == -1)
+
+
+def test_fault_salt_never_widens_split():
+    """The fault key is fold_in(k_grad, FAULT_SALT), a pure function of
+    the existing per-step key — the no-fault streams cannot move."""
+    k = jax.random.PRNGKey(0)
+    forked = jax.random.fold_in(k, FAULT_SALT)
+    assert not np.array_equal(np.asarray(k), np.asarray(forked))
+
+
+# ---------------------------------------------------- family semantics
+
+def test_drop_reduces_weight_sum(sim):
+    sc = [Scenario(name="clean", scheduler="alg1", arrivals="periodic",
+                   n_clients=N, horizon=STEPS + 1),
+          Scenario(name="drop", scheduler="alg1", arrivals="periodic",
+                   n_clients=N, horizon=STEPS + 1, faults="drop",
+                   fault_kwargs={"rate": 0.5})]
+    res = _cells(sim, sc, seeds=4)
+    w_clean = float(np.asarray(res["clean"].history.weight_sum).mean())
+    w_drop = float(np.asarray(res["drop"].history.weight_sum).mean())
+    assert w_drop < 0.75 * w_clean
+    assert np.all(np.isfinite(np.asarray(res["drop"].history.loss)))
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_dropped_rows_contribute_exact_zero(problem, use_kernel):
+    """drop_corrupt(drop_rate=1, corrupt_rate=1, scale=NaN): every
+    gradient row is NaN-poisoned *and* dropped each step. If dropped
+    rows contributed anything but exact zeros through the (masked)
+    aggregation path, params would go NaN instantly; instead they never
+    move and stay finite — on both the reference matvec and the Pallas
+    kernel path."""
+    leak = Scenario(name="leak", scheduler="alg1", arrivals="periodic",
+                    n_clients=N, horizon=STEPS + 1, faults="drop_corrupt",
+                    fault_kwargs={"drop_rate": 1.0, "corrupt_rate": 1.0,
+                                  "scale": float("nan")})
+    sim_k = ClientSimulator(
+        grads_fn=lambda p, k, t: problem.all_grads(p, key=k, noise=0.05),
+        p=problem.p, optimizer=sgd(0.02), loss_fn=problem.suboptimality,
+        use_kernel=use_kernel)
+    res = _cells(sim_k, [leak], seeds=3)
+    hist = res["leak"].history
+    assert np.all(np.asarray(hist.finite))
+    assert np.all(np.asarray(hist.weight_sum) == 0.0)
+    loss = np.asarray(hist.loss)
+    np.testing.assert_array_equal(
+        loss, np.broadcast_to(loss[..., :1], loss.shape))
+    assert np.all(np.asarray(res["leak"].diverged) == -1)
+
+
+def test_stale_updates_replay_delayed_gradients(sim):
+    """StaleUpdates(rate=1, delay=k): before step k every update is
+    dropped (nothing to replay); afterwards the trajectory moves."""
+    sc = Scenario(name="stale", scheduler="oracle", arrivals="periodic",
+                  n_clients=N, horizon=STEPS + 1, faults="stale",
+                  fault_kwargs={"rate": 1.0, "delay": 3})
+    res = _cells(sim, [sc], seeds=2)
+    w = np.asarray(res["stale"].history.weight_sum)
+    # first `delay` steps: all updates dropped -> zero delivered weight
+    assert np.all(w[..., :3] == 0.0)
+    assert np.any(w[..., 3:] > 0.0)
+    assert np.all(np.isfinite(np.asarray(res["stale"].history.loss)))
+
+
+def test_offline_window_masks_whole_population(sim):
+    sc = Scenario(name="off", scheduler="oracle", arrivals="periodic",
+                  n_clients=N, horizon=STEPS + 1, faults="offline",
+                  fault_kwargs={"start": 5, "length": 4})
+    clean = Scenario(name="clean", scheduler="oracle", arrivals="periodic",
+                     n_clients=N, horizon=STEPS + 1)
+    res = _cells(sim, [sc, clean], seeds=2)
+    w = np.asarray(res["off"].history.weight_sum)
+    wc = np.asarray(res["clean"].history.weight_sum)
+    assert np.all(w[..., 5:9] == 0.0)
+    np.testing.assert_array_equal(w[..., :5], wc[..., :5])
+
+
+def test_periodic_offline_windows(sim):
+    sc = Scenario(name="off", scheduler="oracle", arrivals="periodic",
+                  n_clients=N, horizon=STEPS + 1, faults="offline",
+                  fault_kwargs={"start": 2, "length": 2, "period": 10})
+    res = _cells(sim, [sc], seeds=1)
+    w = np.asarray(res["off"].history.weight_sum)[0]
+    off_steps = {2, 3, 12, 13, 22, 23} & set(range(STEPS))
+    for t in range(STEPS):
+        assert (w[t] == 0.0) == (t in off_steps), t
+
+
+# ----------------------------------------------------------- quarantine
+
+def test_poisoned_cell_quarantined_siblings_bitwise(sim):
+    """A NaN-poisoned cell reports first-bad-step per seed; the clean
+    cells of the same grid are bitwise what they are without it."""
+    clean = [Scenario(name=f"{s}_clean", scheduler=s, arrivals="periodic",
+                      n_clients=N, horizon=STEPS + 1)
+             for s in ("alg1", "benchmark1")]
+    bad = Scenario(name="poisoned", scheduler="alg1", arrivals="periodic",
+                   n_clients=N, horizon=STEPS + 1, faults="corrupt",
+                   fault_kwargs={"rate": 1.0, "scale": float("nan")})
+    with_bad = _cells(sim, clean + [bad], seeds=3)
+    without = _cells(sim, clean, seeds=3)
+
+    div = np.asarray(with_bad["poisoned"].diverged)
+    assert div.shape == (3,)
+    assert np.all(div == 0)  # NaN scale poisons step 0
+    fin = np.asarray(with_bad["poisoned"].history.finite)
+    assert not fin.any()
+    for sc in clean:
+        _assert_cells_bitwise(with_bad[sc.name], without[sc.name])
+        assert np.all(np.asarray(with_bad[sc.name].diverged) == -1)
+
+    summary = engine.divergence_summary(with_bad)
+    assert summary["poisoned"] == {"n_diverged": 3, "first_bad_step": 0}
+    assert summary["alg1_clean"] == {"n_diverged": 0, "first_bad_step": -1}
+
+
+def test_divergence_is_absorbing(sim):
+    """Late-onset divergence: finite flags are monotone (True then
+    False), and first-bad-step matches the onset."""
+    sc = Scenario(name="late", scheduler="oracle", arrivals="periodic",
+                  n_clients=N, horizon=STEPS + 1, faults="corrupt",
+                  fault_kwargs={"rate": 0.05, "scale": float("inf")})
+    res = _cells(sim, [sc], seeds=6)
+    fin = np.asarray(res["late"].history.finite)
+    div = np.asarray(res["late"].diverged)
+    for r in range(fin.shape[0]):
+        f = fin[r]
+        if div[r] < 0:
+            assert f.all()
+        else:
+            assert f[:div[r]].all() and not f[div[r]:].any()
+
+
+# ------------------------------------------------------- study integration
+
+def test_faults_axis_in_study(problem):
+    study = (Study("faults_axis", num_steps=STEPS)
+             .axis("scheduler", "alg1").axis("arrivals", "periodic")
+             .axis("faults", [None, ("drop", {"rate": 0.3})])
+             .axis("seeds", 2))
+    res = study.run(
+        grads_fn=lambda p, k, t: problem.all_grads(p, key=k, noise=0.05),
+        p=problem.p, optimizer=sgd(0.02), loss_fn=problem.suboptimality,
+        params0=params0())
+    assert set(res.axes) == {"scheduler", "arrivals", "faults", "seed"}
+    names = list(res)
+    assert any("nofault" in n for n in names)
+    assert any("drop" in n for n in names)
+    sub = res.sel(faults=None)
+    assert len(sub) == 1
+    recs = res.to_records()
+    assert all({"n_diverged", "first_bad_step"} <= set(r) for r in recs)
+    assert res.divergence()[names[0]]["n_diverged"] == 0
+
+
+def test_faults_require_flat_carry(problem):
+    sim = ClientSimulator(
+        grads_fn=lambda p, k, t: {"w": problem.all_grads(p["w"])},
+        p=problem.p, optimizer=sgd(0.02), flat=False)
+    with pytest.raises(ValueError, match="flat-carry"):
+        sim.run(jax.random.PRNGKey(0), {"w": params0()}, 5,
+                scheduler=make_scheduler("oracle", N),
+                energy=make_arrivals("periodic", N, 6),
+                faults=DropUpdates(rate=0.5))
+
+
+# ------------------------------------------------- graceful degradation
+
+@pytest.mark.multidevice
+def test_faults_under_client_mesh_raise_without_degrade(sim):
+    from repro.experiments import make_client_mesh
+
+    sc = Scenario(name="d", scheduler="alg1", arrivals="periodic",
+                  n_clients=N, horizon=STEPS + 1, faults="drop",
+                  fault_kwargs={"rate": 0.3})
+    with pytest.raises(ValueError, match="clients mesh"):
+        _cells(sim, [sc], mesh=make_client_mesh())
+
+
+@pytest.mark.multidevice
+def test_degrade_ladder_falls_back_to_vmap(sim):
+    """Faulted cells under a clients mesh walk the reduction ladder,
+    then fall back to vmap — recorded, logged, and bitwise equal to the
+    plain vmap run."""
+    from repro.experiments import make_client_mesh
+
+    sc = Scenario(name="d", scheduler="alg1", arrivals="periodic",
+                  n_clients=N, horizon=STEPS + 1, faults="drop",
+                  fault_kwargs={"rate": 0.3})
+    ref = _cells(sim, [sc])
+    got = _cells(sim, [sc], mesh=make_client_mesh(), degrade=True)
+    _assert_cells_bitwise(got["d"], ref["d"])
+    recs = engine.last_downgrades()
+    assert recs and recs[-1].stage == "placement"
+    assert recs[-1].to_value == "vmap"
+    assert "d" in recs[-1].group
+    # records are JSON-serializable for machine consumption
+    import json
+
+    assert json.loads(recs[-1].to_json())["stage"] == "placement"
+
+
+def test_no_downgrades_on_clean_run(sim):
+    sc = Scenario(name="c", scheduler="alg1", arrivals="periodic",
+                  n_clients=N, horizon=STEPS + 1)
+    _cells(sim, [sc], degrade=True)
+    assert engine.last_downgrades() == ()

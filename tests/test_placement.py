@@ -73,9 +73,9 @@ def test_flatten_cells_ordering():
     sch = {"x": jnp.arange(3.0)}          # S = 3 scenarios
     en = {"y": jnp.arange(30.0, 33.0)}
     keys = jnp.stack([jax.random.PRNGKey(s) for s in (7, 11)])  # R = 2
-    sch_c, en_c, active_c, p_c, keys_c = placement.flatten_cells(
+    sch_c, en_c, flt_c, active_c, p_c, keys_c = placement.flatten_cells(
         sch, en, keys, n_scenarios=3)
-    assert active_c is None and p_c is None
+    assert flt_c is None and active_c is None and p_c is None
     np.testing.assert_array_equal(np.asarray(sch_c["x"]),
                                   [0, 0, 1, 1, 2, 2])
     np.testing.assert_array_equal(np.asarray(en_c["y"]),
@@ -84,7 +84,7 @@ def test_flatten_cells_ordering():
                                   np.tile(np.asarray(keys), (3, 1)))
     # ragged operands (S, N_cap) repeat over seeds like the components
     active = jnp.asarray([[1.0, 0.0], [1.0, 1.0], [0.0, 1.0]])
-    _, _, active_c, p_c, _ = placement.flatten_cells(
+    _, _, _, active_c, p_c, _ = placement.flatten_cells(
         sch, en, keys, n_scenarios=3, active=active, p=active)
     np.testing.assert_array_equal(np.asarray(active_c),
                                   np.repeat(np.asarray(active), 2, axis=0))

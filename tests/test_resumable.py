@@ -1,0 +1,271 @@
+"""Preemption-safe execution tests (DESIGN.md §10).
+
+The contract under test: a checkpointed Study killed at *any* point —
+including ``kill -9`` between the npz write and the manifest update —
+resumes from its directory and produces results **bitwise identical** to
+the uninterrupted run. The kill/resume case is the one test in the suite
+that spawns a subprocess (it must actually die, not unwind).
+"""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import make_quadratic
+from repro.core.trainer import ClientSimulator
+from repro.experiments import ExecutionConfig, Scenario, Study, engine
+from repro.optim import sgd
+
+pytestmark = pytest.mark.faults
+
+N, DIM, STEPS = 8, 6, 30
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_quadratic(jax.random.PRNGKey(2), n_clients=N, dim=DIM)
+
+
+@pytest.fixture(scope="module")
+def sim(problem):
+    return ClientSimulator(
+        grads_fn=lambda p, k, t: problem.all_grads(p, key=k, noise=0.05),
+        p=problem.p, optimizer=sgd(0.02), loss_fn=problem.suboptimality)
+
+
+def _scenarios():
+    return [
+        Scenario(name="alg1_per", scheduler="alg1", arrivals="periodic",
+                 n_clients=N, horizon=STEPS + 1),
+        Scenario(name="alg1_drop", scheduler="alg1", arrivals="periodic",
+                 n_clients=N, horizon=STEPS + 1, faults="drop",
+                 fault_kwargs={"rate": 0.3}),
+        Scenario(name="bench_bin", scheduler="benchmark1", arrivals="binary",
+                 n_clients=6, horizon=STEPS + 1),
+    ]
+
+
+def params0():
+    return jnp.full((DIM,), 4.0)
+
+
+def _assert_results_bitwise(a, b):
+    assert list(a) == list(b)
+    for name in a:
+        for la, lb in zip(jax.tree_util.tree_leaves(a[name]),
+                          jax.tree_util.tree_leaves(b[name])):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                          err_msg=name)
+
+
+def test_chunked_equals_unchunked_equals_plain(sim, tmp_path):
+    """Chunked resumable execution (any chunk size) is bitwise the plain
+    batched engine — the scan is a pure function of the carry."""
+    ref = engine.execute_cells(_scenarios(), sim=sim, params0=params0(),
+                               num_steps=STEPS, seeds=3)
+    one = engine.execute_cells_resumable(
+        _scenarios(), sim=sim, params0=params0(), num_steps=STEPS, seeds=3,
+        checkpoint_dir=str(tmp_path / "one"), checkpoint_every=0)
+    chunked = engine.execute_cells_resumable(
+        _scenarios(), sim=sim, params0=params0(), num_steps=STEPS, seeds=3,
+        checkpoint_dir=str(tmp_path / "chunk"), checkpoint_every=7)
+    _assert_results_bitwise(one, ref)
+    _assert_results_bitwise(chunked, ref)
+
+
+def test_completed_dir_replays_without_advancing(sim, tmp_path):
+    """Re-running over a finished directory restores every group from
+    its final checkpoint — results bitwise equal to the first pass."""
+    kw = dict(sim=sim, params0=params0(), num_steps=STEPS, seeds=2,
+              checkpoint_dir=str(tmp_path / "ck"), checkpoint_every=10)
+    first = engine.execute_cells_resumable(_scenarios(), **kw)
+    again = engine.execute_cells_resumable(_scenarios(), **kw)
+    _assert_results_bitwise(again, first)
+    manifest = json.load(open(tmp_path / "ck" / "manifest.json"))
+    assert manifest["format"] == engine.MANIFEST_FORMAT
+    assert all(g["step"] == STEPS for g in manifest["groups"].values())
+
+
+def test_fingerprint_mismatch_refuses_resume(sim, tmp_path):
+    kw = dict(sim=sim, params0=params0(), num_steps=STEPS, seeds=2,
+              checkpoint_dir=str(tmp_path / "ck"))
+    engine.execute_cells_resumable(_scenarios(), **kw)
+    with pytest.raises(ValueError, match="fingerprint"):
+        engine.execute_cells_resumable(
+            _scenarios(), sim=sim, params0=params0() + 1.0, num_steps=STEPS,
+            seeds=2, checkpoint_dir=str(tmp_path / "ck"))
+
+
+def test_halt_on_divergence_quarantines_tail(sim, tmp_path):
+    """A fully-diverged group stops advancing between chunks; its unrun
+    tail reports NaN metrics with finite=False, and the manifest records
+    the halt. Clean sibling groups run to completion bitwise unchanged."""
+    bad = Scenario(name="poison", scheduler="alg1", arrivals="periodic",
+                   n_clients=N, horizon=STEPS + 1, faults="corrupt",
+                   fault_kwargs={"rate": 1.0, "scale": float("nan")})
+    scs = _scenarios()[:1] + [bad]
+    res = engine.execute_cells_resumable(
+        scs, sim=sim, params0=params0(), num_steps=STEPS, seeds=2,
+        checkpoint_dir=str(tmp_path / "ck"), checkpoint_every=10,
+        halt_on_divergence=True)
+    hist = res["poison"].history
+    assert np.asarray(hist.loss).shape[-1] == STEPS
+    assert not np.asarray(hist.finite).any()
+    assert np.isnan(np.asarray(hist.loss)[..., -1]).all()
+    assert np.all(np.asarray(res["poison"].diverged) == 0)
+    manifest = json.load(open(tmp_path / "ck" / "manifest.json"))
+    halted = [g for g in manifest["groups"].values() if g["halted"]]
+    assert len(halted) == 1 and halted[0]["step"] == 10
+
+    ref = engine.execute_cells(_scenarios()[:1], sim=sim, params0=params0(),
+                               num_steps=STEPS, seeds=2)
+    for la, lb in zip(jax.tree_util.tree_leaves(res["alg1_per"]),
+                      jax.tree_util.tree_leaves(ref["alg1_per"])):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_study_checkpointed_run(sim, tmp_path):
+    """Study.run(config=ExecutionConfig(checkpoint_dir=...)) routes to
+    the resumable engine and matches the unchunked Study bitwise."""
+    study = (Study("resume", num_steps=STEPS)
+             .axis("scheduler", "alg1").axis("arrivals", "periodic")
+             .axis("faults", [None, ("drop", {"rate": 0.3})])
+             .axis("seeds", 2))
+    plain = study.run(sim=sim, params0=params0())
+    ck = study.run(sim=sim, params0=params0(), config=ExecutionConfig(
+        checkpoint_dir=str(tmp_path / "ck"), checkpoint_every=8))
+    assert list(plain) == list(ck)
+    for name in plain:
+        np.testing.assert_array_equal(
+            np.asarray(plain[name].history.loss),
+            np.asarray(ck[name].history.loss), err_msg=name)
+    assert ck.downgrades == ()
+
+
+def test_study_checkpoint_config_conflicts(sim, tmp_path):
+    study = (Study("conflict", num_steps=STEPS)
+             .axis("scheduler", "alg1").axis("arrivals", "periodic")
+             .axis("seeds", 2))
+    cfg = ExecutionConfig(checkpoint_dir=str(tmp_path / "ck"),
+                          sequential=True)
+    with pytest.raises(ValueError, match="incompatible"):
+        study.run(sim=sim, params0=params0(), config=cfg)
+
+
+# ------------------------------------------------------ kill -9 / resume
+
+_CHILD = textwrap.dedent("""
+    import os, signal, sys
+    import jax, jax.numpy as jnp
+    from repro.checkpoint.checkpoint import CheckpointManager
+    from repro.core import make_quadratic
+    from repro.core.trainer import ClientSimulator
+    from repro.experiments import engine
+    from repro.experiments.scenario import Scenario
+
+    from repro.optim import sgd
+
+    ckdir, kill_after = sys.argv[1], int(sys.argv[2])
+    saves = 0
+    orig_save = CheckpointManager.save
+
+    def save(self, step, tree):
+        global saves
+        out = orig_save(self, step, tree)
+        saves += 1
+        if saves >= kill_after:
+            # SIGKILL mid-grid: after an npz landed, before (or between)
+            # manifest updates — the hardest crash window.
+            os.kill(os.getpid(), signal.SIGKILL)
+        return out
+
+    CheckpointManager.save = save
+
+    N, DIM, STEPS = 8, 6, 30
+    problem = make_quadratic(jax.random.PRNGKey(2), n_clients=N, dim=DIM)
+    sim = ClientSimulator(
+        grads_fn=lambda p, k, t: problem.all_grads(p, key=k, noise=0.05),
+        p=problem.p, optimizer=sgd(0.02), loss_fn=problem.suboptimality)
+    scenarios = [
+        Scenario(name="alg1_per", scheduler="alg1", arrivals="periodic",
+                 n_clients=N, horizon=STEPS + 1),
+        Scenario(name="alg1_drop", scheduler="alg1", arrivals="periodic",
+                 n_clients=N, horizon=STEPS + 1, faults="drop",
+                 fault_kwargs={"rate": 0.3}),
+        Scenario(name="bench_bin", scheduler="benchmark1", arrivals="binary",
+                 n_clients=6, horizon=STEPS + 1),
+    ]
+    engine.execute_cells_resumable(
+        scenarios, sim=sim, params0=jnp.full((DIM,), 4.0), num_steps=STEPS,
+        seeds=2, checkpoint_dir=ckdir, checkpoint_every=8)
+    raise SystemExit(99)  # must never get here
+""")
+
+
+def test_kill9_and_resume_bitwise(sim, tmp_path):
+    """Launch the study in a subprocess, SIGKILL it right after its
+    second checkpoint write (mid-grid, manifest possibly stale), then
+    resume in-process: the finished results must be bitwise identical to
+    a never-interrupted run. The only subprocess-spawning test in the
+    suite."""
+    ckdir = str(tmp_path / "ck")
+    script = tmp_path / "child.py"
+    script.write_text(_CHILD)
+    # repro is a namespace package (no __init__.py) — locate src via
+    # __path__ rather than __file__ (which is None).
+    src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, str(script), ckdir, "2"],
+                          env=env, capture_output=True, text=True,
+                          timeout=300)
+    assert proc.returncode == -signal.SIGKILL, (proc.returncode, proc.stderr)
+
+    # It really died mid-grid: some checkpoints exist, no complete study.
+    assert os.path.isdir(ckdir)
+    groups = [d for d in os.listdir(ckdir) if d.startswith("g")]
+    assert groups, os.listdir(ckdir)
+    manifest = json.load(open(os.path.join(ckdir, "manifest.json")))
+    assert any(g["step"] < STEPS for g in manifest["groups"].values())
+
+    resumed = engine.execute_cells_resumable(
+        _scenarios(), sim=sim, params0=params0(), num_steps=STEPS, seeds=2,
+        checkpoint_dir=ckdir, checkpoint_every=8)
+    ref = engine.execute_cells(_scenarios(), sim=sim, params0=params0(),
+                               num_steps=STEPS, seeds=2)
+    _assert_results_bitwise(resumed, ref)
+
+
+# --------------------------------------------------- train.py --resume
+
+def test_train_resume_matches_straight_run(tmp_path):
+    """launch.train --checkpoint-dir/--resume: preempt at half the steps
+    (--halt-at, so both legs build components for the same --steps
+    horizon), resume to the end — the resumed loss stream is bitwise the
+    straight run's tail."""
+    from repro.launch.train import main
+
+    def args(ckdir, *extra):
+        return ["--arch", "stablelm-1.6b", "--reduced",
+                "--steps", "12", "--global-batch", "4",
+                "--seq-len", "16", "--n-clients", "4",
+                "--scheduler", "alg1", "--arrivals", "periodic",
+                "--ckpt-every", "6", "--checkpoint-dir", str(ckdir), *extra]
+
+    straight = main(args(tmp_path / "a"))
+    halted = main(args(tmp_path / "b", "--halt-at", "6"))
+    resumed = main(args(tmp_path / "b", "--resume"))
+    assert len(straight) == 12 and len(halted) == 6 and len(resumed) == 6
+    np.testing.assert_array_equal(np.asarray(halted),
+                                  np.asarray(straight[:6]))
+    np.testing.assert_array_equal(np.asarray(resumed),
+                                  np.asarray(straight[6:]))

@@ -66,8 +66,8 @@ def test_unknown_study_and_grid_names():
 
 def test_axis_names_canonical_order():
     names = axis_names()
-    assert names[:6] == ["scheduler", "arrivals", "capacity", "n_clients",
-                         "taus_profile", "seeds"]
+    assert names[:7] == ["scheduler", "arrivals", "capacity", "n_clients",
+                         "taus_profile", "faults", "seeds"]
 
 
 def test_study_registry_names():
