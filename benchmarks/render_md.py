@@ -1,7 +1,22 @@
-"""Render the §Roofline markdown table from dryrun.json into EXPERIMENTS.md
-(replaces the <!-- ROOFLINE_TABLE --> marker block).
+"""Render benchmark results to markdown.
 
-    PYTHONPATH=src python -m benchmarks.render_md
+Two modes:
+
+* default — the §Roofline table from dryrun.json into EXPERIMENTS.md
+  (replaces the <!-- ROOFLINE_TABLE --> marker block):
+
+      PYTHONPATH=src python -m benchmarks.render_md
+
+* ``--bench BENCH_<date>.json`` — a bench-series/v1 perf-trajectory
+  file as grouped markdown tables, one section per series *family*
+  (``fig1_*``, ``quadgrid_*``, ``popscale_*``, ``largeN_*``,
+  ``faultpath_*``, ``serve_*``, ``theorem1_*``, kernels, roofline).
+  Names outside every known family land in an "other" section — a
+  series is never silently dropped, so a new family shows up (ugly but
+  visible) the day it first lands:
+
+      PYTHONPATH=src python -m benchmarks.render_md --bench \
+          BENCH_2026-08-08.json [--out serving.md]
 """
 
 from __future__ import annotations
@@ -15,6 +30,22 @@ RESULTS = os.path.join(HERE, "results", "dryrun.json")
 EXPERIMENTS = os.path.join(HERE, "..", "EXPERIMENTS.md")
 
 MARK = "<!-- ROOFLINE_TABLE -->"
+
+#: Ordered (prefix, section title) — first match wins; names matching
+#: no prefix go to "other" (never dropped).
+FAMILIES = (
+    ("fig1_", "Figure 1 grid"),
+    ("quadgrid_", "Quadratic grid (batched vs sharded)"),
+    ("popscale_", "Population scaling"),
+    ("largeN_", "Large-N client sharding"),
+    ("faultpath_", "Fault-injection path"),
+    ("serve_", "Study service"),
+    ("theorem1_", "Theorem 1 bound"),
+    ("aggregate_", "Kernel micro-benchmarks"),
+    ("attention_", "Kernel micro-benchmarks"),
+    ("gla_", "Kernel micro-benchmarks"),
+    ("roofline", "Roofline dry-run"),
+)
 
 
 def fmt(x):
@@ -62,6 +93,74 @@ def render() -> str:
     return "\n".join(out)
 
 
+def family_title(name: str) -> str:
+    for prefix, title in FAMILIES:
+        if str(name).startswith(prefix):
+            return title
+    return "other"
+
+
+def _fmt_value(v) -> str:
+    if isinstance(v, bool):
+        return str(v)
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def render_bench(doc: dict) -> str:
+    """bench-series/v1 document -> grouped markdown (module docstring).
+
+    Every record renders exactly once: known families under their
+    section, everything else under "other"."""
+    records = doc.get("results", [])
+    sections: dict[str, list] = {}
+    for rec in records:
+        sections.setdefault(family_title(rec.get("name")), []).append(rec)
+
+    header = [f"# Bench series ({doc.get('schema', '?')})",
+              "",
+              f"suites: {', '.join(doc.get('suites', []))} — "
+              f"fast={doc.get('fast')} devices={doc.get('device_count')}"]
+    if doc.get("failed"):
+        header.append(f"**FAILED**: {doc['failed']}")
+
+    titles = [t for _, t in FAMILIES] + ["other"]
+    seen, ordered = set(), []
+    for t in titles:
+        if t in sections and t not in seen:
+            ordered.append(t)
+            seen.add(t)
+
+    out = header
+    rendered = 0
+    for title in ordered:
+        out += ["", f"## {title}", "",
+                "| series | us/call | derived |", "|---|---|---|"]
+        for rec in sections[title]:
+            us = rec.get("us_per_call")
+            derived = "; ".join(
+                f"{k}={_fmt_value(v)}"
+                for k, v in sorted((rec.get("derived") or {}).items()))
+            out.append(f"| {rec.get('name')} | "
+                       f"{'—' if not us else f'{us:.0f}'} | {derived} |")
+            rendered += 1
+    assert rendered == len(records), "every series must render"
+    return "\n".join(out)
+
+
+def main_bench(path: str, out_path: str | None) -> None:
+    with open(path) as f:
+        doc = json.load(f)
+    text = render_bench(doc)
+    if out_path:
+        with open(out_path, "w") as f:
+            f.write(text + "\n")
+        print(f"rendered {len(doc.get('results', []))} series into {out_path}")
+    else:
+        print(text)
+
+
 def main():
     table = render()
     with open(EXPERIMENTS) as f:
@@ -77,4 +176,16 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="",
+                    help="render a BENCH_*.json series file instead of the "
+                         "roofline table")
+    ap.add_argument("--out", default="",
+                    help="with --bench: write markdown here instead of stdout")
+    args = ap.parse_args()
+    if args.bench:
+        main_bench(args.bench, args.out or None)
+    else:
+        main()

@@ -4,6 +4,8 @@
   theory         Theorem 1 bound vs empirical (+ error-floor sweep)
   kernels_bench  kernel-adjacent micro-benchmarks
   roofline_table dry-run roofline terms per (arch x shape x mesh)
+  serve_bench    Study service: batched throughput, request latency,
+                 executable-cache hit rate, single-trace collapse
 
 Prints ``name,us_per_call,derived`` CSV. Select with ``--only``. With
 ``--json PATH`` the rows are additionally written as structured JSON
@@ -101,6 +103,62 @@ def check_distinct_timings(records, threshold: int = 3) -> None:
             + "\n".join(lines))
 
 
+def check_serve_series(records) -> None:
+    """Validate the ``serve_*`` series family (suite ``serve_bench``).
+
+    A serve series that silently drops its derived counters would turn
+    the serving perf trajectory into bare wall times, so the schema is
+    enforced here: ``serve_latency`` must carry an ordered p50/p99 pair,
+    ``serve_cache`` a hit rate in [0, 1] with non-growing warm compiles,
+    and ``serve_collapse`` a positive compile count. Errors name the
+    offending series.
+    """
+    want = {
+        "serve_latency": ("p50_us", "p99_us"),
+        "serve_cache": ("hit_rate",),
+        "serve_collapse": ("compiles",),
+    }
+    by_name = {r.get("name"): r for r in records
+               if r.get("suite") == "serve_bench"}
+    if not by_name:
+        return
+    problems = []
+    for name in by_name:
+        if not str(name).startswith("serve_"):
+            problems.append(
+                f"series {name!r}: serve_bench series must be named "
+                f"serve_*")
+    for name, keys in want.items():
+        rec = by_name.get(name)
+        if rec is None:
+            problems.append(f"series {name!r} missing from serve_bench run")
+            continue
+        derived = rec.get("derived") or {}
+        missing = [k for k in keys if k not in derived]
+        if missing:
+            problems.append(
+                f"series {name!r}: missing derived field(s) {missing}")
+            continue
+        if name == "serve_latency" and derived["p50_us"] > derived["p99_us"]:
+            problems.append(
+                f"series {name!r}: p50_us={derived['p50_us']} > "
+                f"p99_us={derived['p99_us']}")
+        if name == "serve_cache" and not 0 <= derived["hit_rate"] <= 1:
+            problems.append(
+                f"series {name!r}: hit_rate={derived['hit_rate']} outside "
+                f"[0, 1]")
+        if name == "serve_cache" and derived.get("warm_compiles", 0) > 0:
+            problems.append(
+                f"series {name!r}: warm_compiles="
+                f"{derived['warm_compiles']} — repeat traffic recompiled")
+        if name == "serve_collapse" and not derived["compiles"] >= 1:
+            problems.append(
+                f"series {name!r}: compiles={derived['compiles']} < 1")
+    if problems:
+        raise ValueError("invalid serve_* series:\n  " +
+                         "\n  ".join(problems))
+
+
 def build_doc(selected, fast: bool, device_count: int, records, failed) -> dict:
     """The BENCH_*.json document — one pinned shape for every PR's
     perf-trajectory file."""
@@ -136,7 +194,8 @@ def main() -> None:
                          "the repo root when run as documented)")
     args = ap.parse_args()
 
-    suite_names = ("fig1", "theory", "kernels_bench", "roofline_table")
+    suite_names = ("fig1", "theory", "kernels_bench", "roofline_table",
+                   "serve_bench")
     selected = [s.strip() for s in args.only.split(",") if s.strip()] \
         or list(suite_names)
     unknown = [s for s in selected if s not in suite_names]
@@ -152,7 +211,8 @@ def main() -> None:
         from repro._env import ensure_host_device_count
         ensure_host_device_count(8)
     sys.path.insert(0, ".")  # examples/ imports
-    from benchmarks import fig1, kernels_bench, roofline_table, theory
+    from benchmarks import (fig1, kernels_bench, roofline_table, serve_bench,
+                            theory)
 
     fig1_kw = (dict(iters=40, seeds=8, n_clients=8) if args.fast
                else dict(iters=100, seeds=8, n_clients=8))
@@ -161,6 +221,7 @@ def main() -> None:
         "theory": theory.run,
         "kernels_bench": kernels_bench.run,
         "roofline_table": roofline_table.run,
+        "serve_bench": lambda: serve_bench.run(fast=args.fast),
     }
     assert set(suites) == set(suite_names)  # one source of suite names
 
@@ -180,6 +241,12 @@ def main() -> None:
     except ValueError:
         traceback.print_exc()
         failed.append("timing-attribution")
+
+    try:
+        check_serve_series(records)
+    except ValueError:
+        traceback.print_exc()
+        failed.append("serve-series")
 
     out_paths = [p for p in (args.json,) if p]
     if args.bench_out:

@@ -1,0 +1,98 @@
+"""Benchmark: the Study service under mixed-population request traffic.
+
+Measures the serve path end to end (DESIGN.md §11): a burst of
+mixed-population, single-structure manifests batched through
+StudyService, then repeat traffic against the warm executable cache.
+
+Series (all serve_*, validated by ``run.check_serve_series``):
+
+  serve_throughput  warm-cache wall time per batched flush;
+                    scenarios/sec in derived
+  serve_latency     p50/p99 per-request latency (submit -> response)
+                    over the warm rounds
+  serve_cache       repeat-traffic executable-cache behavior (hit rate,
+                    compiles — which must not grow after warmup)
+  serve_collapse    the single-trace collapse: distinct population
+                    sizes served per compile (us=0, derived-only)
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs, dtype=np.float64), q))
+
+
+def run(fast: bool = False) -> list[str]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.convergence import make_quadratic
+    from repro.experiments import Study
+    from repro.optim import sgd
+    from repro.serve import StudyService
+
+    num_steps = 40 if fast else 200
+    rounds = 3 if fast else 8
+    capacity, dim = 8, 8
+    populations = [3, 4, 5, 6, 7, 8, 3, 5]
+
+    prob = make_quadratic(jax.random.PRNGKey(0), capacity, dim=dim)
+    service = StudyService(
+        grads_fn=lambda w, k, t: prob.all_grads(w), p=prob.p,
+        optimizer=sgd(0.05), loss_fn=prob.suboptimality,
+        params0=jnp.zeros(dim), cache_size=16)
+
+    manifests = []
+    for i, n in enumerate(populations):
+        study = (Study(f"b{i}", num_steps=num_steps)
+                 .axis("scheduler", "alg2").axis("arrivals", "binary")
+                 .axis("n_clients", n).axis("seeds", [0, 1]))
+        manifests.append(study.to_json())
+
+    # cold round: compiles happen here
+    t0 = time.time()
+    for m in manifests:
+        service.submit(m)
+    service.flush()
+    cold_us = (time.time() - t0) * 1e6
+    cold = service.stats()
+
+    # warm rounds: repeat traffic, identical manifest set
+    walls, latencies = [], []
+    for _ in range(rounds):
+        t0 = time.time()
+        rids = [service.submit(m) for m in manifests]
+        responses = service.flush()
+        walls.append((time.time() - t0) * 1e6)
+        latencies += [r.timings["latency_us"] for r in responses]
+        del rids
+    warm = service.stats()
+
+    n_req = len(manifests)
+    warm_us = float(np.mean(walls))
+    scen_per_s = n_req / (warm_us / 1e6)
+    hits = warm["hits"] - cold["hits"]
+    misses = warm["misses"] - cold["misses"]
+    hit_rate = hits / max(1, hits + misses)
+    p50 = _percentile(latencies, 50)
+    p99 = _percentile(latencies, 99)
+
+    return [
+        f"serve_throughput,{warm_us:.0f},scenarios_per_s={scen_per_s:.2f};"
+        f"requests={n_req};cells={n_req};rounds={rounds};"
+        f"cold_us={cold_us:.0f}",
+        f"serve_latency,{p50:.0f},p50_us={p50:.0f};p99_us={p99:.0f};"
+        f"n={len(latencies)}",
+        f"serve_cache,0,hit_rate={hit_rate:.3f};hits={hits};misses={misses};"
+        f"evictions={warm['evictions']};compiles={warm['compiles']};"
+        f"warm_compiles={warm['compiles'] - cold['compiles']}",
+        f"serve_collapse,0,populations={len(set(populations))};"
+        f"compiles={cold['compiles']};"
+        f"single_trace={cold['compiles'] == 1};"
+        f"executable_entries={cold['executable_entries']}",
+    ]

@@ -9,6 +9,7 @@
 #   scripts/ci.sh tier1      # just the gate
 #   scripts/ci.sh multidevice ragged clientshard faults
 #   scripts/ci.sh kernels    # Pallas kernel suites + bench smoke
+#   scripts/ci.sh serve      # manifest/service suites + serve-bench smoke
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -35,13 +36,21 @@ run_stage() {
             python -m benchmarks.run --only kernels_bench --fast \
                 --json /tmp/bench_kernels_smoke.json >/dev/null
             ;;
-        *) echo "unknown stage: $1 (have tier1 multidevice ragged clientshard faults kernels)" >&2
+        serve)
+            # Study-as-a-service: manifest round-trips + the batching
+            # service suite, then a serve-bench smoke (the serve_* series
+            # must emit and pass their schema validator end-to-end).
+            stage serve -m serve
+            python -m benchmarks.run --only serve_bench --fast \
+                --json /tmp/bench_serve_smoke.json >/dev/null
+            ;;
+        *) echo "unknown stage: $1 (have tier1 multidevice ragged clientshard faults kernels serve)" >&2
            exit 2 ;;
     esac
 }
 
 if [ "$#" -eq 0 ]; then
-    set -- tier1 multidevice ragged clientshard faults kernels
+    set -- tier1 multidevice ragged clientshard faults kernels serve
 fi
 for s in "$@"; do
     run_stage "$s"

@@ -1,0 +1,75 @@
+"""Bounded LRU mapping with hit/miss/eviction accounting.
+
+One policy, two users (DESIGN.md §11): the serve layer's keyed
+executable cache (:class:`repro.serve.ExecutableCache`) and
+:meth:`repro.experiments.Study.simulator`'s memoization — both were
+unbounded dicts before PR 8, which a long-running service turns into a
+leak (every entry pins a jitted executable and the closures/datasets it
+captured). Lives outside both packages so the experiments layer never
+imports the serve layer.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable
+
+
+class LRUCache:
+    """Least-recently-used bounded mapping.
+
+    ``get`` refreshes recency and counts a hit or miss; ``put`` inserts
+    (refreshing recency on overwrite) and evicts the coldest entry past
+    ``maxsize``, invoking ``on_evict(key, value)`` so owners can release
+    per-entry resources. Counters survive :meth:`clear` — they describe
+    the cache's lifetime, not its current contents.
+    """
+
+    def __init__(self, maxsize: int = 32,
+                 on_evict: Callable[[Any, Any], None] | None = None):
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self.maxsize = int(maxsize)
+        self._data: OrderedDict = OrderedDict()
+        self._on_evict = on_evict
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key, default=None):
+        try:
+            value = self._data[key]
+        except KeyError:
+            self.misses += 1
+            return default
+        self._data.move_to_end(key)
+        self.hits += 1
+        return value
+
+    def put(self, key, value) -> None:
+        if key in self._data:
+            self._data.move_to_end(key)
+        self._data[key] = value
+        while len(self._data) > self.maxsize:
+            old_key, old_value = self._data.popitem(last=False)
+            self.evictions += 1
+            if self._on_evict is not None:
+                self._on_evict(old_key, old_value)
+
+    def __contains__(self, key) -> bool:  # no recency/counter side effects
+        return key in self._data
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def values(self):
+        return list(self._data.values())
+
+    def clear(self) -> None:
+        self._data.clear()
+
+    def stats(self) -> dict:
+        """Lifetime counters + current occupancy, one flat dict."""
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "size": len(self._data),
+                "maxsize": self.maxsize}

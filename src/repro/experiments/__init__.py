@@ -41,10 +41,23 @@ from repro.experiments.engine import (
     execute_cells_resumable,
     grid_summary,
     last_downgrades,
+    make_group_runner,
     population_mask,
     run_grid,
     run_grid_sequential,
+    structure_fingerprint,
     subpopulation_p,
+)
+from repro.experiments.manifest import (
+    EXEC_FORMAT,
+    REQUEST_FORMAT,
+    STUDY_FORMAT,
+    execution_config_from_manifest,
+    execution_config_to_manifest,
+    request_from_manifest,
+    request_to_manifest,
+    study_from_manifest,
+    study_to_manifest,
 )
 from repro.experiments.placement import (
     make_cell_mesh,
@@ -75,18 +88,24 @@ from repro.experiments.study import (
 )
 
 __all__ = [
-    "ARRIVAL_KINDS", "FIG1_SCHEDULERS", "PAPER_TAUS",
+    "ARRIVAL_KINDS", "EXEC_FORMAT", "FIG1_SCHEDULERS", "PAPER_TAUS",
+    "REQUEST_FORMAT", "STUDY_FORMAT",
     "AxisSpec", "CellResult", "DowngradeRecord", "ExecutionConfig",
     "GridResult", "Scenario", "Study",
     "axis_names", "build_components", "check_unique_names", "clear_cache",
     "default_metric", "default_taus", "divergence_summary", "execute_cells",
-    "execute_cells_resumable", "get_axis", "get_grid",
+    "execute_cells_resumable", "execution_config_from_manifest",
+    "execution_config_to_manifest", "get_axis", "get_grid",
     "get_study", "grid_names", "grid_summary", "last_downgrades",
     "make_cell_mesh",
     "make_client_mesh", "make_energy_process", "make_grid_mesh",
+    "make_group_runner",
     "population_mask", "register_axis",
     "register_grid", "register_study", "register_taus_profile",
+    "request_from_manifest", "request_to_manifest",
     "resolve_taus_profile", "run_client_sharded", "run_grid",
     "run_grid_sequential",
-    "scenario_grid", "seed_stats", "study_names", "subpopulation_p",
+    "scenario_grid", "seed_stats", "structure_fingerprint",
+    "study_from_manifest", "study_names", "study_to_manifest",
+    "subpopulation_p",
 ]

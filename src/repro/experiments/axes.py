@@ -58,6 +58,14 @@ class AxisSpec:
     axis value from a sweep list — needed because some single values are
     themselves sequences (an explicit taus profile, an
     ``(arrival_kind, kwargs)`` pair).
+
+    ``validate(value)`` — optional — checks one axis value against the
+    registry that owns it (scheduler / arrival-family / fault-family /
+    taus-profile names), raising ``ValueError`` that names the registry
+    and its valid keys. The manifest layer
+    (:mod:`repro.experiments.manifest`) calls it on every decoded value
+    so a bad name fails at ``from_json`` time, not deep inside
+    ``Scenario.build``.
     """
 
     name: str
@@ -65,17 +73,19 @@ class AxisSpec:
     fmt: Callable[[Any, bool], str | None]
     is_value: Callable[[Any], bool] = _default_is_value
     doc: str = ""
+    validate: Callable[[Any], None] | None = None
 
 
 _AXES: dict[str, AxisSpec] = {}
 
 
 def register_axis(name: str, *, apply, fmt=None, is_value=None,
-                  doc: str = "") -> AxisSpec:
+                  doc: str = "", validate=None) -> AxisSpec:
     """Register a sweep axis. ``fmt`` defaults to omit-from-name."""
     spec = AxisSpec(name=name, apply=apply,
                     fmt=fmt or (lambda v, fixed: None),
-                    is_value=is_value or _default_is_value, doc=doc)
+                    is_value=is_value or _default_is_value, doc=doc,
+                    validate=validate)
     _AXES[name] = spec
     return spec
 
@@ -138,6 +148,51 @@ def _fmt_taus(profile, fixed: bool) -> str | None:
 
 # ------------------------------------------------------------ built-in axes
 
+def _validate_scheduler(value) -> None:
+    from repro.core.scheduling import scheduler_names
+
+    if value not in scheduler_names():
+        raise ValueError(
+            f"unknown scheduler {value!r}; scheduler registry has "
+            f"{scheduler_names()}")
+
+
+def _family_kind(value):
+    """The family name of a ``kind`` / ``(kind, kwargs)`` axis value."""
+    if isinstance(value, tuple) and len(value) == 2:
+        return value[0]
+    return value
+
+
+def _validate_arrivals(value) -> None:
+    from repro.core.energy import arrival_family_names
+
+    kind = _family_kind(value)
+    if kind not in arrival_family_names():
+        raise ValueError(
+            f"unknown arrival family {kind!r}; arrival-family registry "
+            f"has {arrival_family_names()}")
+
+
+def _validate_faults(value) -> None:
+    if value is None:  # the fault-free program
+        return
+    from repro.core.faults import fault_family_names
+
+    kind = _family_kind(value)
+    if kind not in fault_family_names():
+        raise ValueError(
+            f"unknown fault family {kind!r}; fault-family registry has "
+            f"{fault_family_names()}")
+
+
+def _validate_taus_profile(value) -> None:
+    if isinstance(value, str) and value not in _TAUS_PROFILES:
+        raise ValueError(
+            f"unknown taus profile {value!r}; taus-profile registry has "
+            f"{sorted(_TAUS_PROFILES)}")
+
+
 def _apply_scheduler(draft: dict, value) -> None:
     draft["scheduler"] = str(value)
 
@@ -191,10 +246,11 @@ def _taus_is_value(v) -> bool:
 
 register_axis(
     "scheduler", apply=_apply_scheduler, fmt=lambda v, fixed: str(v),
+    validate=_validate_scheduler,
     doc="scheduler registry name (repro.core.scheduling)")
 register_axis(
     "arrivals", apply=_apply_arrivals, fmt=_fmt_arrivals,
-    is_value=_arrivals_is_value,
+    is_value=_arrivals_is_value, validate=_validate_arrivals,
     doc="arrival-family name (repro.core.energy), or (kind, kwargs)")
 register_axis(
     "capacity", apply=_apply_capacity,
@@ -208,7 +264,7 @@ register_axis(
         "so every N shares one structure group")
 register_axis(
     "taus_profile", apply=_apply_taus_profile, fmt=_fmt_taus,
-    is_value=_taus_is_value,
+    is_value=_taus_is_value, validate=_validate_taus_profile,
     doc="per-client energy-period profile: registered name, sequence, "
         "or callable(n)")
 
@@ -236,7 +292,7 @@ def _faults_is_value(v) -> bool:
 
 register_axis(
     "faults", apply=_apply_faults, fmt=_fmt_faults,
-    is_value=_faults_is_value,
+    is_value=_faults_is_value, validate=_validate_faults,
     doc="fault-family name (repro.core.faults), (kind, kwargs), or None "
         "for the fault-free program; faulted and fault-free cells group "
         "into separate compiled structures")

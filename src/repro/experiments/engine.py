@@ -165,11 +165,32 @@ def divergence_summary(results: dict[str, "CellResult"]) -> dict[str, dict]:
     return out
 
 
+def _group_body(scheduler, energy, faults, active, p, params0, keys, *,
+                sim: ClientSimulator, num_steps: int, eval_fn=None,
+                eval_every: int = 0):
+    """vmap(scenario axis) ∘ vmap(seed axis) over one simulator scan —
+    the shared computation behind :data:`_run_group` (process-global jit
+    cache) and :func:`make_group_runner` (per-instance evictable cache,
+    the serve layer's executable store). Both wrappers trace the same
+    body, so their compiled programs are identical and results are
+    bitwise interchangeable."""
+
+    def one(sch, en, flt, act, pw, key):
+        out = sim.run(key, params0, num_steps, scheduler=sch, energy=en,
+                      faults=flt, p=pw, active_mask=act,
+                      eval_fn=eval_fn, eval_every=eval_every)
+        return CellResult(*out) if eval_fn is not None else CellResult(*out, None)
+
+    over_seeds = jax.vmap(one, in_axes=(None, None, None, None, None, 0))
+    over_scenarios = jax.vmap(over_seeds, in_axes=(0, 0, 0, 0, 0, None))
+    return over_scenarios(scheduler, energy, faults, active, p, keys)
+
+
 @partial(jax.jit, static_argnames=("sim", "num_steps", "eval_fn", "eval_every"))
 def _run_group(scheduler, energy, faults, active, p, params0, keys, *,
                sim: ClientSimulator, num_steps: int, eval_fn=None,
                eval_every: int = 0):
-    """vmap(scenario axis) ∘ vmap(seed axis) over one simulator scan.
+    """Process-global jit wrapper of :func:`_group_body`.
 
     ``scheduler`` / ``energy`` / ``faults`` leaves carry a leading
     scenario axis S (``faults`` is None for fault-free groups);
@@ -182,18 +203,42 @@ def _run_group(scheduler, energy, faults, active, p, params0, keys, *,
     distinct closure (and the datasets it captures) stays referenced by
     the jit cache for process lifetime. Benchmarks and tests are short
     lived; a long-running service issuing many distinct grids should
-    call :func:`clear_cache` between sweeps.
+    route execution through an ``executable_cache``
+    (:class:`repro.serve.ExecutableCache` — bounded, per-entry eviction)
+    or call :func:`clear_cache` between sweeps.
+    """
+    return _group_body(scheduler, energy, faults, active, p, params0, keys,
+                       sim=sim, num_steps=num_steps, eval_fn=eval_fn,
+                       eval_every=eval_every)
+
+
+def make_group_runner(*, sim: ClientSimulator, num_steps: int, eval_fn=None,
+                      eval_every: int = 0, on_trace=None):
+    """A *fresh* jit wrapper around :func:`_group_body`.
+
+    Unlike :data:`_run_group` — whose cache is process-global and only
+    clearable wholesale — each runner owns its jit cache, so dropping
+    the runner (e.g. on LRU eviction from
+    :class:`repro.serve.ExecutableCache`) releases its compiled
+    executables and the closures they pin. ``on_trace`` is called each
+    time the body is (re)traced — i.e. on every new compilation — which
+    is how the serve layer counts compiles without jax internals.
     """
 
-    def one(sch, en, flt, act, pw, key):
-        out = sim.run(key, params0, num_steps, scheduler=sch, energy=en,
-                      faults=flt, p=pw, active_mask=act,
-                      eval_fn=eval_fn, eval_every=eval_every)
-        return CellResult(*out) if eval_fn is not None else CellResult(*out, None)
+    def _runner(scheduler, energy, faults, active, p, params0, keys):
+        if on_trace is not None:
+            on_trace()
+        return _group_body(scheduler, energy, faults, active, p, params0,
+                           keys, sim=sim, num_steps=num_steps,
+                           eval_fn=eval_fn, eval_every=eval_every)
 
-    over_seeds = jax.vmap(one, in_axes=(None, None, None, None, None, 0))
-    over_scenarios = jax.vmap(over_seeds, in_axes=(0, 0, 0, 0, 0, None))
-    return over_scenarios(scheduler, energy, faults, active, p, keys)
+    return jax.jit(_runner)
+
+
+def structure_fingerprint(group_key) -> str:
+    """Short stable digest of a :func:`_group_key` trace signature —
+    the cache-key / response-visible name of one component structure."""
+    return hashlib.sha256(str(group_key).encode()).hexdigest()[:12]
 
 
 def clear_cache() -> None:
@@ -307,6 +352,7 @@ def execute_cells(
     sequential: bool = False,
     client_reduction: str = "psum",
     degrade: bool = False,
+    executable_cache=None,
 ) -> dict[str, CellResult]:
     """Execute scenario × seed cells with a prebuilt simulator.
 
@@ -347,6 +393,16 @@ def execute_cells(
     exhausted, on the single-device vmap path. Every move is logged and
     recorded (:func:`last_downgrades`). Off by default — precondition
     errors raise, as before.
+
+    ``executable_cache`` (vmap path only; DESIGN.md §11) replaces the
+    process-global :data:`_run_group` jit cache with a caller-owned
+    keyed store: each structure group dispatches through
+    ``executable_cache.group_runner((group_key, ragged), sim=...,
+    num_steps=..., eval_fn=..., eval_every=...)`` — a
+    :func:`make_group_runner`-style jit callable the cache may memoize,
+    bound, and evict. This is how :class:`repro.serve.StudyService`
+    turns repeat traffic into pure dispatch while keeping executable
+    memory bounded.
     """
     scenarios = list(scenarios)
     del _LAST_DOWNGRADES[:]
@@ -417,7 +473,7 @@ def execute_cells(
         groups.setdefault(_group_key(sch, en, flt), []).append(idx)
 
     results: list[CellResult | None] = [None] * len(scenarios)
-    for members in groups.values():
+    for gkey, members in groups.items():
         ragged = any(scenarios[i].n_clients != n_cap for i in members)
         sch_batch = _stack([padded[i][0] for i in members])
         en_batch = _stack([padded[i][1] for i in members])
@@ -431,6 +487,12 @@ def execute_cells(
             active_batch, p_batch = jnp.stack(masks), jnp.stack(ps)
 
         def run_vmap():
+            if executable_cache is not None:
+                runner = executable_cache.group_runner(
+                    (gkey, ragged), sim=sim, num_steps=num_steps,
+                    eval_fn=eval_fn, eval_every=eval_every)
+                return runner(sch_batch, en_batch, flt_batch, active_batch,
+                              p_batch, params0, keys)
             return _run_group(sch_batch, en_batch, flt_batch, active_batch,
                               p_batch, params0, keys, sim=sim,
                               num_steps=num_steps, eval_fn=eval_fn,

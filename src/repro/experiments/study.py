@@ -35,11 +35,20 @@ from typing import Any, Callable, Sequence
 
 import numpy as np
 
+from repro._lru import LRUCache
 from repro.core.trainer import ClientSimulator
 from repro.experiments import engine
 from repro.experiments.axes import AXIS_ORDER, get_axis
 from repro.experiments.results import GridResult
 from repro.experiments.scenario import FIG1_SCHEDULERS, Scenario
+
+#: Bound on the per-Study simulator memoization (:meth:`Study.simulator`).
+#: Each entry pins a ClientSimulator — and, transitively, every compiled
+#: executable the engine's jit cache keyed on it plus the datasets its
+#: grads_fn closure captured — so the cache must not grow without bound
+#: in a long-running process (DESIGN.md §11). LRU with the same policy
+#: as the serve layer's executable cache (:mod:`repro._lru`).
+SIM_CACHE_SIZE = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +101,33 @@ class ExecutionConfig:
     checkpoint_keep: int = 3
     halt_on_divergence: bool = False
 
+    # ------------------------------------------------------ serialization
+
+    def to_manifest(self) -> dict:
+        """``execution-config/v1`` envelope (DESIGN.md §11). ``mesh`` /
+        ``eval_fn`` hold live objects and must be None — manifests run
+        the vmap path."""
+        from repro.experiments import manifest
+
+        return manifest.execution_config_to_manifest(self)
+
+    def to_json(self, **json_kw) -> str:
+        import json
+
+        return json.dumps(self.to_manifest(), **json_kw)
+
+    @classmethod
+    def from_manifest(cls, doc: dict) -> "ExecutionConfig":
+        from repro.experiments import manifest
+
+        return manifest.execution_config_from_manifest(doc)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ExecutionConfig":
+        from repro.experiments import manifest
+
+        return manifest.execution_config_from_manifest(manifest.loads(text))
+
 
 class Study:
     """Declarative sweep spec: named axes × a step budget.
@@ -109,7 +145,7 @@ class Study:
         self.num_steps = int(num_steps)
         self._axes: dict[str, tuple] = {}
         self._fixed: set[str] = set()
-        self._sim_cache: dict = {}
+        self._sim_cache = LRUCache(maxsize=SIM_CACHE_SIZE)
         for axis, values in (axes or {}).items():
             self.axis(axis, values)
 
@@ -145,6 +181,35 @@ class Study:
 
     def seeds(self) -> int | Sequence[int]:
         return self._axes.get("seeds", 8)
+
+    # -------------------------------------------------------- serialization
+
+    def to_manifest(self) -> dict:
+        """``study/v1`` envelope: name, step budget, ordered axes with
+        fixed/swept flags, seeds (:mod:`repro.experiments.manifest`)."""
+        from repro.experiments import manifest
+
+        return manifest.study_to_manifest(self)
+
+    def to_json(self, **json_kw) -> str:
+        import json
+
+        return json.dumps(self.to_manifest(), **json_kw)
+
+    @classmethod
+    def from_manifest(cls, doc: dict) -> "Study":
+        """Decode a ``study/v1`` envelope — typed-config-from-dict over
+        the axis/scheduler/arrival/fault registries; unknown names raise
+        naming the registry and its valid keys."""
+        from repro.experiments import manifest
+
+        return manifest.study_from_manifest(doc)
+
+    @classmethod
+    def from_json(cls, text: str) -> "Study":
+        from repro.experiments import manifest
+
+        return manifest.study_from_manifest(manifest.loads(text))
 
     def _seed_values(self) -> tuple:
         seeds = self.seeds()
@@ -196,6 +261,12 @@ class Study:
         methods like ``problem.suboptimality`` are a fresh object per
         attribute access but compare equal); the weight vector ``p`` by
         value.
+
+        The memoization is a **bounded LRU** (:data:`SIM_CACHE_SIZE`
+        entries): a long-running driver cycling through many distinct
+        problems evicts the coldest simulator instead of pinning every
+        executable-plus-dataset ever built. :meth:`cache_stats` /
+        :meth:`clear_cache` expose the counters.
         """
         key = (grads_fn, optimizer, loss_fn, use_kernel,
                tuple(np.asarray(p, np.float32).reshape(-1).tolist()))
@@ -203,8 +274,25 @@ class Study:
         if sim is None:
             sim = ClientSimulator(grads_fn=grads_fn, p=p, optimizer=optimizer,
                                   loss_fn=loss_fn, use_kernel=use_kernel)
-            self._sim_cache[key] = sim
+            self._sim_cache.put(key, sim)
         return sim
+
+    def cache_stats(self) -> dict:
+        """Hit/miss/eviction counters + occupancy of the simulator
+        memoization (:meth:`simulator`)."""
+        return self._sim_cache.stats()
+
+    def clear_cache(self, *, engine_caches: bool = True) -> dict:
+        """Drop the study's memoized simulators — and, by default, the
+        engine's compiled-executable caches they key (an evicted
+        simulator alone would stay pinned by the process-global jit
+        cache). Returns the final :meth:`cache_stats` snapshot so
+        callers can log what the cache did before it was dropped."""
+        stats = self._sim_cache.stats()
+        self._sim_cache.clear()
+        if engine_caches:
+            engine.clear_cache()
+        return stats
 
     def run(self, *, params0, grads_fn=None, p=None, optimizer=None,
             loss_fn=None, use_kernel: bool = False,

@@ -1,84 +1,111 @@
-"""Batched serving driver: greedy decode with KV cache.
+"""Scenario-serving driver: Study manifests in, batched results out.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-vl-2b \
-        --reduced --batch 4 --prompt-len 16 --new-tokens 32
+Front end of :class:`repro.serve.StudyService` (DESIGN.md §11). The
+driver owns the model context — a synthetic heterogeneous quadratic
+population at ``--capacity`` — and serves JSON Study manifests against
+it, batching every submitted request through the structure-grouped
+engine so same-structure studies (any mix of population sizes) share
+one compiled trace:
+
+    # serve manifest files
+    PYTHONPATH=src python -m repro.launch.serve m1.json m2.json
+
+    # self-contained demo batch: 8 mixed-population requests,
+    # one structure, one compile
+    PYTHONPATH=src python -m repro.launch.serve --demo
+
+Prints one summary line per request (cells, quarantined cells, latency)
+plus the batch/cache counters that show the single-trace collapse.
+Replaces the seed-era LM decode driver; `examples/serve_batch.py` is
+the scripted client-side walkthrough.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config
-from repro.launch.steps import make_serve_step
-from repro.models import encode, init_decode_state, init_lm
-from repro.models.transformer import decode_cache_len
+from repro.core.convergence import make_quadratic
+from repro.experiments import Study
+from repro.optim import sgd
+from repro.serve import StudyService
+
+
+def demo_manifests(n_requests: int = 8, num_steps: int = 60,
+                   capacity: int = 8, seeds=(0, 1)) -> list[str]:
+    """Mixed-population, single-structure request burst: every study is
+    the same scheduler × arrival structure at a different population
+    size N ≤ capacity — the shape the service collapses onto one trace."""
+    sizes = [3 + (i % (capacity - 2)) for i in range(n_requests)]
+    out = []
+    for i, n in enumerate(sizes):
+        study = (Study(f"demo{i}", num_steps=num_steps)
+                 .axis("scheduler", "alg1")
+                 .axis("arrivals", "periodic")
+                 .axis("n_clients", int(n))
+                 .axis("seeds", list(seeds)))
+        out.append(study.to_json())
+    return out
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--new-tokens", type=int, default=32)
-    ap.add_argument("--max-len", type=int, default=128)
+    ap = argparse.ArgumentParser(
+        description="serve Study manifests against a shared model context")
+    ap.add_argument("manifests", nargs="*",
+                    help="paths to study/v1 or study-request/v1 JSON files")
+    ap.add_argument("--demo", action="store_true",
+                    help="serve a built-in mixed-population demo batch")
+    ap.add_argument("--demo-requests", type=int, default=8)
+    ap.add_argument("--demo-steps", type=int, default=60)
+    ap.add_argument("--capacity", type=int, default=8,
+                    help="model-context population capacity N_cap")
+    ap.add_argument("--dim", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--cache-size", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    key = jax.random.PRNGKey(args.seed)
-    k_param, k_prompt = jax.random.split(key)
-    params = init_lm(k_param, cfg)
+    if not args.manifests and not args.demo:
+        ap.error("give manifest files or --demo")
 
-    cache_len = decode_cache_len(cfg, args.max_len)
-    states = init_decode_state(cfg, args.batch, cache_len)
-    serve = jax.jit(make_serve_step(cfg), donate_argnums=(2,))
+    payloads = []
+    for path in args.manifests:
+        with open(path) as f:
+            payloads.append((path, f.read()))
+    if args.demo:
+        payloads += [(f"demo[{i}]", m) for i, m in enumerate(demo_manifests(
+            args.demo_requests, args.demo_steps, args.capacity))]
 
-    memory = None
-    if cfg.enc_dec:
-        memory = encode(params, cfg,
-                        jnp.zeros((args.batch, cfg.enc_len, cfg.d_model),
-                                  cfg.dtype))
+    prob = make_quadratic(jax.random.PRNGKey(args.seed), args.capacity,
+                          dim=args.dim)
+    service = StudyService(
+        grads_fn=lambda w, k, t: prob.all_grads(w), p=prob.p,
+        optimizer=sgd(args.lr), params0=jnp.zeros(args.dim),
+        cache_size=args.cache_size)
 
-    prompt = jax.random.randint(
-        k_prompt, (args.batch, args.prompt_len), 0, cfg.vocab, jnp.int32)
+    rids = {}
+    for origin, text in payloads:
+        rids[service.submit(text)] = origin
+    responses = service.flush()
 
-    def step(tok, states, pos):
-        if cfg.enc_dec:
-            return serve(params, tok, states, jnp.asarray(pos), memory)
-        return serve(params, tok, states, jnp.asarray(pos))
-
-    # Prefill by sequential cache writes (teacher-forced prompt tokens).
-    t0 = time.time()
-    tok = prompt[:, :1]
-    for pos in range(args.prompt_len):
-        tok_in = prompt[:, pos:pos + 1]
-        next_tok, logits, states = step(tok_in, states, pos)
-    prefill_s = time.time() - t0
-
-    out_tokens = []
-    t0 = time.time()
-    tok = next_tok[:, None]
-    for i in range(args.new_tokens):
-        next_tok, logits, states = step(tok, states, args.prompt_len + i)
-        out_tokens.append(next_tok)
-        tok = next_tok[:, None]
-    jax.block_until_ready(next_tok)
-    decode_s = time.time() - t0
-
-    toks = jnp.stack(out_tokens, axis=1)
-    print(f"arch={cfg.name} batch={args.batch} "
-          f"prefill {args.prompt_len} tok in {prefill_s:.2f}s; "
-          f"decode {args.new_tokens} tok in {decode_s:.2f}s "
-          f"({args.batch * args.new_tokens / decode_s:.1f} tok/s)")
-    print("sample tokens:", toks[0, :16].tolist())
-    return toks
+    for resp in responses:
+        origin = rids.get(resp.request_id, "?")
+        if resp.error is not None:
+            print(f"{resp.request_id} {resp.study!r} ({origin}): "
+                  f"ERROR {resp.error}")
+            continue
+        quarantined = (f" quarantined={resp.quarantined}"
+                       if resp.quarantined else "")
+        print(f"{resp.request_id} {resp.study!r} ({origin}): "
+              f"{len(resp.records)} cell(s), "
+              f"latency {resp.timings['latency_us'] / 1e3:.1f} ms"
+              f"{quarantined}")
+    stats = service.stats()
+    print("service:", json.dumps(stats, sort_keys=True))
+    return responses
 
 
 if __name__ == "__main__":

@@ -1,0 +1,33 @@
+"""Study-as-a-service: manifests in, batched execution, labeled results out.
+
+* :mod:`repro.serve.cache` — :class:`ExecutableCache`, the bounded LRU
+  of (structure fingerprint, ExecutionConfig)-keyed jit runners with
+  hit/miss/eviction/compile counters.
+* :mod:`repro.serve.service` — :class:`StudyService` (submit / flush /
+  wait over serialized Study manifests, structure-batched through
+  :func:`repro.experiments.engine.execute_cells`) and
+  :class:`BackgroundServer` (the batching-window flush thread).
+
+The wire format lives in :mod:`repro.experiments.manifest`; the key
+pieces are re-exported here so a client script needs one import.
+"""
+
+from repro.experiments.manifest import (
+    EXEC_FORMAT,
+    REQUEST_FORMAT,
+    STUDY_FORMAT,
+    request_from_manifest,
+    request_to_manifest,
+    study_from_manifest,
+    study_to_manifest,
+)
+from repro.serve.cache import BoundExecutableCache, ExecutableCache
+from repro.serve.service import BackgroundServer, ServeResponse, StudyService
+
+__all__ = [
+    "EXEC_FORMAT", "REQUEST_FORMAT", "STUDY_FORMAT",
+    "BackgroundServer", "BoundExecutableCache", "ExecutableCache",
+    "ServeResponse", "StudyService",
+    "request_from_manifest", "request_to_manifest",
+    "study_from_manifest", "study_to_manifest",
+]

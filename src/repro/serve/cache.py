@@ -1,0 +1,96 @@
+"""Keyed executable cache: (structure fingerprint, config) → jit runner.
+
+The engine's process-global jit cache (:data:`repro.experiments.engine.
+_run_group`) grows monotonically and can only be cleared wholesale —
+fine for a benchmark, wrong for a service. :class:`ExecutableCache`
+replaces it on the serve path (``execute_cells(...,
+executable_cache=)``): each distinct (component structure, execution
+config, step budget, eval hook) gets its **own** jit wrapper
+(:func:`repro.experiments.engine.make_group_runner`), stored in a
+bounded LRU (:mod:`repro._lru`). A cache hit makes repeat traffic pure
+dispatch (the runner's jit cache holds the compiled program); eviction
+drops the runner object, releasing its executables and pinned closures.
+
+Compiles are counted by the runner's ``on_trace`` hook — the python body
+executes exactly once per (re)trace — so ``stats()["compiles"]`` is a
+jit-cache-entry count that needs no jax internals, and tests can assert
+the single-trace collapse (a mixed-population batch of one structure
+compiles once) directly.
+"""
+
+from __future__ import annotations
+
+from repro._lru import LRUCache
+from repro.experiments import engine
+
+
+class ExecutableCache:
+    """Bounded LRU of group runners, keyed on (structure, config, …).
+
+    ``group_runner`` is the protocol :func:`repro.experiments.engine.
+    execute_cells` calls per structure group: ``key`` is the engine's
+    hashable trace signature (group key + raggedness); the cache widens
+    it with the runner-defining arguments (``sim`` identity, step
+    budget, eval hook) plus any :meth:`bind`-time extras (the serve
+    layer binds the request's ExecutionConfig). Distinct batch *shapes*
+    under one key re-trace inside the same runner — counted as compiles,
+    not as new cache entries.
+    """
+
+    def __init__(self, maxsize: int = 32):
+        self._lru = LRUCache(maxsize=maxsize)
+        self._compiles = 0
+
+    def _on_trace(self) -> None:
+        self._compiles += 1
+
+    def group_runner(self, key, *, sim, num_steps: int, eval_fn=None,
+                     eval_every: int = 0, extra=()):
+        full_key = (key, tuple(extra), sim, int(num_steps), eval_fn,
+                    int(eval_every))
+        runner = self._lru.get(full_key)
+        if runner is None:
+            runner = engine.make_group_runner(
+                sim=sim, num_steps=num_steps, eval_fn=eval_fn,
+                eval_every=eval_every, on_trace=self._on_trace)
+            self._lru.put(full_key, runner)
+        return runner
+
+    def bind(self, *extra) -> "BoundExecutableCache":
+        """A view whose keys are widened with ``extra`` (hashable) —
+        e.g. one request's ExecutionConfig, so two configs never share
+        an executable entry."""
+        return BoundExecutableCache(self, extra)
+
+    def fingerprint(self, key) -> str:
+        """Response-visible digest of one structure key."""
+        return engine.structure_fingerprint(key)
+
+    def cache_entries(self) -> int:
+        """Total jit-cache entries across the live runners — the
+        compiled-program count the single-trace assertions probe."""
+        return sum(r._cache_size() for r in self._lru.values())
+
+    def stats(self) -> dict:
+        return {**self._lru.stats(), "compiles": self._compiles}
+
+    def clear(self) -> dict:
+        """Drop every runner (their executables become collectable);
+        returns the final stats snapshot."""
+        stats = self.stats()
+        self._lru.clear()
+        return stats
+
+
+class BoundExecutableCache:
+    """:meth:`ExecutableCache.bind` view — same store, widened keys."""
+
+    def __init__(self, cache: ExecutableCache, extra: tuple):
+        self._cache = cache
+        self._extra = tuple(extra)
+
+    def group_runner(self, key, **kw):
+        return self._cache.group_runner(key, extra=self._extra, **kw)
+
+    def stats(self) -> dict:
+        return self._cache.stats()

@@ -1,0 +1,358 @@
+"""Structure-batched Study service: manifests in, labeled results out.
+
+:class:`StudyService` is the request-driven front end of the scenario
+engine (DESIGN.md §11). The service owns the *model context* — one
+:class:`~repro.core.trainer.ClientSimulator` (grads_fn, weights,
+optimizer) and the initial parameters — while clients submit
+**manifests** (:mod:`repro.experiments.manifest`): what to run, never
+code. The pipeline per batch:
+
+1. **Admit** — :meth:`submit` parses/validates the manifest (unknown
+   registry names fail here, naming the registry), resolves its cells,
+   and checks the population capacity. Invalid requests raise at submit;
+   admitted requests queue.
+2. **Batch** — :meth:`flush` drains the queue and groups requests by
+   dispatch signature (step budget, seed list, ExecutionConfig). Each
+   group's cells — across *all* its requests — go to
+   :func:`repro.experiments.engine.execute_cells` as one scenario list,
+   so the engine's structure grouping applies across requests: any mix
+   of population sizes of one component structure shares a single
+   compiled trace (the PR 4 invariant), and repeat structures are pure
+   dispatch through the keyed :class:`~repro.serve.cache.
+   ExecutableCache`.
+3. **Demux** — results are split back per request (cell names are
+   namespaced ``<rid>/<cell>`` on the wire and restored in responses),
+   each response carrying its own labeled :class:`~repro.experiments.
+   GridResult`, summary records, quarantine report (diverged cells are
+   *reported*, per PR 7 semantics — they never fail sibling cells or
+   sibling requests), cache/batching counters and timings.
+
+Execution errors fail only the dispatch group that raised — sibling
+groups' responses still complete, and every waiter is released.
+
+:class:`BackgroundServer` runs the flush loop on a worker thread with a
+small batching window, which is what gives concurrent submitters the
+cross-request structure collapse.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from typing import Any, Callable, Sequence
+
+from repro.experiments import engine, manifest as manifest_mod
+from repro.experiments.results import GridResult
+from repro.experiments.study import ExecutionConfig, Study
+from repro.serve.cache import ExecutableCache
+
+#: ExecutionConfig fields a manifest-driven request must leave unset:
+#: they either carry live objects (mesh, eval_fn) or select execution
+#: paths the batching engine does not serve (sequential baseline,
+#: resumable checkpointing — run those through Study.run directly).
+_UNSERVABLE = ("mesh", "eval_fn", "sequential", "checkpoint_dir")
+
+
+@dataclasses.dataclass
+class ServeResponse:
+    """One request's result envelope.
+
+    ``records`` are :meth:`GridResult.to_records` rows (per-cell seed
+    stats + quarantine fields); ``quarantined`` names the cells with at
+    least one diverged seed; ``batch`` describes the dispatch this
+    request shared (sibling request count, merged cell count, structure
+    dispatches, new compiles); ``cache`` is the executable-cache
+    snapshot after the dispatch; ``timings`` carries per-request
+    ``latency_us`` (submit → response) and the batch's ``execute_us``.
+    ``error`` is set — and result fields empty — when the request's
+    dispatch group failed.
+    """
+
+    request_id: str
+    study: str
+    records: list = dataclasses.field(default_factory=list)
+    divergence: dict = dataclasses.field(default_factory=dict)
+    quarantined: list = dataclasses.field(default_factory=list)
+    batch: dict = dataclasses.field(default_factory=dict)
+    cache: dict = dataclasses.field(default_factory=dict)
+    timings: dict = dataclasses.field(default_factory=dict)
+    result: GridResult | None = None
+    error: str | None = None
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: str
+    study: Study
+    config: ExecutionConfig
+    cells: list  # [(Scenario, labels)] resolved at submit
+    seeds_key: tuple
+    submitted_at: float
+    done: threading.Event
+
+
+class StudyService:
+    """Request-driven scenario-evaluation service (module docstring).
+
+    Parameters mirror :meth:`repro.experiments.Study.run`'s simulator
+    ingredients — the service is the long-lived owner of exactly one
+    simulator, so every request's jit keys agree. ``cache_size`` bounds
+    the keyed executable cache; ``metric`` (``cell -> (R,)``) customizes
+    the per-seed scalar behind response records.
+    """
+
+    def __init__(self, *, params0, grads_fn=None, p=None, optimizer=None,
+                 loss_fn=None, use_kernel: bool = False, sim=None,
+                 cache_size: int = 32,
+                 metric: Callable | None = None):
+        self._sim = engine._resolve_sim(sim, grads_fn, p, optimizer,
+                                        loss_fn, use_kernel)
+        self._params0 = params0
+        self._cache = ExecutableCache(maxsize=cache_size)
+        self._metric = metric
+        self._lock = threading.Lock()
+        self._pending: list[_Request] = []
+        self._requests: dict[str, _Request] = {}
+        self._responses: dict[str, ServeResponse] = {}
+        self._ids = itertools.count()
+        self._n_requests = 0
+        self._n_cells = 0
+        self._n_flushes = 0
+
+    # ------------------------------------------------------------ admission
+
+    @property
+    def capacity(self) -> int:
+        """Population capacity N_cap = len(sim.p) — the ceiling every
+        request's ``n_clients`` must respect."""
+        return int(self._sim.p.shape[0])
+
+    def _parse(self, manifest, config):
+        if isinstance(manifest, Study):
+            return manifest, config
+        if isinstance(manifest, str):
+            manifest = manifest_mod.loads(manifest)
+        study, mconfig = manifest_mod.request_from_manifest(manifest)
+        if config is not None and mconfig is not None:
+            raise ValueError(
+                "request carries an execution config both in the manifest "
+                "and as the config= argument — pass one")
+        return study, (mconfig if config is None else config)
+
+    def submit(self, manifest, config: ExecutionConfig | None = None) -> str:
+        """Admit one request; returns its id.
+
+        ``manifest`` is a JSON string, a ``study/v1`` or
+        ``study-request/v1`` dict, or a Study instance. Invalid requests
+        — malformed manifest, unknown registry name, unserveable config,
+        population above capacity — raise here, before anything queues.
+        """
+        study, config = self._parse(manifest, config)
+        config = config or ExecutionConfig()
+        bad = [f for f in _UNSERVABLE if getattr(config, f)]
+        if bad:
+            raise ValueError(
+                f"ExecutionConfig fields {bad} are not serveable — the "
+                f"service batches requests on the vmap engine; run those "
+                f"studies through Study.run directly")
+        cells = study._resolve_labeled()  # validates axes & unique names
+        over = [f"{sc.name} (N={sc.n_clients})" for sc, _ in cells
+                if sc.n_clients > self.capacity]
+        if over:
+            raise ValueError(
+                f"request exceeds the service population capacity "
+                f"N_cap={self.capacity}: {over}")
+        with self._lock:
+            rid = f"r{next(self._ids):04d}"
+            req = _Request(
+                rid=rid, study=study, config=config, cells=cells,
+                seeds_key=study._seed_values(),
+                submitted_at=time.perf_counter(),
+                done=threading.Event())
+            self._pending.append(req)
+            self._requests[rid] = req
+            self._n_requests += 1
+        return rid
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    # ------------------------------------------------------------- dispatch
+
+    def flush(self) -> list[ServeResponse]:
+        """Execute every pending request, batched, and release waiters.
+
+        Requests group by dispatch signature (num_steps, seeds, config);
+        each group's cells merge into one ``execute_cells`` call, where
+        the engine collapses same-structure cells — across requests —
+        onto shared compiled traces via the keyed executable cache.
+        """
+        with self._lock:
+            batch, self._pending = self._pending, []
+        if not batch:
+            return []
+        self._n_flushes += 1
+
+        dispatch: dict[tuple, list[_Request]] = {}
+        for req in batch:
+            key = (req.study.num_steps, req.seeds_key, req.config)
+            dispatch.setdefault(key, []).append(req)
+
+        responses = []
+        for (num_steps, seeds_key, config), reqs in dispatch.items():
+            responses.extend(
+                self._run_dispatch(num_steps, seeds_key, config, reqs))
+        return responses
+
+    def _run_dispatch(self, num_steps, seeds_key, config, reqs):
+        merged, owner = [], {}
+        for req in reqs:
+            for sc, _labels in req.cells:
+                wire = f"{req.rid}/{sc.name}"
+                merged.append(dataclasses.replace(sc, name=wire))
+                owner[wire] = req
+        before = self._cache.stats()
+        t0 = time.perf_counter()
+        try:
+            results = engine.execute_cells(
+                merged, sim=self._sim, params0=self._params0,
+                num_steps=num_steps, seeds=list(seeds_key),
+                client_reduction=config.client_reduction,
+                executable_cache=self._cache.bind(config))
+        except Exception as e:  # noqa: BLE001 — fail this group, not siblings
+            responses = []
+            for req in reqs:
+                resp = ServeResponse(request_id=req.rid,
+                                     study=req.study.name,
+                                     error=f"{type(e).__name__}: {e}")
+                self._finish(req, resp)
+                responses.append(resp)
+            return responses
+        execute_us = (time.perf_counter() - t0) * 1e6
+        after = self._cache.stats()
+        delta = {k: after[k] - before[k]
+                 for k in ("hits", "misses", "evictions", "compiles")}
+        self._n_cells += len(merged)
+
+        now = time.perf_counter()
+        responses = []
+        for req in reqs:
+            cells = {sc.name: results[f"{req.rid}/{sc.name}"]
+                     for sc, _ in req.cells}
+            labels = {sc.name: lab for sc, lab in req.cells}
+            axes = dict(req.study._sweep_axes())
+            axes["seed"] = seeds_key
+            grid = GridResult(cells=cells, labels=labels, axes=axes,
+                              name=req.study.name)
+            div = grid.divergence()
+            resp = ServeResponse(
+                request_id=req.rid,
+                study=req.study.name,
+                records=grid.to_records(self._metric),
+                divergence=div,
+                quarantined=sorted(n for n, d in div.items()
+                                   if d["n_diverged"] > 0),
+                batch={"requests": len(reqs), "cells": len(merged),
+                       "dispatches": delta["hits"] + delta["misses"],
+                       "cache_hits": delta["hits"],
+                       "new_compiles": delta["compiles"]},
+                cache=after,
+                timings={"latency_us": (now - req.submitted_at) * 1e6,
+                         "execute_us": execute_us},
+                result=grid)
+            self._finish(req, resp)
+            responses.append(resp)
+        return responses
+
+    def _finish(self, req: _Request, resp: ServeResponse) -> None:
+        with self._lock:
+            self._responses[req.rid] = resp
+        req.done.set()
+
+    # ------------------------------------------------------------- results
+
+    def result(self, rid: str) -> ServeResponse:
+        """The response for ``rid`` (KeyError if not yet flushed)."""
+        with self._lock:
+            try:
+                return self._responses[rid]
+            except KeyError:
+                raise KeyError(
+                    f"no response for request {rid!r} yet — call flush() "
+                    f"or run a BackgroundServer") from None
+
+    def wait(self, rid: str, timeout: float | None = None) -> ServeResponse:
+        """Block until ``rid`` has been served (by any flushing thread)."""
+        with self._lock:
+            req = self._requests.get(rid)
+        if req is None:
+            raise KeyError(f"unknown request id {rid!r}")
+        if not req.done.wait(timeout):
+            raise TimeoutError(f"request {rid!r} not served in {timeout}s")
+        return self.result(rid)
+
+    def stats(self) -> dict:
+        """Service lifetime counters + executable-cache stats."""
+        with self._lock:
+            out = {"requests": self._n_requests, "flushes": self._n_flushes,
+                   "cells": self._n_cells}
+        out.update(self._cache.stats())
+        out["executable_entries"] = self._cache.cache_entries()
+        return out
+
+
+class BackgroundServer:
+    """Worker thread that flushes a :class:`StudyService` continuously.
+
+    ``window_s`` is the batching window: once the queue goes non-empty
+    the server waits that long before flushing, so a burst of
+    submissions lands in one batch (and one structure-grouped dispatch)
+    instead of N. Use as a context manager::
+
+        with BackgroundServer(service):
+            rids = [service.submit(m) for m in manifests]
+            responses = [service.wait(r) for r in rids]
+    """
+
+    def __init__(self, service: StudyService, window_s: float = 0.002,
+                 poll_s: float = 0.0005):
+        self._service = service
+        self._window_s = float(window_s)
+        self._poll_s = float(poll_s)
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    def start(self) -> "BackgroundServer":
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="study-serve")
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            if self._service.pending:
+                time.sleep(self._window_s)  # let the burst accumulate
+                self._service.flush()
+            else:
+                time.sleep(self._poll_s)
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None
+        self._service.flush()  # drain anything admitted during shutdown
+
+    def __enter__(self) -> "BackgroundServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

@@ -36,6 +36,10 @@ def pytest_configure(config):
         "faults: fault injection, non-finite quarantine and "
         "preemption-safe resumable execution (DESIGN.md §10) — select "
         "with `-m faults`")
+    config.addinivalue_line(
+        "markers",
+        "serve: Study manifests, the batching StudyService and the "
+        "keyed executable cache (DESIGN.md §11) — select with `-m serve`")
 
 
 def pytest_collection_modifyitems(config, items):

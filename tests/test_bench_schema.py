@@ -135,3 +135,72 @@ def test_bench_out_is_gap_tolerant(tmp_path):
     (tmp_path / "BENCH_2026-07-27.3.json").write_text("{}")
     path = bench_run.bench_out_path(str(tmp_path), "2026-07-27")
     assert path.endswith("BENCH_2026-07-27.2.json")
+
+
+# ------------------------------------------------------- serve_* validation
+
+def _serve_records(**overrides):
+    derived = {
+        "serve_throughput": {"scenarios_per_s": 356.0, "requests": 8,
+                             "cells": 8, "rounds": 3},
+        "serve_latency": {"p50_us": 20000.0, "p99_us": 21000.0, "n": 24},
+        "serve_cache": {"hit_rate": 1.0, "hits": 3, "misses": 0,
+                        "evictions": 0, "compiles": 1, "warm_compiles": 0},
+        "serve_collapse": {"populations": 6, "compiles": 1,
+                           "single_trace": True, "executable_entries": 1},
+    }
+    for name, kv in overrides.items():
+        derived[name] = {**derived[name], **kv}
+    return [_rec(n, 100.0 * (i + 1), d, suite="serve_bench")
+            for i, (n, d) in enumerate(derived.items())]
+
+
+def test_serve_series_valid_set_passes():
+    bench_run.check_serve_series(_serve_records())  # no raise
+
+
+def test_serve_series_validation_only_applies_to_serve_suite():
+    bench_run.check_serve_series([_rec("fig1_x", 5.0)])  # no raise
+
+
+def test_serve_series_missing_series_named():
+    records = [r for r in _serve_records() if r["name"] != "serve_latency"]
+    with pytest.raises(ValueError, match="'serve_latency' missing"):
+        bench_run.check_serve_series(records)
+
+
+def test_serve_series_missing_derived_field_named():
+    records = _serve_records()
+    for r in records:
+        if r["name"] == "serve_cache":
+            del r["derived"]["hit_rate"]
+    with pytest.raises(ValueError,
+                       match=r"'serve_cache'.*missing derived.*hit_rate"):
+        bench_run.check_serve_series(records)
+
+
+def test_serve_series_inverted_percentiles_rejected():
+    records = _serve_records(serve_latency={"p50_us": 30000.0})
+    with pytest.raises(ValueError, match=r"p50_us=30000.0 > p99_us"):
+        bench_run.check_serve_series(records)
+
+
+def test_serve_series_hit_rate_out_of_range_rejected():
+    records = _serve_records(serve_cache={"hit_rate": 1.5})
+    with pytest.raises(ValueError, match=r"hit_rate=1.5 outside"):
+        bench_run.check_serve_series(records)
+
+
+def test_serve_series_warm_recompiles_rejected():
+    """Repeat traffic recompiling means the executable cache is broken —
+    the bench must fail loudly, not record a regression silently."""
+    records = _serve_records(serve_cache={"warm_compiles": 2})
+    with pytest.raises(ValueError, match=r"warm_compiles=2"):
+        bench_run.check_serve_series(records)
+
+
+def test_serve_series_foreign_name_in_suite_rejected():
+    records = _serve_records() + [_rec("sneaky_row", 9.0,
+                                       suite="serve_bench")]
+    with pytest.raises(ValueError, match=r"sneaky_row.*named\s+serve_\*"):
+        bench_run.check_serve_series(records)

@@ -1,0 +1,228 @@
+"""Study/ExecutionConfig manifest round-trips and failure paths.
+
+The serialization contract (DESIGN.md §11): ``to_json -> from_json`` is
+an exact identity over every registered scheduler, arrival family, fault
+family and sweep axis — and a malformed manifest fails at decode time
+with an error that names the registry (and its valid keys) or the
+offending key, never deep inside a compiled dispatch.
+"""
+
+import dataclasses
+import json
+
+import pytest
+
+from repro.core.energy import arrival_family_names
+from repro.core.faults import fault_family_names
+from repro.core.scheduling import scheduler_names
+from repro.experiments import ExecutionConfig, Study, axis_names
+from repro.experiments.manifest import (
+    EXEC_FORMAT,
+    REQUEST_FORMAT,
+    STUDY_FORMAT,
+    decode_value,
+    encode_value,
+    request_from_manifest,
+    request_to_manifest,
+)
+
+pytestmark = pytest.mark.serve
+
+
+def base_study(**axes) -> Study:
+    merged = {"scheduler": "alg1", "arrivals": "periodic",
+              "n_clients": 4, "seeds": [0, 1], **axes}
+    return Study("t", num_steps=50, axes=merged)
+
+
+def assert_roundtrip(study: Study) -> Study:
+    """from_json(to_json) must reproduce the manifest, the axes (values
+    and fixed-ness), the seeds and the resolved cell names exactly."""
+    back = Study.from_json(study.to_json())
+    assert back.to_manifest() == study.to_manifest()
+    assert back.axes == study.axes
+    assert back._fixed == study._fixed
+    assert back._seed_values() == study._seed_values()
+    assert [sc.name for sc in back.resolve()] == \
+        [sc.name for sc in study.resolve()]
+    return back
+
+
+# ------------------------------------------------------------- round-trips
+
+@pytest.mark.parametrize("scheduler", scheduler_names())
+def test_roundtrip_every_scheduler(scheduler):
+    assert_roundtrip(base_study(scheduler=scheduler))
+
+
+@pytest.mark.parametrize("family", arrival_family_names())
+def test_roundtrip_every_arrival_family(family):
+    value = (family, {"period": 50}) if family == "day_night" else family
+    assert_roundtrip(base_study(arrivals=value))
+
+
+@pytest.mark.parametrize("family", [None] + fault_family_names())
+def test_roundtrip_every_fault_family(family):
+    value = (family, {"rate": 0.25}) \
+        if family in ("drop", "corrupt", "stale") else family
+    assert_roundtrip(base_study(faults=value))
+
+
+def test_roundtrip_every_builtin_axis_swept():
+    """One study sweeping every built-in axis at once."""
+    study = base_study(
+        scheduler=["alg1", "alg2"],
+        arrivals=["periodic", ("day_night", {"period": 20, "contrast": 2.0})],
+        capacity=[1.0, 4.0],
+        n_clients=[3, 4],
+        taus_profile="paper",
+        faults=[None, ("drop", {"rate": 0.5})])
+    back = assert_roundtrip(study)
+    assert len(back.resolve()) == len(study.resolve()) == 32
+
+
+def test_roundtrip_explicit_taus_vector_stays_tuple():
+    study = base_study(taus_profile=(4.0, 8.0, 16.0))
+    back = assert_roundtrip(study)
+    assert back.axes["taus_profile"] == ((4.0, 8.0, 16.0),)
+
+
+def test_roundtrip_int_seed_count_and_explicit_list():
+    assert Study.from_json(base_study(seeds=5).to_json())._seed_values() \
+        == (0, 1, 2, 3, 4)
+    assert Study.from_json(base_study(seeds=[7, 3]).to_json())._seed_values() \
+        == (7, 3)
+
+
+def test_roundtrip_fixed_vs_swept_singleton():
+    """A 1-element sweep list is NOT a fixed axis: the value appears in
+    cell names. The flag must survive the round-trip."""
+    fixed = base_study(n_clients=4)
+    swept = base_study(n_clients=[4])
+    assert "n_clients" in fixed._fixed and "n_clients" not in swept._fixed
+    assert_roundtrip(fixed)
+    back = assert_roundtrip(swept)
+    assert "n4" in back.resolve()[0].name
+
+
+def test_execution_config_roundtrip():
+    cfg = ExecutionConfig(client_reduction="gather", degrade=True,
+                          checkpoint_every=25, halt_on_divergence=True)
+    assert ExecutionConfig.from_json(cfg.to_json()) == cfg
+
+
+def test_request_envelope_roundtrip():
+    study = base_study()
+    cfg = ExecutionConfig(client_reduction="gather")
+    doc = request_to_manifest(study, cfg)
+    assert doc["format"] == REQUEST_FORMAT
+    back_study, back_cfg = request_from_manifest(
+        json.loads(json.dumps(doc)))
+    assert back_study.to_manifest() == study.to_manifest()
+    assert back_cfg == cfg
+    # bare study envelope is also an accepted request
+    s2, c2 = request_from_manifest(study.to_manifest())
+    assert s2.to_manifest() == study.to_manifest() and c2 is None
+
+
+# ------------------------------------------------------------ failure paths
+
+def _mangle(study: Study, axis: str, value):
+    doc = study.to_manifest()
+    for entry in doc["axes"]:
+        if entry["axis"] == axis:
+            entry["values"] = [encode_value(value)]
+    return doc
+
+
+def test_unknown_scheduler_names_registry():
+    with pytest.raises(ValueError, match=r"scheduler registry has.*alg1"):
+        Study.from_manifest(_mangle(base_study(), "scheduler", "sgd_magic"))
+
+
+def test_unknown_arrival_family_names_registry():
+    with pytest.raises(ValueError,
+                       match=r"arrival-family registry has.*periodic"):
+        Study.from_manifest(_mangle(base_study(), "arrivals", "solar"))
+
+
+def test_unknown_fault_family_names_registry():
+    study = base_study(faults="drop")
+    with pytest.raises(ValueError, match=r"fault-family registry has.*drop"):
+        Study.from_manifest(_mangle(study, "faults", "gamma_ray"))
+
+
+def test_unknown_taus_profile_names_registry():
+    study = base_study(taus_profile="paper")
+    with pytest.raises(ValueError,
+                       match=r"taus-profile registry has.*paper"):
+        Study.from_manifest(_mangle(study, "taus_profile", "lunar"))
+
+
+def test_unknown_axis_names_axis_registry():
+    doc = base_study().to_manifest()
+    doc["axes"].append({"axis": "warp_factor", "values": [9]})
+    with pytest.raises(ValueError, match=r"unknown sweep axis 'warp_factor'"):
+        Study.from_manifest(doc)
+    # the error lists the registered axes
+    with pytest.raises(ValueError, match=r"scheduler"):
+        Study.from_manifest(doc)
+    assert "scheduler" in axis_names()
+
+
+def test_wrong_schema_version_rejected():
+    doc = base_study().to_manifest()
+    doc["format"] = "study/v2"
+    with pytest.raises(ValueError,
+                       match=rf"unsupported format 'study/v2'.*{STUDY_FORMAT}"):
+        Study.from_manifest(doc)
+
+
+def test_truncated_json_rejected():
+    text = base_study().to_json()
+    with pytest.raises(ValueError, match=r"not valid JSON"):
+        Study.from_json(text[: len(text) // 2])
+
+
+def test_unknown_manifest_key_rejected():
+    doc = base_study().to_manifest()
+    doc["stepz"] = 10
+    with pytest.raises(ValueError, match=r"unknown key.*stepz.*valid keys"):
+        Study.from_manifest(doc)
+
+
+def test_empty_axis_values_rejected():
+    doc = base_study().to_manifest()
+    doc["axes"][0]["values"] = []
+    with pytest.raises(ValueError, match=r"empty values"):
+        Study.from_manifest(doc)
+
+
+def test_live_execution_config_fields_not_serializable():
+    cfg = ExecutionConfig(eval_fn=lambda p: p)
+    with pytest.raises(ValueError, match=r"eval_fn holds a live object"):
+        cfg.to_manifest()
+
+
+def test_execution_config_unknown_key_rejected():
+    doc = ExecutionConfig().to_manifest()
+    doc["warp"] = 9
+    with pytest.raises(ValueError, match=r"unknown key.*warp.*valid keys"):
+        ExecutionConfig.from_manifest(doc)
+    assert "mesh" not in doc  # live fields never serialize
+
+
+def test_unserializable_value_names_location():
+    with pytest.raises(ValueError, match=r"axis 'taus_profile'"):
+        encode_value(lambda n: n, where="axis 'taus_profile'")
+
+
+def test_tuple_tag_is_reserved():
+    with pytest.raises(ValueError, match=r"__tuple__.*reserved"):
+        encode_value({"__tuple__": [1]})
+
+
+def test_codec_tuple_vs_list_distinction():
+    v = ("day_night", {"period": 50, "xs": [1, 2]})
+    assert decode_value(json.loads(json.dumps(encode_value(v)))) == v
+    assert decode_value(encode_value([1, 2])) == [1, 2]

@@ -1,0 +1,73 @@
+"""render_md bench-series renderer: every family renders, nothing drops."""
+
+import pytest
+
+from benchmarks.render_md import FAMILIES, family_title, render_bench
+
+pytestmark = pytest.mark.serve
+
+
+def _rec(name, us=100.0, derived=None):
+    return {"suite": "x", "name": name, "us_per_call": us,
+            "derived": derived or {}, "values": {"us_per_call": us},
+            "units": {"us_per_call": "us"}}
+
+
+def _doc(records):
+    return {"schema": "bench-series/v1", "suites": ["x"], "fast": True,
+            "device_count": 8, "failed": [], "results": records}
+
+
+def test_known_families_have_sections():
+    md = render_bench(_doc([
+        _rec("largeN_sharded_N1024", derived={"devices": 8}),
+        _rec("faultpath_inject_warm"),
+        _rec("serve_throughput", derived={"scenarios_per_s": 356.0}),
+        _rec("fig1_alg1_periodic"),
+    ]))
+    assert "## Large-N client sharding" in md
+    assert "## Fault-injection path" in md
+    assert "## Study service" in md
+    assert "## Figure 1 grid" in md
+    assert "| serve_throughput | 100 | scenarios_per_s=356 |" in md
+
+
+def test_unknown_series_render_under_other_never_dropped():
+    md = render_bench(_doc([
+        _rec("fig1_alg1_periodic"),
+        _rec("mystery_series_42", derived={"k": True}),
+        _rec("another_new_family"),
+    ]))
+    assert "## other" in md
+    assert "mystery_series_42" in md
+    assert "another_new_family" in md
+
+
+def test_every_series_renders_exactly_once():
+    names = [f"{p}x{i}" for i, (p, _) in enumerate(FAMILIES)] \
+        + ["unaffiliated_1", "unaffiliated_2"]
+    md = render_bench(_doc([_rec(n) for n in names]))
+    for n in names:
+        assert md.count(f"| {n} |") == 1
+
+
+def test_family_title_prefix_matching():
+    assert family_title("serve_latency") == "Study service"
+    assert family_title("largeN_speedup_N4096") == "Large-N client sharding"
+    assert family_title("faultpath_overhead") == "Fault-injection path"
+    assert family_title("gla_chunked_1k") == "Kernel micro-benchmarks"
+    assert family_title("brand_new_thing") == "other"
+
+
+def test_zero_and_none_us_render_as_dash():
+    md = render_bench(_doc([_rec("serve_collapse", us=0,
+                                 derived={"compiles": 1}),
+                            _rec("serve_cache", us=None)]))
+    assert "| serve_collapse | — | compiles=1 |" in md
+    assert "| serve_cache | — |" in md
+
+
+def test_failed_suites_surface_in_header():
+    doc = _doc([_rec("fig1_x")])
+    doc["failed"] = ["serve_bench"]
+    assert "**FAILED**: ['serve_bench']" in render_bench(doc)

@@ -1,0 +1,263 @@
+"""StudyService acceptance suite (DESIGN.md §11).
+
+The tentpole invariants:
+
+* a mixed-population batch of ≥ 8 manifests sharing one component
+  structure compiles exactly ONE trace (jit-cache-entry assertion), and
+  each request's result is bitwise equal to running its Study alone on
+  the vmap engine;
+* repeat submission of the identical manifest set is an executable-cache
+  hit — zero new compiles;
+* the cache is a bounded LRU — overflow evicts, counters tell the story;
+* a fault-poisoned request is quarantined in its own response without
+  failing sibling requests sharing the dispatch.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.convergence import make_quadratic
+from repro.experiments import ExecutionConfig, Study
+from repro.optim import sgd
+from repro.serve import BackgroundServer, StudyService
+
+pytestmark = pytest.mark.serve
+
+CAPACITY, DIM, STEPS = 8, 4, 20
+POPULATIONS = [3, 4, 5, 6, 7, 8, 3, 5]
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return make_quadratic(jax.random.PRNGKey(0), CAPACITY, dim=DIM)
+
+
+@pytest.fixture(scope="module")
+def grads_fn(prob):
+    return lambda w, k, t: prob.all_grads(w)
+
+
+def make_service(prob, grads_fn, **kw):
+    kw.setdefault("cache_size", 8)
+    return StudyService(grads_fn=grads_fn, p=prob.p, optimizer=sgd(0.05),
+                       params0=jnp.zeros(DIM), **kw)
+
+
+def make_study(name: str, n: int, *, scheduler="alg1", arrivals="periodic",
+               steps=STEPS, faults=None, seeds=(0, 1)) -> Study:
+    study = (Study(name, num_steps=steps).axis("scheduler", scheduler)
+             .axis("arrivals", arrivals).axis("n_clients", n)
+             .axis("seeds", list(seeds)))
+    if faults is not None:
+        study.axis("faults", faults)
+    return study
+
+
+# ----------------------------------------------------- single-trace collapse
+
+def test_mixed_population_batch_compiles_one_trace(prob, grads_fn):
+    """≥ 8 manifests, 6 distinct population sizes, one structure ->
+    exactly one compile and one live jit-cache entry."""
+    svc = make_service(prob, grads_fn)
+    for i, n in enumerate(POPULATIONS):
+        svc.submit(make_study(f"s{i}", n).to_json())
+    responses = svc.flush()
+    assert len(responses) == len(POPULATIONS)
+    assert all(r.error is None for r in responses)
+    stats = svc.stats()
+    assert stats["compiles"] == 1
+    assert stats["executable_entries"] == 1  # ONE compiled program total
+    assert responses[0].batch == {
+        "requests": 8, "cells": 8, "dispatches": 1, "cache_hits": 0,
+        "new_compiles": 1}
+
+
+def test_batched_result_bitwise_equals_solo_study_run(prob, grads_fn):
+    """Every request demuxed from the shared dispatch must be bitwise
+    identical to running its Study alone through the vmap engine."""
+    svc = make_service(prob, grads_fn)
+    studies = [make_study(f"s{i}", n) for i, n in enumerate(POPULATIONS)]
+    rids = [svc.submit(s.to_json()) for s in studies]
+    svc.flush()
+    for rid, study in zip(rids, studies):
+        served = svc.result(rid).result
+        solo = study.run(grads_fn=grads_fn, p=prob.p, optimizer=sgd(0.05),
+                         params0=jnp.zeros(DIM))
+        assert set(served.cells) == set(solo.cells)
+        for name in solo.cells:
+            for a, b in zip(jax.tree_util.tree_leaves(solo.cells[name]),
+                            jax.tree_util.tree_leaves(served.cells[name])):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_repeat_submission_is_pure_cache_hit(prob, grads_fn):
+    svc = make_service(prob, grads_fn)
+    manifests = [make_study(f"s{i}", n).to_json()
+                 for i, n in enumerate(POPULATIONS)]
+    for m in manifests:
+        svc.submit(m)
+    svc.flush()
+    first = svc.stats()
+    for m in manifests:  # identical manifest set again
+        svc.submit(m)
+    responses = svc.flush()
+    second = svc.stats()
+    assert second["compiles"] == first["compiles"] == 1
+    assert second["hits"] == first["hits"] + 1
+    assert responses[0].batch["new_compiles"] == 0
+    assert responses[0].batch["cache_hits"] == 1
+
+
+# ------------------------------------------------------------ cache bounds
+
+def test_executable_cache_eviction_is_bounded_lru(prob, grads_fn):
+    svc = make_service(prob, grads_fn, cache_size=1)
+    a = make_study("a", 4).to_json()  # structure 1
+    b = make_study("b", 4, scheduler="alg2", arrivals="binary").to_json()
+    for m in (a, b, a):  # b evicts a; the re-run of a evicts b
+        svc.submit(m)
+        svc.flush()
+    stats = svc.stats()
+    assert stats["evictions"] == 2
+    assert stats["size"] == 1
+    assert stats["executable_entries"] >= 1
+    assert stats["compiles"] == 3  # the third submit recompiled structure 1
+
+
+def test_distinct_execution_configs_never_share_entries(prob, grads_fn):
+    svc = make_service(prob, grads_fn)
+    m = make_study("a", 4).to_json()
+    svc.submit(m, config=ExecutionConfig(client_reduction="psum"))
+    svc.flush()
+    svc.submit(m, config=ExecutionConfig(client_reduction="gather"))
+    svc.flush()
+    assert svc.stats()["size"] == 2  # one entry per (structure, config)
+
+
+# --------------------------------------------------------------- quarantine
+
+def test_poisoned_request_quarantined_without_failing_siblings(prob, grads_fn):
+    """PR 7 semantics at the request level: a fault-poisoned cell is
+    reported in ITS response's quarantine list; sibling requests in the
+    same flush complete clean."""
+    svc = make_service(prob, grads_fn)
+    clean = [svc.submit(make_study(f"c{i}", n).to_json())
+             for i, n in enumerate((3, 5))]
+    poisoned = svc.submit(make_study(
+        "p", 4, faults=("corrupt", {"rate": 1.0, "scale": float("nan")}),
+    ).to_json())
+    responses = svc.flush()
+    assert len(responses) == 3 and all(r.error is None for r in responses)
+    bad = svc.result(poisoned)
+    assert bad.quarantined  # every seed poisoned from step 0
+    assert bad.divergence[bad.quarantined[0]]["n_diverged"] == 2
+    assert all(r["first_bad_step"] == 0 for r in bad.records)
+    for rid in clean:
+        resp = svc.result(rid)
+        assert resp.quarantined == []
+        assert all(r["n_diverged"] == 0 for r in resp.records)
+
+
+def test_dispatch_failure_isolated_to_its_group(prob, grads_fn, monkeypatch):
+    """An engine error fails only the dispatch group that raised; other
+    groups in the same flush still answer, and every waiter is
+    released."""
+    from repro.experiments import engine
+
+    real = engine.execute_cells
+
+    def exploding(scenarios, **kw):
+        if kw.get("num_steps") == STEPS + 5:  # the doomed dispatch group
+            raise RuntimeError("injected engine failure")
+        return real(scenarios, **kw)
+
+    monkeypatch.setattr(engine, "execute_cells", exploding)
+    svc = make_service(prob, grads_fn)
+    ok = svc.submit(make_study("fine", 4).to_json())
+    # different num_steps -> its own dispatch group
+    bad = svc.submit(make_study("boom", 4, steps=STEPS + 5).to_json())
+    responses = svc.flush()
+    assert len(responses) == 2
+    assert svc.result(bad).error is not None
+    assert "injected engine failure" in svc.result(bad).error
+    assert svc.result(bad).records == []
+    assert svc.result(ok).error is None and svc.result(ok).records
+
+
+# ---------------------------------------------------------------- admission
+
+def test_unserveable_config_rejected_at_submit(prob, grads_fn):
+    svc = make_service(prob, grads_fn)
+    study = make_study("s", 4)
+    for field, value in (("sequential", True), ("checkpoint_dir", "/tmp/x"),
+                         ("eval_fn", lambda p: p)):
+        cfg = ExecutionConfig(**{field: value})
+        with pytest.raises(ValueError, match=rf"{field}.*not serveable"):
+            svc.submit(study, config=cfg)
+    assert svc.pending == 0
+
+
+def test_capacity_overflow_rejected_at_submit(prob, grads_fn):
+    svc = make_service(prob, grads_fn)
+    with pytest.raises(ValueError, match=rf"N_cap={CAPACITY}.*N=40"):
+        svc.submit(make_study("big", 40).to_json())
+    assert svc.pending == 0
+
+
+def test_unknown_registry_name_rejected_at_submit(prob, grads_fn):
+    svc = make_service(prob, grads_fn)
+    doc = make_study("s", 4).to_manifest()
+    doc["axes"][0]["values"] = ["sgd_magic"]
+    with pytest.raises(ValueError, match=r"scheduler registry"):
+        svc.submit(doc)
+
+
+def test_duplicate_config_sources_rejected(prob, grads_fn):
+    from repro.experiments import request_to_manifest
+
+    svc = make_service(prob, grads_fn)
+    doc = request_to_manifest(make_study("s", 4),
+                              ExecutionConfig(client_reduction="gather"))
+    with pytest.raises(ValueError, match=r"both in the manifest"):
+        svc.submit(doc, config=ExecutionConfig())
+
+
+# -------------------------------------------------------------------- demux
+
+def test_demux_restores_request_local_names_and_labels(prob, grads_fn):
+    """Two requests may use identical study/cell names — the service
+    namespaces on the wire and restores local names in each response."""
+    svc = make_service(prob, grads_fn)
+    r1 = svc.submit(make_study("same", 3).to_json())
+    r2 = svc.submit(make_study("same", 5).to_json())
+    svc.flush()
+    g1, g2 = svc.result(r1).result, svc.result(r2).result
+    assert list(g1.cells) == list(g2.cells) == ["alg1_periodic"]
+    assert g1.labels("alg1_periodic")["n_clients"] == 3
+    assert g2.labels("alg1_periodic")["n_clients"] == 5
+    assert svc.result(r1).records[0]["n_clients"] == 3
+
+
+def test_wait_via_background_server(prob, grads_fn):
+    svc = make_service(prob, grads_fn)
+    with BackgroundServer(svc):
+        rids = [svc.submit(make_study(f"s{i}", n).to_json())
+                for i, n in enumerate(POPULATIONS)]
+        responses = [svc.wait(rid, timeout=300) for rid in rids]
+    assert all(r.error is None for r in responses)
+    assert svc.stats()["compiles"] <= 2  # burst may split into <=2 batches
+    with pytest.raises(KeyError, match="unknown request id"):
+        svc.wait("r9999")
+
+
+def test_result_before_flush_raises(prob, grads_fn):
+    svc = make_service(prob, grads_fn)
+    rid = svc.submit(make_study("s", 4).to_json())
+    with pytest.raises(KeyError, match="no response"):
+        svc.result(rid)
+    svc.flush()
+    assert svc.result(rid).request_id == rid

@@ -464,3 +464,65 @@ def test_clear_cache_drops_both_paths(problem, run_kwargs):
     clear_cache()
     assert engine._run_group._cache_size() == 0
     assert placement._run_group_sharded._cache_size() == 0
+
+
+# ------------------------------------------------- bounded simulator cache
+
+def test_simulator_cache_is_bounded_lru(problem, run_kwargs):
+    """The per-Study simulator memoization must not grow without bound:
+    cycling through more than SIM_CACHE_SIZE distinct weight vectors
+    evicts the coldest entry (a long-running service would otherwise pin
+    every simulator-plus-dataset ever built)."""
+    from repro.experiments.study import SIM_CACHE_SIZE
+
+    study = Study("bounded", num_steps=10)
+    kw = dict(grads_fn=run_kwargs["grads_fn"],
+              optimizer=run_kwargs["optimizer"])
+    for i in range(SIM_CACHE_SIZE + 2):
+        study.simulator(p=np.full(6, 1.0 + i), **kw)
+    stats = study.cache_stats()
+    assert stats["size"] == stats["maxsize"] == SIM_CACHE_SIZE
+    assert stats["evictions"] == 2
+    assert stats["misses"] == SIM_CACHE_SIZE + 2
+
+    # the hottest entry survives; the oldest was evicted and rebuilds
+    study.simulator(p=np.full(6, float(SIM_CACHE_SIZE + 1)), **kw)
+    assert study.cache_stats()["hits"] == 1
+    study.simulator(p=np.full(6, 1.0), **kw)
+    assert study.cache_stats()["evictions"] == 3  # refilling evicts again
+
+
+def test_repeated_run_still_hits_jit_cache_under_lru(problem, run_kwargs):
+    """Regression guard for the LRU swap: the memoization must keep the
+    PR 2 guarantee that repeated Study.run re-traces nothing."""
+    study = get_study("fig1", n_clients=6, num_steps=15, seeds=2)
+    study.run(**run_kwargs)
+    before = engine._run_group._cache_size()
+    study.run(**run_kwargs)
+    assert engine._run_group._cache_size() == before
+    stats = study.cache_stats()
+    assert stats["hits"] >= 1 and stats["size"] == 1
+
+
+def test_study_clear_cache_reports_and_drops(problem, run_kwargs):
+    study = get_study("fig1", n_clients=6, num_steps=10, seeds=2)
+    study.run(**run_kwargs)
+    assert engine._run_group._cache_size() > 0
+    final = study.clear_cache()
+    assert final["size"] == 1  # snapshot of what the cache held
+    assert study.cache_stats()["size"] == 0
+    assert engine._run_group._cache_size() == 0  # engine caches dropped too
+
+    study.run(**run_kwargs)  # still works after teardown
+    # counters survive clear() (lifetime telemetry); occupancy restarts
+    assert study.cache_stats()["misses"] == 2
+    assert study.cache_stats()["size"] == 1
+
+
+def test_study_clear_cache_can_spare_engine_caches(problem, run_kwargs):
+    study = get_study("fig1", n_clients=6, num_steps=10, seeds=2)
+    study.run(**run_kwargs)
+    compiled = engine._run_group._cache_size()
+    assert compiled > 0
+    study.clear_cache(engine_caches=False)
+    assert engine._run_group._cache_size() == compiled

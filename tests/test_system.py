@@ -23,11 +23,30 @@ def test_train_driver_end_to_end_loss_decreases(tmp_path):
     assert any(f.startswith("step_") for f in os.listdir(tmp_path / "ck"))
 
 
-def test_serve_driver_end_to_end():
+def test_serve_driver_end_to_end(tmp_path):
+    """The serve CLI batches a manifest file plus the demo burst through
+    one StudyService: every request answered, demo structure collapsed
+    onto a single compile."""
+    from repro.experiments import Study
     from repro.launch.serve import main
-    toks = main(["--arch", "minitron-4b", "--reduced", "--batch", "2",
-                 "--prompt-len", "4", "--new-tokens", "6"])
-    assert toks.shape == (2, 6)
+
+    manifest = tmp_path / "req.json"
+    study = (Study("filed", num_steps=20).axis("scheduler", "alg2")
+             .axis("arrivals", "binary").axis("n_clients", 4)
+             .axis("seeds", [0, 1]))
+    manifest.write_text(study.to_json())
+
+    responses = main([str(manifest), "--demo", "--demo-requests", "4",
+                      "--demo-steps", "20"])
+    assert len(responses) == 5
+    assert all(r.error is None for r in responses)
+    by_name = {r.study: r for r in responses}
+    assert by_name["filed"].records[0]["scheduler"] == "alg2"
+    # All 5 requests ride one dispatch (same steps/seeds/config); the 4
+    # demo requests share one structure and the filed study is a second
+    # -> exactly two compiles for the whole batch.
+    assert responses[0].batch["requests"] == 5
+    assert responses[0].cache["compiles"] == 2
 
 
 def test_simulator_kernel_aggregation_matches_jnp():
