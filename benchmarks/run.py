@@ -110,13 +110,19 @@ def check_serve_series(records) -> None:
     the serving perf trajectory into bare wall times, so the schema is
     enforced here: ``serve_latency`` must carry an ordered p50/p99 pair,
     ``serve_cache`` a hit rate in [0, 1] with non-growing warm compiles,
-    and ``serve_collapse`` a positive compile count. Errors name the
+    ``serve_collapse`` a positive compile count,
+    ``serve_resume_latency`` a zero-recompile warm resume, and
+    ``serve_resume_bitwise`` must actually be bitwise. Errors name the
     offending series.
     """
     want = {
         "serve_latency": ("p50_us", "p99_us"),
         "serve_cache": ("hit_rate",),
         "serve_collapse": ("compiles",),
+        "serve_resume_uninterrupted": ("chunks",),
+        "serve_resume_latency": ("resume_us", "overhead_pct",
+                                 "new_compiles"),
+        "serve_resume_bitwise": ("bitwise",),
     }
     by_name = {r.get("name"): r for r in records
                if r.get("suite") == "serve_bench"}
@@ -154,6 +160,15 @@ def check_serve_series(records) -> None:
         if name == "serve_collapse" and not derived["compiles"] >= 1:
             problems.append(
                 f"series {name!r}: compiles={derived['compiles']} < 1")
+        if name == "serve_resume_latency" \
+                and derived["new_compiles"] != 0:
+            problems.append(
+                f"series {name!r}: new_compiles="
+                f"{derived['new_compiles']} — a warm resume recompiled")
+        if name == "serve_resume_bitwise" and not derived["bitwise"]:
+            problems.append(
+                f"series {name!r}: bitwise={derived['bitwise']} — resumed "
+                f"responses drifted from the uninterrupted dispatch")
     if problems:
         raise ValueError("invalid serve_* series:\n  " +
                          "\n  ".join(problems))

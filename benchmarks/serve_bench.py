@@ -14,10 +14,23 @@ Series (all serve_*, validated by ``run.check_serve_series``):
                     compiles — which must not grow after warmup)
   serve_collapse    the single-trace collapse: distinct population
                     sizes served per compile (us=0, derived-only)
+
+Resumable serving (DESIGN.md §12) — kill-and-resume vs uninterrupted:
+
+  serve_resume_uninterrupted  checkpointed dispatch served end to end
+                              (fresh checkpoint dir each round)
+  serve_resume_latency        the resume leg after a simulated
+                              preemption at half the chunks; the warm
+                              resume must add ZERO new compiles, and
+                              overhead_pct is (partial + resume) vs the
+                              uninterrupted wall
+  serve_resume_bitwise        resumed responses bitwise equal to the
+                              uninterrupted dispatch (us=0)
 """
 
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -82,7 +95,7 @@ def run(fast: bool = False) -> list[str]:
     p50 = _percentile(latencies, 50)
     p99 = _percentile(latencies, 99)
 
-    return [
+    rows = [
         f"serve_throughput,{warm_us:.0f},scenarios_per_s={scen_per_s:.2f};"
         f"requests={n_req};cells={n_req};rounds={rounds};"
         f"cold_us={cold_us:.0f}",
@@ -95,4 +108,101 @@ def run(fast: bool = False) -> list[str]:
         f"compiles={cold['compiles']};"
         f"single_trace={cold['compiles'] == 1};"
         f"executable_entries={cold['executable_entries']}",
+    ]
+    rows += _resume_rows(service, manifests, num_steps, fast)
+    return rows
+
+
+def _resume_rows(service, manifests, num_steps, fast):
+    """Kill-and-resume overhead of the checkpointed serve path.
+
+    Uninterrupted: the manifest set served with checkpointing against a
+    fresh fingerprint dir each round (re-serving an intact dir would
+    measure a pure restore, not checkpointed execution). Interrupted:
+    CheckpointManager.save raises after half the chunks (the same
+    injection the kill tests use — the service sees a dead dispatch and
+    keeps the partial dir), then the resubmitted set resumes the tail.
+    """
+    import shutil
+    import tempfile
+
+    import jax
+
+    from repro.checkpoint.checkpoint import CheckpointManager
+    from repro.experiments import ExecutionConfig
+
+    n_chunks = 4
+    every = max(1, num_steps // n_chunks)
+    rounds = 2 if fast else 4
+
+    with tempfile.TemporaryDirectory() as root:
+        cfg = ExecutionConfig(checkpoint_dir=root, checkpoint_every=every)
+
+        def clear():
+            for d in os.listdir(root):
+                shutil.rmtree(os.path.join(root, d))
+
+        def serve_all():
+            for m in manifests:
+                service.submit(m, cfg)
+            return service.flush()
+
+        serve_all()  # warmup: compile the chunk runner
+        un_walls = []
+        for _ in range(rounds):
+            clear()
+            t0 = time.time()
+            reference = serve_all()
+            un_walls.append((time.time() - t0) * 1e6)
+        uninterrupted_us = float(np.mean(un_walls))
+
+        # preempt at half the chunks: save raises, the dispatch dies,
+        # the partial checkpoint dir survives
+        clear()
+        real_save, saves = CheckpointManager.save, [0]
+
+        def dying_save(self, step, state):
+            if saves[0] >= n_chunks // 2:
+                raise RuntimeError("bench-injected preemption")
+            saves[0] += 1
+            return real_save(self, step, state)
+
+        CheckpointManager.save = dying_save
+        try:
+            t0 = time.time()
+            serve_all()  # dies mid-dispatch
+            partial_us = (time.time() - t0) * 1e6
+        finally:
+            CheckpointManager.save = real_save
+
+        before = service.stats()["compiles"]
+        t0 = time.time()
+        resumed = serve_all()  # resumes the tail from the partial dir
+        resume_us = (time.time() - t0) * 1e6
+        new_compiles = service.stats()["compiles"] - before
+
+        overhead_pct = 100.0 * (partial_us + resume_us - uninterrupted_us) \
+            / uninterrupted_us
+        resumed_steps = resumed[0].batch["resumed_steps"]
+
+        by_name = {r.study: r for r in reference}
+        bitwise = all(
+            np.array_equal(np.asarray(la), np.asarray(lb), equal_nan=True)
+            for r in resumed if r.error is None
+            for cell in r.result.cells
+            for la, lb in zip(
+                jax.tree_util.tree_leaves(by_name[r.study].result.cells[cell]),
+                jax.tree_util.tree_leaves(r.result.cells[cell])))
+        bitwise = bitwise and all(r.error is None for r in resumed)
+
+    return [
+        f"serve_resume_uninterrupted,{uninterrupted_us:.0f},"
+        f"chunks={n_chunks};checkpoint_every={every};rounds={rounds}",
+        f"serve_resume_latency,{resume_us:.0f},resume_us={resume_us:.0f};"
+        f"partial_us={partial_us:.0f};"
+        f"uninterrupted_us={uninterrupted_us:.0f};"
+        f"overhead_pct={overhead_pct:.1f};resumed_steps={resumed_steps};"
+        f"new_compiles={new_compiles}",
+        f"serve_resume_bitwise,0,bitwise={bitwise};"
+        f"requests={len(manifests)}",
     ]

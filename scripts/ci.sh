@@ -10,6 +10,7 @@
 #   scripts/ci.sh multidevice ragged clientshard faults
 #   scripts/ci.sh kernels    # Pallas kernel suites + bench smoke
 #   scripts/ci.sh serve      # manifest/service suites + serve-bench smoke
+#   scripts/ci.sh serve-resume  # SIGKILL-and-recover + resume bench smoke
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -44,13 +45,25 @@ run_stage() {
             python -m benchmarks.run --only serve_bench --fast \
                 --json /tmp/bench_serve_smoke.json >/dev/null
             ;;
-        *) echo "unknown stage: $1 (have tier1 multidevice ragged clientshard faults kernels serve)" >&2
+        serve-resume)
+            # Preemption-safe serving (DESIGN.md §12): the SIGKILLed
+            # serve subprocess must recover bitwise on a fresh service,
+            # and the serve_resume_* bench series must emit and pass
+            # the zero-recompile / bitwise validator end-to-end.
+            stage serve-resume \
+                tests/test_resumable.py::test_service_kill9_and_recover_bitwise \
+                tests/test_service.py \
+                -k "kill9 or resumable or recover or drain or response_store or concurrent or checkpoint"
+            python -m benchmarks.run --only serve_bench --fast \
+                --json /tmp/bench_serve_resume_smoke.json >/dev/null
+            ;;
+        *) echo "unknown stage: $1 (have tier1 multidevice ragged clientshard faults kernels serve serve-resume)" >&2
            exit 2 ;;
     esac
 }
 
 if [ "$#" -eq 0 ]; then
-    set -- tier1 multidevice ragged clientshard faults kernels serve
+    set -- tier1 multidevice ragged clientshard faults kernels serve serve-resume
 fi
 for s in "$@"; do
     run_stage "$s"

@@ -1,28 +1,40 @@
 """Bounded LRU mapping with hit/miss/eviction accounting.
 
-One policy, two users (DESIGN.md §11): the serve layer's keyed
-executable cache (:class:`repro.serve.ExecutableCache`) and
-:meth:`repro.experiments.Study.simulator`'s memoization — both were
-unbounded dicts before PR 8, which a long-running service turns into a
-leak (every entry pins a jitted executable and the closures/datasets it
+One policy, three users (DESIGN.md §11–§12): the serve layer's keyed
+executable cache (:class:`repro.serve.ExecutableCache`), the
+StudyService response store, and :meth:`repro.experiments.Study.
+simulator`'s memoization — all were unbounded dicts before PR 8/9,
+which a long-running service turns into a leak (every entry pins a
+jitted executable, a full GridResult, or the closures/datasets it
 captured). Lives outside both packages so the experiments layer never
 imports the serve layer.
+
+The cache is thread-safe: a :class:`BackgroundServer` flush thread, a
+user thread, and the ``stop()`` drain all hammer one
+:class:`ExecutableCache` concurrently, so every mutation of the
+underlying ``OrderedDict`` (including ``move_to_end`` on a hit) holds
+an internal lock. :meth:`get_or_create` is the atomic
+check-build-insert concurrent callers need — a plain get/put pair has
+a race window where two threads both miss and both build (a
+double-compile for an executable cache).
 """
 
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import Any, Callable
 
 
 class LRUCache:
-    """Least-recently-used bounded mapping.
+    """Least-recently-used bounded mapping (thread-safe).
 
     ``get`` refreshes recency and counts a hit or miss; ``put`` inserts
     (refreshing recency on overwrite) and evicts the coldest entry past
     ``maxsize``, invoking ``on_evict(key, value)`` so owners can release
-    per-entry resources. Counters survive :meth:`clear` — they describe
-    the cache's lifetime, not its current contents.
+    per-entry resources. ``on_evict`` runs *outside* the internal lock —
+    it may call back into the cache. Counters survive :meth:`clear` —
+    they describe the cache's lifetime, not its current contents.
     """
 
     def __init__(self, maxsize: int = 32,
@@ -32,44 +44,96 @@ class LRUCache:
         self.maxsize = int(maxsize)
         self._data: OrderedDict = OrderedDict()
         self._on_evict = on_evict
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
 
     def get(self, key, default=None):
-        try:
-            value = self._data[key]
-        except KeyError:
-            self.misses += 1
-            return default
-        self._data.move_to_end(key)
-        self.hits += 1
-        return value
+        with self._lock:
+            try:
+                value = self._data[key]
+            except KeyError:
+                self.misses += 1
+                return default
+            self._data.move_to_end(key)
+            self.hits += 1
+            return value
 
-    def put(self, key, value) -> None:
+    def _insert_locked(self, key, value) -> list:
+        """Insert under the held lock; return evicted pairs for the
+        caller to notify outside it."""
         if key in self._data:
             self._data.move_to_end(key)
         self._data[key] = value
+        evicted = []
         while len(self._data) > self.maxsize:
-            old_key, old_value = self._data.popitem(last=False)
+            evicted.append(self._data.popitem(last=False))
             self.evictions += 1
-            if self._on_evict is not None:
+        return evicted
+
+    def _notify(self, evicted) -> None:
+        if self._on_evict is not None:
+            for old_key, old_value in evicted:
                 self._on_evict(old_key, old_value)
 
+    def put(self, key, value) -> None:
+        with self._lock:
+            evicted = self._insert_locked(key, value)
+        self._notify(evicted)
+
+    def get_or_create(self, key, factory: Callable[[], Any]):
+        """Atomic get-else-build-else-insert.
+
+        Exactly one caller's ``factory()`` runs per missing key even
+        under contention — the whole check-build-insert sequence holds
+        the lock (the lock is reentrant, so a factory may read the
+        cache, but it must not block on another thread that needs it).
+        Counts one hit or one miss, like ``get``.
+        """
+        with self._lock:
+            try:
+                value = self._data[key]
+            except KeyError:
+                self.misses += 1
+                value = factory()
+                evicted = self._insert_locked(key, value)
+            else:
+                self._data.move_to_end(key)
+                self.hits += 1
+                return value
+        self._notify(evicted)
+        return value
+
+    def pop(self, key, default=None):
+        """Remove and return ``key`` without eviction accounting (the
+        entry left by request, it wasn't pushed out)."""
+        with self._lock:
+            return self._data.pop(key, default)
+
     def __contains__(self, key) -> bool:  # no recency/counter side effects
-        return key in self._data
+        with self._lock:
+            return key in self._data
 
     def __len__(self) -> int:
-        return len(self._data)
+        with self._lock:
+            return len(self._data)
 
     def values(self):
-        return list(self._data.values())
+        with self._lock:
+            return list(self._data.values())
+
+    def keys(self):
+        with self._lock:
+            return list(self._data.keys())
 
     def clear(self) -> None:
-        self._data.clear()
+        with self._lock:
+            self._data.clear()
 
     def stats(self) -> dict:
         """Lifetime counters + current occupancy, one flat dict."""
-        return {"hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions, "size": len(self._data),
-                "maxsize": self.maxsize}
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions, "size": len(self._data),
+                    "maxsize": self.maxsize}

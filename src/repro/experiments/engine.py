@@ -121,6 +121,91 @@ def _pad_built(built, n_cap: int):
             pad_faults(faults, n_cap))
 
 
+def _cell_mask_p(sc: "Scenario", sim: ClientSimulator, n_cap: int):
+    """(active_mask, p) for one cell of a ragged group. A full-capacity
+    cell gets an all-ones mask and the caller's ``sim.p``
+    *unrenormalized*: multiplying by 1.0 and reusing p verbatim keeps it
+    bit-identical to the unmasked run, whereas renormalizing would
+    perturb it whenever p does not sum to exactly 1.0 in f32."""
+    if sc.n_clients == n_cap:
+        return jnp.ones((n_cap,), jnp.float32), sim.p
+    return (population_mask(sc.n_clients, n_cap),
+            subpopulation_p(sim.p, sc.n_clients, n_cap))
+
+
+class StructureGroup(NamedTuple):
+    """One structure group of a resolved grid — the leaf-stacked
+    component batch the engine dispatches as ONE compiled computation.
+
+    ``key`` is the :func:`_group_key` trace signature; ``members`` index
+    into the caller's scenario list; ``scheduler`` / ``energy`` /
+    ``faults`` carry a leading scenario axis S (``faults`` is None for
+    fault-free groups); ``active`` / ``p`` are the (S, N_cap) ragged
+    operands, both None when the group is uniformly at capacity.
+    """
+
+    key: Any
+    members: list[int]
+    scheduler: Any
+    energy: Any
+    faults: Any
+    active: Any
+    p: Any
+    ragged: bool
+
+
+def resolve_structure_groups(
+    scenarios: Sequence[Scenario], *, sim: ClientSimulator,
+) -> tuple[list[str], int, list[StructureGroup]]:
+    """Group scenario cells by padded component structure.
+
+    The shared front half of every batched execution path
+    (:func:`execute_cells` and :func:`execute_cells_resumable` resolve
+    through here, so both agree on names, padding, raggedness and group
+    membership — which is what makes the chunked path bitwise the
+    unchunked one). Below-capacity components are padded to
+    ``N_cap = len(sim.p)`` (an identity at capacity) and grouping is on
+    the padded structure; raggedness is decided per group, so uniform
+    groups keep their mask-free compiled programs.
+
+    Returns ``(names, n_cap, groups)`` in input order.
+    """
+    scenarios = list(scenarios)
+    names = check_unique_names(scenarios)
+    n_cap = int(sim.p.shape[0])
+    over = [f"{sc.name} (N={sc.n_clients})" for sc in scenarios
+            if sc.n_clients > n_cap]
+    if over:
+        raise ValueError(
+            f"scenario population exceeds the simulator capacity "
+            f"N_cap={n_cap} (len(sim.p)): {over}")
+    built = [sc.build() + (sc.build_faults(),) for sc in scenarios]
+    padded = [b if sc.n_clients == n_cap else _pad_built(b, n_cap)
+              for sc, b in zip(scenarios, built)]
+    grouped: dict[Any, list[int]] = {}
+    for idx, (sch, en, flt) in enumerate(padded):
+        grouped.setdefault(_group_key(sch, en, flt), []).append(idx)
+
+    groups = []
+    for gkey, members in grouped.items():
+        ragged = any(scenarios[i].n_clients != n_cap for i in members)
+        sch_batch = _stack([padded[i][0] for i in members])
+        en_batch = _stack([padded[i][1] for i in members])
+        # A fault-free group's components are all None — tree_map over
+        # all-None pytrees has no leaves and returns None, so the group
+        # dispatches the pre-fault-layer program verbatim.
+        flt_batch = _stack([padded[i][2] for i in members])
+        active_batch, p_batch = None, None
+        if ragged:
+            masks, ps = zip(*(_cell_mask_p(scenarios[i], sim, n_cap)
+                              for i in members))
+            active_batch, p_batch = jnp.stack(masks), jnp.stack(ps)
+        groups.append(StructureGroup(gkey, members, sch_batch, en_batch,
+                                     flt_batch, active_batch, p_batch,
+                                     ragged))
+    return names, n_cap, groups
+
+
 def _crop_cell(cell: "CellResult", n: int, n_cap: int) -> "CellResult":
     """Slice the padded client axis of per-client outputs back to n."""
     if n == n_cap:
@@ -417,18 +502,6 @@ def execute_cells(
             f"scenario population exceeds the simulator capacity "
             f"N_cap={n_cap} (len(sim.p)): {over}")
 
-    def cell_mask_p(sc):
-        """(active_mask, p) for one cell of a ragged group. A
-        full-capacity cell gets an all-ones mask and the caller's
-        ``sim.p`` *unrenormalized*: multiplying by 1.0 and reusing p
-        verbatim keeps it bit-identical to the unmasked run, whereas
-        renormalizing would perturb it whenever p does not sum to
-        exactly 1.0 in f32."""
-        if sc.n_clients == n_cap:
-            return jnp.ones((n_cap,), jnp.float32), sim.p
-        return (population_mask(sc.n_clients, n_cap),
-                subpopulation_p(sim.p, sc.n_clients, n_cap))
-
     if sequential:
         if mesh is not None:
             raise ValueError("sequential execution does not take a mesh")
@@ -440,7 +513,7 @@ def execute_cells(
             if sc.n_clients != n_cap:
                 scheduler, energy, faults = _pad_built(
                     (scheduler, energy, faults), n_cap)
-                active, p_cell = cell_mask_p(sc)
+                active, p_cell = _cell_mask_p(sc, sim, n_cap)
             per_seed = []
             for s in seed_list:
                 out = sim.run(jax.random.PRNGKey(int(s)), params0, num_steps,
@@ -460,55 +533,34 @@ def execute_cells(
     if sharded:
         from repro.experiments import placement
 
-    # Pad below-capacity components to N_cap (an identity at capacity,
-    # so full-capacity components are used as built) and group on the
-    # padded structure; raggedness is then decided per group — only
-    # groups that actually mix population sizes pay for mask/p operands
-    # (and uniform groups keep their mask-free jit cache entries).
-    built = [sc.build() + (sc.build_faults(),) for sc in scenarios]
-    padded = [b if sc.n_clients == n_cap else _pad_built(b, n_cap)
-              for sc, b in zip(scenarios, built)]
-    groups: dict[Any, list[int]] = {}
-    for idx, (sch, en, flt) in enumerate(padded):
-        groups.setdefault(_group_key(sch, en, flt), []).append(idx)
+    _, _, groups = resolve_structure_groups(scenarios, sim=sim)
 
     results: list[CellResult | None] = [None] * len(scenarios)
-    for gkey, members in groups.items():
-        ragged = any(scenarios[i].n_clients != n_cap for i in members)
-        sch_batch = _stack([padded[i][0] for i in members])
-        en_batch = _stack([padded[i][1] for i in members])
-        # A fault-free group's components are all None — tree_map over
-        # all-None pytrees has no leaves and returns None, so the group
-        # dispatches the pre-fault-layer program verbatim.
-        flt_batch = _stack([padded[i][2] for i in members])
-        active_batch, p_batch = None, None
-        if ragged:
-            masks, ps = zip(*(cell_mask_p(scenarios[i]) for i in members))
-            active_batch, p_batch = jnp.stack(masks), jnp.stack(ps)
+    for grp in groups:
 
-        def run_vmap():
+        def run_vmap(grp=grp):
             if executable_cache is not None:
                 runner = executable_cache.group_runner(
-                    (gkey, ragged), sim=sim, num_steps=num_steps,
+                    (grp.key, grp.ragged), sim=sim, num_steps=num_steps,
                     eval_fn=eval_fn, eval_every=eval_every)
-                return runner(sch_batch, en_batch, flt_batch, active_batch,
-                              p_batch, params0, keys)
-            return _run_group(sch_batch, en_batch, flt_batch, active_batch,
-                              p_batch, params0, keys, sim=sim,
+                return runner(grp.scheduler, grp.energy, grp.faults,
+                              grp.active, grp.p, params0, keys)
+            return _run_group(grp.scheduler, grp.energy, grp.faults,
+                              grp.active, grp.p, params0, keys, sim=sim,
                               num_steps=num_steps, eval_fn=eval_fn,
                               eval_every=eval_every)
 
         if sharded:
-            member_names = [names[i] for i in members]
+            member_names = [names[i] for i in grp.members]
             reduction = client_reduction
             while True:
                 try:
                     out = placement.run_group_sharded(
-                        sch_batch, en_batch, active_batch, p_batch, params0,
+                        grp.scheduler, grp.energy, grp.active, grp.p, params0,
                         keys, sim=sim, num_steps=num_steps,
-                        n_scenarios=len(members), mesh=mesh, eval_fn=eval_fn,
-                        eval_every=eval_every, reduction=reduction,
-                        faults=flt_batch)
+                        n_scenarios=len(grp.members), mesh=mesh,
+                        eval_fn=eval_fn, eval_every=eval_every,
+                        reduction=reduction, faults=grp.faults)
                     break
                 except ValueError as e:
                     if not degrade:
@@ -525,7 +577,7 @@ def execute_cells(
                     break
         else:
             out = run_vmap()
-        for j, idx in enumerate(members):
+        for j, idx in enumerate(grp.members):
             cell = jax.tree_util.tree_map(lambda x: x[j], out)
             cell = _crop_cell(cell, scenarios[idx].n_clients, n_cap)
             results[idx] = _attach_divergence(cell)
@@ -636,13 +688,15 @@ def _init_group(scheduler, energy, faults, keys, params0, *,
         scheduler, energy, faults, keys)
 
 
-@partial(jax.jit, static_argnames=("sim", "num_steps", "spec"))
-def _advance_group(carry, scheduler, energy, faults, active, p, *,
-                   sim: ClientSimulator, num_steps: int, spec):
+def _advance_body(carry, scheduler, energy, faults, active, p, *,
+                  sim: ClientSimulator, num_steps: int, spec):
     """Advance an (S, R) carry batch ``num_steps`` rounds — one scan per
-    lane under vmap∘vmap, the chunked twin of :data:`_run_group`.
+    lane under vmap∘vmap, the chunked twin of :func:`_group_body`.
     Because the step stream is a pure function of the carry, chunked
-    advancement is bitwise identical to a single uninterrupted scan."""
+    advancement is bitwise identical to a single uninterrupted scan.
+    Shared by :data:`_advance_group` (process-global jit cache) and
+    :func:`make_chunk_runner` (per-instance evictable jit, the serve
+    layer's resumable executable store)."""
 
     def one(c, sch, en, flt, act, pw):
         return sim.run_carry(c, num_steps, scheduler=sch, energy=en,
@@ -654,10 +708,43 @@ def _advance_group(carry, scheduler, energy, faults, active, p, *,
         carry, scheduler, energy, faults, active, p)
 
 
-def _study_fingerprint(scenarios, num_steps, seed_list, params0) -> str:
+@partial(jax.jit, static_argnames=("sim", "num_steps", "spec"))
+def _advance_group(carry, scheduler, energy, faults, active, p, *,
+                   sim: ClientSimulator, num_steps: int, spec):
+    """Process-global jit wrapper of :func:`_advance_body`."""
+    return _advance_body(carry, scheduler, energy, faults, active, p,
+                         sim=sim, num_steps=num_steps, spec=spec)
+
+
+def make_chunk_runner(*, sim: ClientSimulator, chunk: int, spec,
+                      on_trace=None):
+    """A *fresh* jit wrapper around :func:`_advance_body` — the chunked
+    twin of :func:`make_group_runner`.
+
+    Each runner owns its jit cache, so the serve layer's
+    :class:`repro.serve.ExecutableCache` can memoize one per
+    (structure, chunk length, config) and genuinely release its compiled
+    executables on eviction; ``on_trace`` counts (re)traces the same
+    way. A warm resume — the same structure advancing through the same
+    chunk length — is a pure cache hit: zero new compiles.
+    """
+
+    def _runner(carry, scheduler, energy, faults, active, p):
+        if on_trace is not None:
+            on_trace()
+        return _advance_body(carry, scheduler, energy, faults, active, p,
+                             sim=sim, num_steps=chunk, spec=spec)
+
+    return jax.jit(_runner)
+
+
+def study_fingerprint(scenarios, num_steps, seed_list, params0) -> str:
     """Content hash binding a checkpoint directory to one exact study:
     canonical scenario specs + horizon + seeds + initial-parameter bytes.
-    Resume refuses a directory whose manifest fingerprint differs."""
+    Resume refuses a directory whose manifest fingerprint differs. The
+    serve layer keys per-dispatch-group checkpoint subdirectories on
+    this same hash, so a restarted service lands on the directory its
+    predecessor was writing."""
     h = hashlib.sha256()
     for sc in scenarios:
         d = dataclasses.asdict(sc)
@@ -704,6 +791,95 @@ def _pad_halted_history(history, num_steps: int):
                       finite=ext(history.finite, False))
 
 
+def _advance_resumable_group(
+    grp: StructureGroup, *, gid: str, sim: ClientSimulator, spec, params0,
+    keys, seed_list, num_steps: int, checkpoint_every: int,
+    checkpoint_dir: str, keep: int, manifest: dict, manifest_path: str,
+    halt_on_divergence: bool, executable_cache=None, progress=None,
+) -> CellResult:
+    """Advance ONE structure group to the horizon, checkpointed.
+
+    The factored inner loop of :func:`execute_cells_resumable`: restore
+    the group's newest complete checkpoint (or init fresh), advance in
+    ``checkpoint_every``-step chunks, and write ``{carry, history}``
+    plus the study manifest after every chunk. ``executable_cache``
+    routes each chunk advance through a memoized
+    :func:`make_chunk_runner` (warm resumes are zero-compile);
+    ``progress(gid, step, num_steps)`` fires once after restore/init and
+    once per completed chunk, which is how the serve layer reports
+    per-chunk dispatch progress.
+    """
+    from repro.checkpoint import CheckpointManager, latest_step, \
+        write_json_atomic
+    from repro.core import aggregation
+
+    n_cap = int(sim.p.shape[0])
+    mgr = CheckpointManager(os.path.join(checkpoint_dir, gid), keep=keep)
+    carry_tpl = jax.eval_shape(
+        partial(_init_group, sim=sim, spec=spec),
+        grp.scheduler, grp.energy, grp.faults, keys, params0)
+    step = latest_step(mgr.directory)
+    halted = manifest["groups"][gid]["halted"]
+    if step is None:
+        step = 0
+        halted = False
+        carry = _init_group(grp.scheduler, grp.energy, grp.faults, keys,
+                            params0, sim=sim, spec=spec)
+        history = None
+    else:
+        tpl = {"carry": carry_tpl,
+               "history": _history_template(len(grp.members), len(seed_list),
+                                            step, n_cap)}
+        state, step = mgr.restore(tpl, step)
+        carry, history = state["carry"], state["history"]
+    if progress is not None:
+        progress(gid, step, num_steps)
+
+    def save_state(step, carry, history, halted):
+        mgr.save(step, {"carry": carry, "history": history})
+        manifest["groups"][gid]["step"] = step
+        manifest["groups"][gid]["halted"] = bool(halted)
+        write_json_atomic(manifest_path, manifest)
+
+    while step < num_steps and not halted:
+        chunk = min(checkpoint_every, num_steps - step)
+        if executable_cache is not None:
+            runner = executable_cache.chunk_runner(
+                (grp.key, grp.ragged, chunk), sim=sim, chunk=chunk, spec=spec)
+            carry, hist = runner(carry, grp.scheduler, grp.energy, grp.faults,
+                                 grp.active, grp.p)
+        else:
+            carry, hist = _advance_group(
+                carry, grp.scheduler, grp.energy, grp.faults, grp.active,
+                grp.p, sim=sim, num_steps=chunk, spec=spec)
+        hist = jax.tree_util.tree_map(np.asarray, hist)
+        history = hist if history is None else jax.tree_util.tree_map(
+            lambda a, b: np.concatenate([a, b], axis=2), history, hist)
+        step += chunk
+        if halt_on_divergence and not np.asarray(
+                history.finite[..., -1]).any():
+            halted = True
+        save_state(step, carry, history, halted)
+        if progress is not None:
+            progress(gid, step, num_steps)
+
+    if history is None:  # num_steps == 0 degenerate study
+        history = jax.tree_util.tree_map(
+            lambda s: np.zeros(s.shape, s.dtype),
+            _history_template(len(grp.members), len(seed_list), 0, n_cap))
+    if halted:
+        history = _pad_halted_history(history, num_steps)
+
+    if spec is None:
+        params = carry.params
+    else:
+        unravel = lambda q: aggregation.unravel_pytree(q, spec)  # noqa: E731
+        params = jax.vmap(jax.vmap(unravel))(jnp.asarray(carry.params))
+    return CellResult(params=params,
+                      history=SimHistory(*map(jnp.asarray, history)),
+                      evals=None)
+
+
 def execute_cells_resumable(
     scenarios: Sequence[Scenario],
     *,
@@ -715,13 +891,16 @@ def execute_cells_resumable(
     checkpoint_every: int = 0,
     keep: int = 3,
     halt_on_divergence: bool = False,
+    executable_cache=None,
+    progress=None,
 ) -> dict[str, CellResult]:
     """Preemption-safe :func:`execute_cells`: chunked scans + checkpoints.
 
     Execution proceeds structure group by structure group (same grouping
-    as the batched path), each group advancing in ``checkpoint_every``
-    -step chunks through :data:`_advance_group`; after every chunk the
-    group's ``{carry, history}`` pytree is written atomically under
+    as the batched path — :func:`resolve_structure_groups`), each group
+    advancing in ``checkpoint_every``-step chunks
+    (:func:`_advance_resumable_group`); after every chunk the group's
+    ``{carry, history}`` pytree is written atomically under
     ``checkpoint_dir/<gid>/step_<t>.npz`` and the study manifest
     (``manifest.json``) is rewritten. Because each chunk is a pure
     function of the carry, a run killed at *any* point — including
@@ -732,7 +911,7 @@ def execute_cells_resumable(
     only the tail.
 
     The manifest binds the directory to one exact study via
-    :func:`_study_fingerprint` (scenario specs + horizon + seeds +
+    :func:`study_fingerprint` (scenario specs + horizon + seeds +
     params0 bytes); resuming with anything changed raises. Layout::
 
         {"format": "study-manifest/v1", "fingerprint": "<sha256>",
@@ -745,46 +924,37 @@ def execute_cells_resumable(
     the unrun tail is reported as NaN metrics with ``finite=False``.
     Eval hooks and meshes are not supported on this path — run those
     studies unchunked.
+
+    ``executable_cache`` (DESIGN.md §12) memoizes one fresh
+    :func:`make_chunk_runner` jit wrapper per (structure, chunk length)
+    — the serve layer binds its keyed :class:`repro.serve.
+    ExecutableCache` here so repeat resumable traffic, including a warm
+    resume after an interruption, adds zero new compiles.
+    ``progress(gid, step, num_steps)`` reports per-chunk advancement.
     """
-    from repro.checkpoint import (CheckpointManager, latest_step,
-                                  write_json_atomic)
-    from repro.core import aggregation
+    from repro.checkpoint import write_json_atomic
 
     scenarios = list(scenarios)
     del _LAST_DOWNGRADES[:]  # no ladder here, but keep the report current
-    names = check_unique_names(scenarios)
     seed_list, keys = _seed_keys(seeds)
     num_steps = int(num_steps)
     if checkpoint_every <= 0:
         checkpoint_every = num_steps
 
-    n_cap = int(sim.p.shape[0])
-    over = [f"{sc.name} (N={sc.n_clients})" for sc in scenarios
-            if sc.n_clients > n_cap]
-    if over:
-        raise ValueError(
-            f"scenario population exceeds the simulator capacity "
-            f"N_cap={n_cap} (len(sim.p)): {over}")
+    names, n_cap, groups = resolve_structure_groups(scenarios, sim=sim)
     spec = sim.flat_spec(params0)
-
-    built = [sc.build() + (sc.build_faults(),) for sc in scenarios]
-    padded = [b if sc.n_clients == n_cap else _pad_built(b, n_cap)
-              for sc, b in zip(scenarios, built)]
-    groups: dict[Any, list[int]] = {}
-    for idx, (sch, en, flt) in enumerate(padded):
-        groups.setdefault(_group_key(sch, en, flt), []).append(idx)
     gids = [f"g{g:03d}" for g in range(len(groups))]
 
     manifest_path = os.path.join(checkpoint_dir, "manifest.json")
-    fingerprint = _study_fingerprint(scenarios, num_steps, seed_list, params0)
+    fingerprint = study_fingerprint(scenarios, num_steps, seed_list, params0)
     manifest = {
         "format": MANIFEST_FORMAT,
         "fingerprint": fingerprint,
         "num_steps": num_steps,
         "checkpoint_every": int(checkpoint_every),
-        "groups": {gid: {"members": [names[i] for i in members],
+        "groups": {gid: {"members": [names[i] for i in grp.members],
                          "step": 0, "halted": False}
-                   for gid, members in zip(gids, groups.values())},
+                   for gid, grp in zip(gids, groups)},
     }
     if os.path.exists(manifest_path):
         with open(manifest_path) as f:
@@ -804,77 +974,16 @@ def execute_cells_resumable(
     else:
         write_json_atomic(manifest_path, manifest)
 
-    def save_state(mgr, gid, step, carry, history, halted):
-        mgr.save(step, {"carry": carry, "history": history})
-        manifest["groups"][gid]["step"] = step
-        manifest["groups"][gid]["halted"] = bool(halted)
-        write_json_atomic(manifest_path, manifest)
-
-    def unflatten_params(flat_params):
-        if spec is None:
-            return flat_params
-        unravel = lambda q: aggregation.unravel_pytree(q, spec)  # noqa: E731
-        return jax.vmap(jax.vmap(unravel))(jnp.asarray(flat_params))
-
     results: list[CellResult | None] = [None] * len(scenarios)
-    for gid, members in zip(gids, groups.values()):
-        sch_batch = _stack([padded[i][0] for i in members])
-        en_batch = _stack([padded[i][1] for i in members])
-        flt_batch = _stack([padded[i][2] for i in members])
-        ragged = any(scenarios[i].n_clients != n_cap for i in members)
-        active_batch, p_batch = None, None
-        if ragged:
-            masks, ps = zip(*((population_mask(scenarios[i].n_clients, n_cap),
-                               subpopulation_p(sim.p, scenarios[i].n_clients,
-                                               n_cap))
-                              if scenarios[i].n_clients != n_cap else
-                              (jnp.ones((n_cap,), jnp.float32), sim.p)
-                              for i in members))
-            active_batch, p_batch = jnp.stack(masks), jnp.stack(ps)
-
-        mgr = CheckpointManager(os.path.join(checkpoint_dir, gid), keep=keep)
-        carry_tpl = jax.eval_shape(
-            partial(_init_group, sim=sim, spec=spec),
-            sch_batch, en_batch, flt_batch, keys, params0)
-        step = latest_step(mgr.directory)
-        halted = manifest["groups"][gid]["halted"]
-        if step is None:
-            step = 0
-            halted = False
-            carry = _init_group(sch_batch, en_batch, flt_batch, keys, params0,
-                                sim=sim, spec=spec)
-            history = None
-        else:
-            tpl = {"carry": carry_tpl,
-                   "history": _history_template(len(members), len(seed_list),
-                                                step, n_cap)}
-            state, step = mgr.restore(tpl, step)
-            carry, history = state["carry"], state["history"]
-
-        while step < num_steps and not halted:
-            chunk = min(checkpoint_every, num_steps - step)
-            carry, hist = _advance_group(
-                carry, sch_batch, en_batch, flt_batch, active_batch, p_batch,
-                sim=sim, num_steps=chunk, spec=spec)
-            hist = jax.tree_util.tree_map(np.asarray, hist)
-            history = hist if history is None else jax.tree_util.tree_map(
-                lambda a, b: np.concatenate([a, b], axis=2), history, hist)
-            step += chunk
-            if halt_on_divergence and not np.asarray(
-                    history.finite[..., -1]).any():
-                halted = True
-            save_state(mgr, gid, step, carry, history, halted)
-
-        if history is None:  # num_steps == 0 degenerate study
-            history = jax.tree_util.tree_map(
-                lambda s: np.zeros(s.shape, s.dtype),
-                _history_template(len(members), len(seed_list), 0, n_cap))
-        if halted:
-            history = _pad_halted_history(history, num_steps)
-        out = CellResult(params=unflatten_params(carry.params),
-                         history=SimHistory(*map(jnp.asarray, history)),
-                         evals=None)
-        for j, idx in enumerate(members):
+    for gid, grp in zip(gids, groups):
+        out = _advance_resumable_group(
+            grp, gid=gid, sim=sim, spec=spec, params0=params0, keys=keys,
+            seed_list=seed_list, num_steps=num_steps,
+            checkpoint_every=checkpoint_every, checkpoint_dir=checkpoint_dir,
+            keep=keep, manifest=manifest, manifest_path=manifest_path,
+            halt_on_divergence=halt_on_divergence,
+            executable_cache=executable_cache, progress=progress)
+        for j, idx in enumerate(grp.members):
             cell = jax.tree_util.tree_map(lambda x: x[j], out)
             cell = _crop_cell(cell, scenarios[idx].n_clients, n_cap)
             results[idx] = _attach_divergence(cell)

@@ -270,12 +270,10 @@ class Study:
         """
         key = (grads_fn, optimizer, loss_fn, use_kernel,
                tuple(np.asarray(p, np.float32).reshape(-1).tolist()))
-        sim = self._sim_cache.get(key)
-        if sim is None:
-            sim = ClientSimulator(grads_fn=grads_fn, p=p, optimizer=optimizer,
-                                  loss_fn=loss_fn, use_kernel=use_kernel)
-            self._sim_cache.put(key, sim)
-        return sim
+        return self._sim_cache.get_or_create(
+            key, lambda: ClientSimulator(
+                grads_fn=grads_fn, p=p, optimizer=optimizer,
+                loss_fn=loss_fn, use_kernel=use_kernel))
 
     def cache_stats(self) -> dict:
         """Hit/miss/eviction counters + occupancy of the simulator

@@ -14,6 +14,14 @@ one compiled trace:
     # one structure, one compile
     PYTHONPATH=src python -m repro.launch.serve --demo
 
+    # preemption-safe serving (DESIGN.md §12): checkpoint every 20
+    # steps under --checkpoint-root; a killed run is picked up with
+    # --recover, which resumes partial dispatches bitwise
+    PYTHONPATH=src python -m repro.launch.serve --demo \
+        --checkpoint-root /tmp/serve-ck --checkpoint-every 20
+    PYTHONPATH=src python -m repro.launch.serve \
+        --checkpoint-root /tmp/serve-ck --recover
+
 Prints one summary line per request (cells, quarantined cells, latency)
 plus the batch/cache counters that show the single-trace collapse.
 Replaces the seed-era LM decode driver; `examples/serve_batch.py` is
@@ -29,7 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.convergence import make_quadratic
-from repro.experiments import Study
+from repro.experiments import ExecutionConfig, Study
 from repro.optim import sgd
 from repro.serve import StudyService
 
@@ -66,10 +74,24 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--cache-size", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint-root", default=None,
+                    help="directory for resumable dispatch checkpoints "
+                         "(enables --checkpoint-every and --recover)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="checkpoint cadence in steps; > 0 routes "
+                         "dispatches through the preemption-safe "
+                         "chunked path (requires --checkpoint-root)")
+    ap.add_argument("--recover", action="store_true",
+                    help="resume every partial dispatch recorded under "
+                         "--checkpoint-root before serving new requests")
     args = ap.parse_args(argv)
 
-    if not args.manifests and not args.demo:
-        ap.error("give manifest files or --demo")
+    if not args.manifests and not args.demo and not args.recover:
+        ap.error("give manifest files, --demo, or --recover")
+    if args.checkpoint_every and not args.checkpoint_root:
+        ap.error("--checkpoint-every requires --checkpoint-root")
+    if args.recover and not args.checkpoint_root:
+        ap.error("--recover requires --checkpoint-root")
 
     payloads = []
     for path in args.manifests:
@@ -84,12 +106,23 @@ def main(argv=None):
     service = StudyService(
         grads_fn=lambda w, k, t: prob.all_grads(w), p=prob.p,
         optimizer=sgd(args.lr), params0=jnp.zeros(args.dim),
-        cache_size=args.cache_size)
+        cache_size=args.cache_size, checkpoint_root=args.checkpoint_root)
 
+    responses = []
     rids = {}
+    if args.recover:
+        recovered = service.recover()
+        responses += [service.result(r) for r in recovered]
+        rids.update({r: "recovered" for r in recovered})
+        print(f"recovered {len(recovered)} request(s) from "
+              f"{args.checkpoint_root}")
+
+    config = None
+    if args.checkpoint_every:
+        config = ExecutionConfig(checkpoint_every=args.checkpoint_every)
     for origin, text in payloads:
-        rids[service.submit(text)] = origin
-    responses = service.flush()
+        rids[service.submit(text, config)] = origin
+    responses += service.flush()
 
     for resp in responses:
         origin = rids.get(resp.request_id, "?")
@@ -99,10 +132,13 @@ def main(argv=None):
             continue
         quarantined = (f" quarantined={resp.quarantined}"
                        if resp.quarantined else "")
+        resumed = (f" checkpointed(resumed_steps="
+                   f"{resp.batch['resumed_steps']})"
+                   if resp.batch.get("resumable") else "")
         print(f"{resp.request_id} {resp.study!r} ({origin}): "
               f"{len(resp.records)} cell(s), "
               f"latency {resp.timings['latency_us'] / 1e3:.1f} ms"
-              f"{quarantined}")
+              f"{quarantined}{resumed}")
     stats = service.stats()
     print("service:", json.dumps(stats, sort_keys=True))
     return responses

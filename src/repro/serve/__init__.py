@@ -22,10 +22,15 @@ from repro.experiments.manifest import (
     study_to_manifest,
 )
 from repro.serve.cache import BoundExecutableCache, ExecutableCache
-from repro.serve.service import BackgroundServer, ServeResponse, StudyService
+from repro.serve.service import (
+    DISPATCH_FORMAT,
+    BackgroundServer,
+    ServeResponse,
+    StudyService,
+)
 
 __all__ = [
-    "EXEC_FORMAT", "REQUEST_FORMAT", "STUDY_FORMAT",
+    "DISPATCH_FORMAT", "EXEC_FORMAT", "REQUEST_FORMAT", "STUDY_FORMAT",
     "BackgroundServer", "BoundExecutableCache", "ExecutableCache",
     "ServeResponse", "StudyService",
     "request_from_manifest", "request_to_manifest",

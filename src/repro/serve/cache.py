@@ -20,6 +20,8 @@ compiles once) directly.
 
 from __future__ import annotations
 
+import threading
+
 from repro._lru import LRUCache
 from repro.experiments import engine
 
@@ -40,21 +42,32 @@ class ExecutableCache:
     def __init__(self, maxsize: int = 32):
         self._lru = LRUCache(maxsize=maxsize)
         self._compiles = 0
+        self._compile_lock = threading.Lock()
 
     def _on_trace(self) -> None:
-        self._compiles += 1
+        with self._compile_lock:
+            self._compiles += 1
 
     def group_runner(self, key, *, sim, num_steps: int, eval_fn=None,
                      eval_every: int = 0, extra=()):
         full_key = (key, tuple(extra), sim, int(num_steps), eval_fn,
                     int(eval_every))
-        runner = self._lru.get(full_key)
-        if runner is None:
-            runner = engine.make_group_runner(
+        return self._lru.get_or_create(
+            full_key, lambda: engine.make_group_runner(
                 sim=sim, num_steps=num_steps, eval_fn=eval_fn,
-                eval_every=eval_every, on_trace=self._on_trace)
-            self._lru.put(full_key, runner)
-        return runner
+                eval_every=eval_every, on_trace=self._on_trace))
+
+    def chunk_runner(self, key, *, sim, chunk: int, spec, extra=()):
+        """Memoized :func:`repro.experiments.engine.make_chunk_runner`
+        — the resumable path's analogue of :meth:`group_runner`. Keyed
+        on (structure key, chunk length, flat spec, extras), so a warm
+        resume of an interrupted dispatch — same structure, same
+        checkpoint cadence — reuses the already-compiled chunk advance:
+        zero new compiles (DESIGN.md §12)."""
+        full_key = ("chunk", key, tuple(extra), sim, int(chunk), spec)
+        return self._lru.get_or_create(
+            full_key, lambda: engine.make_chunk_runner(
+                sim=sim, chunk=chunk, spec=spec, on_trace=self._on_trace))
 
     def bind(self, *extra) -> "BoundExecutableCache":
         """A view whose keys are widened with ``extra`` (hashable) —
@@ -91,6 +104,9 @@ class BoundExecutableCache:
 
     def group_runner(self, key, **kw):
         return self._cache.group_runner(key, extra=self._extra, **kw)
+
+    def chunk_runner(self, key, **kw):
+        return self._cache.chunk_runner(key, extra=self._extra, **kw)
 
     def stats(self) -> dict:
         return self._cache.stats()

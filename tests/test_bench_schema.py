@@ -148,6 +148,14 @@ def _serve_records(**overrides):
                         "evictions": 0, "compiles": 1, "warm_compiles": 0},
         "serve_collapse": {"populations": 6, "compiles": 1,
                            "single_trace": True, "executable_entries": 1},
+        "serve_resume_uninterrupted": {"chunks": 4, "checkpoint_every": 50,
+                                       "rounds": 4},
+        "serve_resume_latency": {"resume_us": 60000.0,
+                                 "partial_us": 55000.0,
+                                 "uninterrupted_us": 100000.0,
+                                 "overhead_pct": 15.0,
+                                 "resumed_steps": 100, "new_compiles": 0},
+        "serve_resume_bitwise": {"bitwise": True, "requests": 8},
     }
     for name, kv in overrides.items():
         derived[name] = {**derived[name], **kv}
@@ -196,6 +204,20 @@ def test_serve_series_warm_recompiles_rejected():
     the bench must fail loudly, not record a regression silently."""
     records = _serve_records(serve_cache={"warm_compiles": 2})
     with pytest.raises(ValueError, match=r"warm_compiles=2"):
+        bench_run.check_serve_series(records)
+
+
+def test_serve_resume_warm_recompile_rejected():
+    """A warm resume that recompiles defeats the keyed chunk-runner
+    cache — the bench fails loudly instead of logging the regression."""
+    records = _serve_records(serve_resume_latency={"new_compiles": 1})
+    with pytest.raises(ValueError, match=r"new_compiles=1.*recompiled"):
+        bench_run.check_serve_series(records)
+
+
+def test_serve_resume_bitwise_drift_rejected():
+    records = _serve_records(serve_resume_bitwise={"bitwise": False})
+    with pytest.raises(ValueError, match=r"bitwise=False.*drifted"):
         bench_run.check_serve_series(records)
 
 

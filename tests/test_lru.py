@@ -1,0 +1,140 @@
+"""repro._lru.LRUCache: bounded-LRU semantics + thread safety.
+
+The serve layer hits one cache from a BackgroundServer flush thread, a
+user thread, and the stop() drain concurrently (ISSUE 9 satellite); a
+plain OrderedDict corrupts or double-builds under that load. These
+tests hammer a single cache from many threads and assert (a) no
+corruption, (b) ``get_or_create`` builds each key's value exactly once,
+(c) counters are consistent (no lost updates).
+"""
+
+import threading
+
+import pytest
+
+from repro._lru import LRUCache
+
+
+def test_get_put_hit_miss_counters():
+    c = LRUCache(maxsize=2)
+    assert c.get("a") is None
+    c.put("a", 1)
+    assert c.get("a") == 1
+    assert c.stats() == {"hits": 1, "misses": 1, "evictions": 0,
+                         "size": 1, "maxsize": 2}
+
+
+def test_eviction_order_and_on_evict_callback():
+    evicted = []
+    c = LRUCache(maxsize=2, on_evict=lambda k, v: evicted.append((k, v)))
+    c.put("a", 1)
+    c.put("b", 2)
+    c.get("a")          # refresh "a" — "b" is now coldest
+    c.put("c", 3)
+    assert evicted == [("b", 2)]
+    assert "a" in c and "c" in c and "b" not in c
+
+
+def test_on_evict_may_reenter_cache():
+    # on_evict runs outside the lock (docstring contract): re-entering
+    # the cache from the callback must not deadlock.
+    c = LRUCache(maxsize=1)
+    seen = []
+    c._on_evict = lambda k, v: seen.append((k, c.get(k)))
+    c.put("a", 1)
+    c.put("b", 2)
+    assert seen == [("a", None)]
+
+
+def test_get_or_create_builds_once_per_key():
+    c = LRUCache(maxsize=4)
+    calls = []
+    v1 = c.get_or_create("k", lambda: calls.append(1) or "built")
+    v2 = c.get_or_create("k", lambda: calls.append(1) or "rebuilt")
+    assert v1 == v2 == "built"
+    assert len(calls) == 1
+    assert c.hits == 1 and c.misses == 1
+
+
+def test_pop_removes_without_eviction_accounting():
+    c = LRUCache(maxsize=4)
+    c.put("a", 1)
+    assert c.pop("a") == 1
+    assert c.pop("a", "gone") == "gone"
+    assert c.evictions == 0 and len(c) == 0
+
+
+@pytest.mark.parametrize("n_threads", [8])
+def test_concurrent_get_or_create_single_build(n_threads):
+    """N threads race get_or_create on the same keys: each key's
+    factory runs exactly once, and hits + misses == total calls."""
+    c = LRUCache(maxsize=64)
+    n_keys, rounds = 16, 50
+    builds = [0] * n_keys
+    build_lock = threading.Lock()
+    barrier = threading.Barrier(n_threads)
+    errors = []
+
+    def factory(k):
+        with build_lock:
+            builds[k] += 1
+        return ("value", k)
+
+    def worker():
+        try:
+            barrier.wait()
+            for r in range(rounds):
+                for k in range(n_keys):
+                    v = c.get_or_create(k, lambda k=k: factory(k))
+                    assert v == ("value", k)
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    assert not errors
+    assert builds == [1] * n_keys
+    total = n_threads * rounds * n_keys
+    st = c.stats()
+    assert st["hits"] + st["misses"] == total
+    assert st["misses"] == n_keys
+    assert st["size"] == n_keys
+
+
+def test_concurrent_put_get_under_eviction_pressure():
+    """Hammer a tiny cache (constant eviction) from many threads —
+    no corruption, eviction counter consistent with insert volume."""
+    c = LRUCache(maxsize=4)
+    n_threads, rounds, n_keys = 8, 200, 32
+    barrier = threading.Barrier(n_threads)
+    errors = []
+
+    def worker(tid):
+        try:
+            barrier.wait()
+            for r in range(rounds):
+                k = (tid * rounds + r) % n_keys
+                c.put(k, k * 10)
+                got = c.get(k)
+                assert got is None or got == k * 10
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    assert not errors
+    assert len(c) <= 4
+    st = c.stats()
+    # every put either landed in the final 4 or was evicted
+    assert st["evictions"] + st["size"] <= n_threads * rounds
+    for k in c.keys():
+        assert c.get(k) == k * 10

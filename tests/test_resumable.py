@@ -245,6 +245,118 @@ def test_kill9_and_resume_bitwise(sim, tmp_path):
     _assert_results_bitwise(resumed, ref)
 
 
+# ------------------------------------- kill -9 / recover (serve, §12)
+
+_SERVE_CHILD = textwrap.dedent("""
+    import os, signal, sys
+    import jax, jax.numpy as jnp
+    from repro.checkpoint.checkpoint import CheckpointManager
+    from repro.core import make_quadratic
+    from repro.experiments import ExecutionConfig, Study
+    from repro.optim import sgd
+    from repro.serve import StudyService
+
+    root, kill_after = sys.argv[1], int(sys.argv[2])
+    saves = 0
+    orig_save = CheckpointManager.save
+
+    def save(self, step, tree):
+        global saves
+        out = orig_save(self, step, tree)
+        saves += 1
+        if saves >= kill_after:
+            os.kill(os.getpid(), signal.SIGKILL)
+        return out
+
+    CheckpointManager.save = save
+
+    N, DIM, STEPS = 8, 6, 30
+    problem = make_quadratic(jax.random.PRNGKey(2), n_clients=N, dim=DIM)
+    service = StudyService(
+        grads_fn=lambda p, k, t: problem.all_grads(p, key=k, noise=0.05),
+        p=problem.p, optimizer=sgd(0.02), loss_fn=problem.suboptimality,
+        params0=jnp.full((DIM,), 4.0), checkpoint_root=root)
+    cfg = ExecutionConfig(checkpoint_every=8)
+    for name, n in (("alpha", N), ("beta", 6)):
+        study = (Study(name, num_steps=STEPS).axis("scheduler", "alg1")
+                 .axis("arrivals", "periodic").axis("n_clients", n)
+                 .axis("seeds", [0, 1]))
+        service.submit(study, cfg)
+    service.flush()  # SIGKILLed mid-dispatch by the save hook
+    raise SystemExit(99)  # must never get here
+""")
+
+
+@pytest.mark.serve
+def test_service_kill9_and_recover_bitwise(sim, tmp_path):
+    """The tentpole acceptance test: a StudyService dispatch SIGKILLed
+    mid-run in a subprocess is recovered by a FRESH service pointed at
+    the same checkpoint root — recover() finds the dispatch.json record,
+    resubmits its studies, resumes from the surviving checkpoints, and
+    the responses are bitwise identical (every tree leaf) to the same
+    dispatch run uninterrupted."""
+    from repro.experiments import ExecutionConfig, Study
+    from repro.serve import StudyService
+
+    root = str(tmp_path / "serve-ck")
+    script = tmp_path / "serve_child.py"
+    script.write_text(_SERVE_CHILD)
+    src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, str(script), root, "2"],
+                          env=env, capture_output=True, text=True,
+                          timeout=300)
+    assert proc.returncode == -signal.SIGKILL, (proc.returncode, proc.stderr)
+
+    # it died mid-dispatch: the recovery record landed before execution,
+    # and at least one group is short of the horizon
+    dirs = [d for d in os.listdir(root) if d.startswith("d")]
+    assert len(dirs) == 1, os.listdir(root)
+    rec = json.load(open(os.path.join(root, dirs[0], "dispatch.json")))
+    assert rec["format"] == "serve-dispatch/v1"
+    assert len(rec["studies"]) == 2
+    manifest = json.load(open(os.path.join(root, dirs[0], "manifest.json")))
+    assert any(g["step"] < STEPS for g in manifest["groups"].values())
+
+    def serve_studies(service):
+        cfg = ExecutionConfig(checkpoint_every=8)
+        for name, n in (("alpha", N), ("beta", 6)):
+            study = (Study(name, num_steps=STEPS).axis("scheduler", "alg1")
+                     .axis("arrivals", "periodic").axis("n_clients", n)
+                     .axis("seeds", [0, 1]))
+            service.submit(study, cfg)
+        return {r.study: r for r in service.flush()}
+
+    def make_svc(ckroot):
+        return StudyService(grads_fn=sim.grads_fn, p=sim.p,
+                            optimizer=sim.optimizer, loss_fn=sim.loss_fn,
+                            params0=params0(), checkpoint_root=ckroot)
+
+    # the uninterrupted reference: the SAME dispatch (same merged batch
+    # composition) served end-to-end against a different root
+    reference = serve_studies(make_svc(str(tmp_path / "ref-ck")))
+    assert all(r.error is None for r in reference.values())
+
+    fresh = make_svc(root)
+    rids = fresh.recover()
+    assert len(rids) == 2
+    by_name = {fresh.result(r).study: fresh.result(r) for r in rids}
+    assert set(by_name) == {"alpha", "beta"}
+    for name in ("alpha", "beta"):
+        resp = by_name[name]
+        assert resp.error is None
+        assert resp.batch["resumed_steps"] > 0  # it resumed, not recomputed
+        ref = reference[name].result
+        assert set(resp.result.cells) == set(ref.cells)
+        for cell in ref.cells:
+            for la, lb in zip(
+                    jax.tree_util.tree_leaves(ref.cells[cell]),
+                    jax.tree_util.tree_leaves(resp.result.cells[cell])):
+                np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                              err_msg=f"{name}/{cell}")
+
+
 # --------------------------------------------------- train.py --resume
 
 def test_train_resume_matches_straight_run(tmp_path):

@@ -14,6 +14,8 @@ The tentpole invariants:
 """
 
 import dataclasses
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -191,14 +193,50 @@ def test_dispatch_failure_isolated_to_its_group(prob, grads_fn, monkeypatch):
 # ---------------------------------------------------------------- admission
 
 def test_unserveable_config_rejected_at_submit(prob, grads_fn):
+    """Live-object / sequential configs still refuse at submit — and the
+    check compares against field *defaults*, not truthiness."""
     svc = make_service(prob, grads_fn)
     study = make_study("s", 4)
-    for field, value in (("sequential", True), ("checkpoint_dir", "/tmp/x"),
-                         ("eval_fn", lambda p: p)):
+    for field, value in (("sequential", True), ("eval_fn", lambda p: p),
+                         ("mesh", object())):
         cfg = ExecutionConfig(**{field: value})
         with pytest.raises(ValueError, match=rf"{field}.*not serveable"):
             svc.submit(study, config=cfg)
     assert svc.pending == 0
+
+
+def test_incoherent_checkpoint_config_raises_located_error(prob, grads_fn):
+    """checkpoint_every without anywhere to write, and resumable-only or
+    resumable-meaningless fields set on the wrong path, must raise an
+    error naming the offending field — not pass silently (the old
+    truthiness check let checkpoint_every=20 through with no dir)."""
+    svc = make_service(prob, grads_fn)  # no checkpoint_root
+    study = make_study("s", 4)
+    cases = (
+        (dict(checkpoint_every=20), r"checkpoint_every=20"),
+        (dict(checkpoint_every=-1), r"checkpoint_every=-1"),
+        (dict(checkpoint_keep=5), r"checkpoint_keep=5"),
+        (dict(halt_on_divergence=True), r"halt_on_divergence=True"),
+        (dict(checkpoint_every=5, checkpoint_dir="/tmp/x",
+              client_reduction="gather"), r"client_reduction='gather'"),
+        (dict(checkpoint_every=5, checkpoint_dir="/tmp/x", degrade=True),
+         r"degrade"),
+    )
+    for fields, pattern in cases:
+        with pytest.raises(ValueError, match=pattern):
+            svc.submit(study, config=ExecutionConfig(**fields))
+    assert svc.pending == 0
+
+
+def test_checkpoint_every_admitted_with_service_root(prob, grads_fn,
+                                                     tmp_path):
+    """The same checkpoint_every-only config that raises without a root
+    is serveable once the service owns one."""
+    svc = make_service(prob, grads_fn, checkpoint_root=str(tmp_path))
+    rid = svc.submit(make_study("s", 4), ExecutionConfig(checkpoint_every=10))
+    (resp,) = svc.flush()
+    assert resp.error is None and resp.request_id == rid
+    assert resp.batch["resumable"] is True
 
 
 def test_capacity_overflow_rejected_at_submit(prob, grads_fn):
@@ -261,3 +299,217 @@ def test_result_before_flush_raises(prob, grads_fn):
         svc.result(rid)
     svc.flush()
     assert svc.result(rid).request_id == rid
+
+
+# -------------------------------------------------- resumable dispatch (§12)
+
+def _assert_grids_bitwise(a, b):
+    assert set(a.cells) == set(b.cells)
+    for name in a.cells:
+        for la, lb in zip(jax.tree_util.tree_leaves(a.cells[name]),
+                          jax.tree_util.tree_leaves(b.cells[name])):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_resumable_dispatch_bitwise_equals_unchunked(prob, grads_fn,
+                                                     tmp_path):
+    """A checkpointed (chunked) serve dispatch returns results bitwise
+    equal to the plain unchunked vmap engine — chunking a scan never
+    changes a bit (PR 7 invariant, now on the serve path)."""
+    svc = make_service(prob, grads_fn, checkpoint_root=str(tmp_path))
+    cfg = ExecutionConfig(checkpoint_every=5)
+    studies = [make_study(f"s{i}", n) for i, n in enumerate((3, 5, 8))]
+    rids = [svc.submit(s, cfg) for s in studies]
+    responses = svc.flush()
+    assert all(r.error is None for r in responses)
+    assert responses[0].batch["chunks"] == STEPS // 5
+    for rid, study in zip(rids, studies):
+        solo = study.run(grads_fn=grads_fn, p=prob.p, optimizer=sgd(0.05),
+                         params0=jnp.zeros(DIM))
+        _assert_grids_bitwise(solo, svc.result(rid).result)
+
+
+def test_interrupted_dispatch_warm_resume_zero_new_compiles(
+        prob, grads_fn, tmp_path, monkeypatch):
+    """Kill a checkpointed dispatch mid-run (save raises after 2 chunks),
+    resubmit the same manifests: the retry resumes from the checkpoint
+    tail with ZERO new compiles (chunk runners come from the keyed
+    executable cache) and the result is bitwise equal to an
+    uninterrupted run."""
+    from repro.checkpoint import CheckpointManager
+
+    svc = make_service(prob, grads_fn, checkpoint_root=str(tmp_path))
+    cfg = ExecutionConfig(checkpoint_every=5)
+    manifests = [make_study(f"s{i}", n).to_json() for i, n in
+                 enumerate((3, 5, 8))]
+
+    real_save, saves = CheckpointManager.save, [0]
+
+    def dying_save(self, step, state):
+        if saves[0] >= 2:
+            raise RuntimeError("injected preemption")
+        saves[0] += 1
+        return real_save(self, step, state)
+
+    monkeypatch.setattr(CheckpointManager, "save", dying_save)
+    for m in manifests:
+        svc.submit(m, ExecutionConfig(checkpoint_every=5))
+    (first, *_) = svc.flush()
+    assert first.error is not None and "injected preemption" in first.error
+
+    monkeypatch.setattr(CheckpointManager, "save", real_save)
+    rids = [svc.submit(m, cfg) for m in manifests]
+    before = svc.stats()["compiles"]
+    responses = svc.flush()
+    assert all(r.error is None for r in responses)
+    assert responses[0].batch["resumed_steps"] == 10  # 2 chunks survived
+    assert responses[0].batch["new_compiles"] == 0
+    assert svc.stats()["compiles"] == before  # warm resume: pure dispatch
+    for rid, n in zip(rids, (3, 5, 8)):
+        solo = make_study(f"s{rids.index(rid)}", n).run(
+            grads_fn=grads_fn, p=prob.p, optimizer=sgd(0.05),
+            params0=jnp.zeros(DIM))
+        _assert_grids_bitwise(solo, svc.result(rid).result)
+
+
+def test_recover_restores_completed_dispatch_without_execution(
+        prob, grads_fn, tmp_path):
+    """A fresh service pointed at the checkpoint root rediscovers a
+    finished dispatch from its dispatch.json and serves it by pure
+    checkpoint restore — zero compiles, zero chunks, bitwise equal."""
+    root = str(tmp_path)
+    cfg = ExecutionConfig(checkpoint_every=5)
+    svc = make_service(prob, grads_fn, checkpoint_root=root)
+    rid = svc.submit(make_study("s", 5), cfg)
+    svc.flush()
+    original = svc.result(rid).result
+
+    fresh = make_service(prob, grads_fn, checkpoint_root=root)
+    (rid2,) = fresh.recover()
+    resp = fresh.result(rid2)
+    assert resp.error is None
+    assert resp.batch["resumed_steps"] == STEPS
+    assert resp.batch["chunks"] == 0
+    assert fresh.stats()["compiles"] == 0
+    _assert_grids_bitwise(original, resp.result)
+
+
+def test_recover_without_root_raises(prob, grads_fn):
+    with pytest.raises(RuntimeError, match="checkpoint_root"):
+        make_service(prob, grads_fn).recover()
+
+
+# ------------------------------------------------- response store (bounded)
+
+def test_response_store_is_bounded_lru(prob, grads_fn):
+    """Responses no longer accumulate forever: the store is a bounded
+    LRU; eviction forgets the request record too, and the policy shows
+    up in stats()."""
+    svc = make_service(prob, grads_fn, response_cache_size=2)
+    rids = [svc.submit(make_study(f"s{i}", n).to_json())
+            for i, n in enumerate((3, 5, 8))]
+    svc.flush()
+    store = svc.stats()["response_store"]
+    assert store["maxsize"] == 2 and store["size"] == 2
+    assert store["evictions"] == 1
+    with pytest.raises(KeyError, match="no response"):
+        svc.result(rids[0])  # evicted (oldest)
+    with pytest.raises(KeyError, match="unknown request id"):
+        svc.wait(rids[0])  # request record evicted with it
+    assert svc.result(rids[1]).error is None
+    assert svc.result(rids[2]).error is None
+
+
+# --------------------------------------------------------- shutdown & races
+
+def test_stop_drains_queue_verifiably_empty(prob, grads_fn):
+    """Requests sitting in the queue when stop() is called are served by
+    the drain loop — stop() never walks away from a non-empty queue."""
+    svc = make_service(prob, grads_fn)
+    server = BackgroundServer(svc, window_s=0.05)
+    server.start()
+    rids = [svc.submit(make_study(f"s{i}", n).to_json())
+            for i, n in enumerate(POPULATIONS)]
+    server.stop()  # immediately: worker may not have flushed yet
+    assert svc.pending == 0
+    for rid in rids:
+        assert svc.result(rid).error is None
+
+
+def test_submit_while_draining_is_refused_not_stranded(prob, grads_fn):
+    """During the stop() drain admissions are closed: a racing submit
+    raises instead of landing in a queue with no flusher. Admissions
+    reopen afterwards (the post-shutdown manual-flush pattern)."""
+    svc = make_service(prob, grads_fn)
+    svc._begin_drain()
+    with pytest.raises(RuntimeError, match="draining"):
+        svc.submit(make_study("s", 4).to_json())
+    svc._end_drain()
+    rid = svc.submit(make_study("s", 4).to_json())
+    svc.flush()
+    assert svc.result(rid).error is None
+
+
+def test_concurrent_submitters_with_competing_flushers(prob, grads_fn):
+    """The concurrent-serve stress test: many threads submit mixed-
+    population manifests through one BackgroundServer while another
+    thread hammers flush(); every waiter releases, every response is
+    bitwise equal to its solo Study.run, and the cache counters stay
+    consistent (each miss inserted exactly one entry — no lost
+    updates)."""
+    svc = make_service(prob, grads_fn, cache_size=8,
+                       response_cache_size=256)
+    pops = POPULATIONS
+    solo = {n: make_study(f"ref{n}", n).run(
+                grads_fn=grads_fn, p=prob.p, optimizer=sgd(0.05),
+                params0=jnp.zeros(DIM))
+            for n in sorted(set(pops))}
+    n_threads, per_thread = 6, len(pops)
+    errors, results = [], {}
+    lock = threading.Lock()
+    barrier = threading.Barrier(n_threads + 1)
+
+    def submitter(tid):
+        try:
+            barrier.wait()
+            for i, n in enumerate(pops):
+                name = f"t{tid}_{i}"
+                rid = svc.submit(make_study(name, n).to_json())
+                resp = svc.wait(rid, timeout=300)
+                with lock:
+                    results[(tid, i, n)] = resp
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    def flusher():
+        barrier.wait()
+        for _ in range(200):
+            svc.flush()
+            time.sleep(0.001)
+
+    with BackgroundServer(svc):
+        threads = [threading.Thread(target=submitter, args=(t,))
+                   for t in range(n_threads)]
+        threads.append(threading.Thread(target=flusher))
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+    assert not errors
+    assert len(results) == n_threads * per_thread  # every waiter released
+    for (tid, i, n), resp in results.items():
+        assert resp.error is None
+        served = resp.result
+        ref = solo[n]
+        (ref_cell,) = ref.cells.values()
+        (served_cell,) = served.cells.values()
+        for la, lb in zip(jax.tree_util.tree_leaves(ref_cell),
+                          jax.tree_util.tree_leaves(served_cell)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    stats = svc.stats()
+    assert stats["requests"] == n_threads * per_thread
+    # no lost updates: every miss inserted exactly one cache entry
+    assert stats["misses"] == stats["size"] + stats["evictions"]
+    assert stats["compiles"] >= 1
+    assert stats["response_store"]["size"] == n_threads * per_thread
