@@ -1,0 +1,109 @@
+"""Benchmark: simulated 2-process ``jax.distributed`` grid execution.
+
+Runs the canonical differential job (``repro.launch.distributed``: a
+ragged Fig-1 sub-grid, 2 scheduler structures × ragged populations) in
+three configurations and compares them (DESIGN.md §13):
+
+  multihost_baseline_1proc   single-process clients-sharded dispatch
+                             (8 local placeholder devices) — the
+                             single-host side of the overhead ratio
+  multihost_2proc_psum       the same job across 2 simulated processes
+                             (4 local devices each, gloo collectives),
+                             psum reduction; derived carries
+                             us_per_step and overhead_pct vs baseline
+  multihost_2proc_gather     ditto with the gather (bitwise-oracle)
+                             reduction
+  multihost_step_collective  per-step cost of the cross-process
+                             collective in both modes (us=0,
+                             derived-only, timing_ref'd)
+  multihost_bitwise          process-0 gather results bitwise equal to
+                             the single-process vmap engine (us=0)
+
+All series are validated by ``run.check_multihost_series``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+
+def _time_study(study, sim, params0, config, iters: int) -> float:
+    """Warm wall time per ``study.run`` dispatch, microseconds."""
+    import numpy as np
+
+    study.run(sim=sim, params0=params0, config=config)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = study.run(sim=sim, params0=params0, config=config)
+    np.asarray(next(iter(out.cells.values())).params)  # sync
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(fast: bool = False) -> list[str]:
+    import numpy as np
+
+    from repro.experiments import ExecutionConfig, placement
+    from repro.launch import distributed as dist
+
+    steps = 10 if fast else 25
+    seeds = 2
+    iters = 2 if fast else 3
+
+    sim = dist.make_job_sim()
+    study = dist.make_job_study(steps, seeds)
+    params0 = dist.job_params0()
+
+    # Single-process side: same mesh shape (8 clients shards), one host.
+    mesh = placement.make_client_mesh()
+    base_us = {
+        red: _time_study(study, sim, params0,
+                         ExecutionConfig(mesh=mesh, client_reduction=red),
+                         iters)
+        for red in ("psum", "gather")
+    }
+
+    with tempfile.TemporaryDirectory(prefix="bench_multihost_") as out_dir:
+        dist.launch_simulated(2, 4, argv=[
+            "--mesh", "clients", "--reduction", "gather,psum",
+            "--steps", str(steps), "--seeds", str(seeds),
+            "--timing-iters", str(iters), "--out", out_dir])
+        with open(os.path.join(out_dir, "report_p0.json")) as f:
+            report = json.load(f)
+        got = dict(np.load(os.path.join(out_dir, "results.npz")))
+
+    ref = dist.flatten_results("ref", dist.reference_results(steps, seeds))
+    bitwise = all(
+        np.array_equal(arr, ref["ref|%s|%s" % tuple(key.split("|")[1:])])
+        for key, arr in got.items() if key.startswith("clients-gather|"))
+
+    rows = [
+        "multihost_baseline_1proc,%.1f,processes=1;devices=%d;"
+        "gather_us=%.1f;steps=%d" % (
+            base_us["psum"], mesh.size, base_us["gather"], steps),
+    ]
+    two_us = {}
+    for red in ("psum", "gather"):
+        combo = report["combos"][f"clients-{red}"]
+        us = combo["dispatch_us"]
+        two_us[red] = us
+        rows.append(
+            "multihost_2proc_%s,%.1f,processes=%d;global_devices=%d;"
+            "us_per_step=%.1f;overhead_pct=%.1f;compiles=%d" % (
+                red, us, report["process_count"],
+                report["global_devices"], combo["us_per_step"],
+                (us - base_us[red]) / base_us[red] * 100.0,
+                combo["compiles"]))
+    rows.append(
+        "multihost_step_collective,0,psum_us_per_step=%.1f;"
+        "gather_us_per_step=%.1f;baseline_psum_us_per_step=%.1f;"
+        "timing_ref=multihost_2proc_psum" % (
+            two_us["psum"] / steps, two_us["gather"] / steps,
+            base_us["psum"] / steps))
+    rows.append(
+        "multihost_bitwise,0,bitwise=%s;cells=%d;"
+        "timing_ref=multihost_2proc_gather" % (
+            bitwise, len(study.resolve())))
+    return rows

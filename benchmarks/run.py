@@ -6,6 +6,9 @@
   roofline_table dry-run roofline terms per (arch x shape x mesh)
   serve_bench    Study service: batched throughput, request latency,
                  executable-cache hit rate, single-trace collapse
+  multihost      simulated 2-process jax.distributed grid: per-step
+                 collective cost, 1-host-vs-2-process overhead, bitwise
+                 gather check
 
 Prints ``name,us_per_call,derived`` CSV. Select with ``--only``. With
 ``--json PATH`` the rows are additionally written as structured JSON
@@ -174,12 +177,78 @@ def check_serve_series(records) -> None:
                          "\n  ".join(problems))
 
 
-def build_doc(selected, fast: bool, device_count: int, records, failed) -> dict:
+def check_multihost_series(records) -> None:
+    """Validate the ``multihost_*`` series family (suite ``multihost``).
+
+    The acceptance contract of the multi-process path is encoded here:
+    the 2-process gather run must stay the bitwise oracle
+    (``multihost_bitwise``), both 2-process rows must actually span two
+    processes and quote their single-host overhead, and the per-step
+    collective-cost row must carry both reduction modes. Errors name the
+    offending series.
+    """
+    by_name = {r.get("name"): r for r in records
+               if r.get("suite") == "multihost"}
+    if not by_name:
+        return
+    problems = []
+    for name in by_name:
+        if not str(name).startswith("multihost_"):
+            problems.append(
+                f"series {name!r}: multihost series must be named "
+                f"multihost_*")
+    want = {
+        "multihost_baseline_1proc": ("processes", "devices"),
+        "multihost_2proc_psum": ("processes", "overhead_pct", "us_per_step"),
+        "multihost_2proc_gather": ("processes", "overhead_pct",
+                                   "us_per_step"),
+        "multihost_step_collective": ("psum_us_per_step",
+                                      "gather_us_per_step"),
+        "multihost_bitwise": ("bitwise",),
+    }
+    for name, keys in want.items():
+        rec = by_name.get(name)
+        if rec is None:
+            problems.append(f"series {name!r} missing from multihost run")
+            continue
+        derived = rec.get("derived") or {}
+        missing = [k for k in keys if k not in derived]
+        if missing:
+            problems.append(
+                f"series {name!r}: missing derived field(s) {missing}")
+            continue
+        if name.startswith("multihost_2proc") and derived["processes"] != 2:
+            problems.append(
+                f"series {name!r}: processes={derived['processes']} — the "
+                f"simulated run did not span two processes")
+        if name == "multihost_bitwise" and not derived["bitwise"]:
+            problems.append(
+                f"series {name!r}: bitwise={derived['bitwise']} — the "
+                f"2-process gather run drifted from the single-process "
+                f"vmap engine")
+    if problems:
+        raise ValueError("invalid multihost_* series:\n  " +
+                         "\n  ".join(problems))
+
+
+def build_doc(selected, fast: bool, device_count: int, records, failed, *,
+              host_devices: dict | None = None) -> dict:
     """The BENCH_*.json document — one pinned shape for every PR's
-    perf-trajectory file."""
+    perf-trajectory file.
+
+    ``device_count`` is the *effective* ``jax.device_count()`` at write
+    time — if ``ensure_host_device_count`` came too late (jax already
+    imported) the series silently ran on whatever the backend had, and
+    ``host_devices`` records that: ``requested`` (the placeholder count
+    asked for, None if never requested) and ``applied`` (whether the
+    flag actually took effect), so BENCH files taken under a failed pin
+    are never silently compared against properly-sharded ones.
+    """
     return {"schema": SCHEMA, "suites": list(selected), "fast": fast,
-            "device_count": device_count, "failed": list(failed),
-            "results": list(records)}
+            "device_count": device_count,
+            "host_devices": host_devices or {"requested": None,
+                                             "applied": None},
+            "failed": list(failed), "results": list(records)}
 
 
 def bench_out_path(directory: str, date: str) -> str:
@@ -210,24 +279,28 @@ def main() -> None:
     args = ap.parse_args()
 
     suite_names = ("fig1", "theory", "kernels_bench", "roofline_table",
-                   "serve_bench")
+                   "serve_bench", "multihost")
     selected = [s.strip() for s in args.only.split(",") if s.strip()] \
         or list(suite_names)
     unknown = [s for s in selected if s not in suite_names]
     if unknown:
         raise SystemExit(f"unknown suites {unknown}; have {list(suite_names)}")
 
-    if "fig1" in selected:
-        # 8 placeholder CPU devices so fig1's sharded grid series runs.
-        # Must happen before the suite imports pull in jax, and only
-        # when fig1 is requested. The resulting device count is recorded
-        # in the JSON so BENCH_* series taken under different backends
-        # are never silently compared.
+    host_devices = {"requested": None, "applied": None}
+    if "fig1" in selected or "multihost" in selected:
+        # 8 placeholder CPU devices so fig1's sharded grid series and
+        # the multihost suite's single-process baseline run. Must happen
+        # before the suite imports pull in jax, and only when those
+        # suites are requested. Whether the pin actually took effect is
+        # recorded in the JSON (with the effective device count) so
+        # BENCH_* series taken under different backends are never
+        # silently compared.
         from repro._env import ensure_host_device_count
-        ensure_host_device_count(8)
+        host_devices = {"requested": 8,
+                        "applied": ensure_host_device_count(8)}
     sys.path.insert(0, ".")  # examples/ imports
-    from benchmarks import (fig1, kernels_bench, roofline_table, serve_bench,
-                            theory)
+    from benchmarks import (fig1, kernels_bench, multihost, roofline_table,
+                            serve_bench, theory)
 
     fig1_kw = (dict(iters=40, seeds=8, n_clients=8) if args.fast
                else dict(iters=100, seeds=8, n_clients=8))
@@ -237,6 +310,7 @@ def main() -> None:
         "kernels_bench": kernels_bench.run,
         "roofline_table": roofline_table.run,
         "serve_bench": lambda: serve_bench.run(fast=args.fast),
+        "multihost": lambda: multihost.run(fast=args.fast),
     }
     assert set(suites) == set(suite_names)  # one source of suite names
 
@@ -263,6 +337,12 @@ def main() -> None:
         traceback.print_exc()
         failed.append("serve-series")
 
+    try:
+        check_multihost_series(records)
+    except ValueError:
+        traceback.print_exc()
+        failed.append("multihost-series")
+
     out_paths = [p for p in (args.json,) if p]
     if args.bench_out:
         out_paths.append(
@@ -271,7 +351,7 @@ def main() -> None:
         import jax
 
         doc = build_doc(selected, args.fast, jax.device_count(), records,
-                        failed)
+                        failed, host_devices=host_devices)
         for path in out_paths:
             with open(path, "w") as f:
                 json.dump(doc, f, indent=2)

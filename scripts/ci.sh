@@ -11,6 +11,7 @@
 #   scripts/ci.sh kernels    # Pallas kernel suites + bench smoke
 #   scripts/ci.sh serve      # manifest/service suites + serve-bench smoke
 #   scripts/ci.sh serve-resume  # SIGKILL-and-recover + resume bench smoke
+#   scripts/ci.sh multihost  # simulated 2-process jax.distributed suite
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -57,13 +58,23 @@ run_stage() {
             python -m benchmarks.run --only serve_bench --fast \
                 --json /tmp/bench_serve_resume_smoke.json >/dev/null
             ;;
-        *) echo "unknown stage: $1 (have tier1 multidevice ragged clientshard faults kernels serve serve-resume)" >&2
+        multihost)
+            # Multi-host execution (DESIGN.md §13): the simulated
+            # 2-process jax.distributed run must stay bitwise (gather)
+            # against the single-process vmap engine, and the
+            # multihost_* bench series must emit and pass their
+            # validator end-to-end.
+            stage multihost -m multihost
+            python -m benchmarks.run --only multihost --fast \
+                --json /tmp/bench_multihost_smoke.json >/dev/null
+            ;;
+        *) echo "unknown stage: $1 (have tier1 multidevice ragged clientshard faults kernels serve serve-resume multihost)" >&2
            exit 2 ;;
     esac
 }
 
 if [ "$#" -eq 0 ]; then
-    set -- tier1 multidevice ragged clientshard faults kernels serve serve-resume
+    set -- tier1 multidevice ragged clientshard faults kernels serve serve-resume multihost
 fi
 for s in "$@"; do
     run_stage "$s"

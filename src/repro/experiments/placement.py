@@ -42,6 +42,21 @@ Single-device callers never enter this module — ``run_grid`` without a
 unchanged. CPU CI exercises the sharded paths via
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
 (``tests/conftest.py``).
+
+**Multi-host meshes** (DESIGN.md §13): every factory here builds from
+*global* devices, so under an initialized ``jax.distributed`` runtime
+(:mod:`repro.launch.distributed`) the same meshes span processes —
+:func:`make_client_mesh` puts the client axis across hosts (the ROADMAP
+mapping: the only per-step collective is the ``(P,)``-sized reduction),
+:func:`make_multihost_mesh` pins the cell axis across processes with
+clients process-local. Dispatch stays the same ``shard_map`` programs;
+the only multi-process difference is at the host boundary — inputs are
+lifted to replicated global ``jax.Array``s (every process holds the
+full host value, so lifting moves no data) and results are gathered
+back to every host as numpy (:func:`run_group_sharded` /
+:func:`run_client_sharded` do both automatically when the mesh spans
+processes). Gather mode keeps its bitwise contract across hosts;
+psum keeps f32-reassociation tolerance.
 """
 
 from __future__ import annotations
@@ -67,40 +82,121 @@ CELL_AXIS = "cells"
 CLIENT_AXIS = "clients"
 
 
-def _device_slice(n_devices: int | None):
-    devices = jax.devices()
+def device_topology(devices=None) -> str:
+    """``"N global devices across K processes"`` — the phrase every
+    mesh-shape error uses, so multi-process failures never conflate
+    local and global device counts."""
+    devices = jax.devices() if devices is None else list(np.ravel(devices))
+    procs = {d.process_index for d in devices}
+    return (f"{len(devices)} global device(s) across "
+            f"{max(len(procs), 1)} process(es)")
+
+
+def mesh_process_count(mesh: Mesh) -> int:
+    """Number of distinct processes the mesh's devices live on — > 1
+    means the mesh spans hosts and dispatch must go through the
+    global-array boundary (DESIGN.md §13)."""
+    return len({d.process_index for d in mesh.devices.flat})
+
+
+def _device_slice(n_devices: int | None, devices=None):
+    """The first ``n_devices`` of ``devices`` (default: all *global*
+    devices). ``devices=`` is the explicit multi-host escape hatch —
+    pass any iterable of jax devices to pin a layout by hand."""
+    devices = list(jax.devices()) if devices is None \
+        else list(np.ravel(devices))
     if n_devices is not None:
         if not 1 <= n_devices <= len(devices):
             raise ValueError(
-                f"n_devices={n_devices} outside [1, {len(devices)}]")
+                f"n_devices={n_devices} outside [1, {len(devices)}] — "
+                f"have {device_topology(devices)}")
         devices = devices[:n_devices]
     return devices
 
 
 def make_cell_mesh(n_devices: int | None = None, *,
-                   axis_name: str = CELL_AXIS) -> Mesh:
-    """1-D mesh over the first ``n_devices`` (default: all) devices.
+                   axis_name: str = CELL_AXIS, devices=None) -> Mesh:
+    """1-D mesh over the first ``n_devices`` (default: all) global
+    devices; ``devices=`` pins an explicit layout.
 
     The cell axis is embarrassingly parallel, so grid sharding wants a
     flat mesh regardless of how production training meshes are shaped
-    (``repro.launch.mesh`` re-exports this for drivers).
+    (``repro.launch.mesh`` re-exports this for drivers). Under
+    ``jax.distributed`` the default spans every process's devices in
+    process order.
     """
-    return Mesh(np.array(_device_slice(n_devices)), (axis_name,))
+    return Mesh(np.array(_device_slice(n_devices, devices)), (axis_name,))
 
 
-def make_client_mesh(n_devices: int | None = None) -> Mesh:
+def make_client_mesh(n_devices: int | None = None, *, devices=None) -> Mesh:
     """1-D ``("clients",)`` mesh: within-cell client-axis sharding only
-    (DESIGN.md §8). The population capacity must divide the mesh size."""
-    return Mesh(np.array(_device_slice(n_devices)), (CLIENT_AXIS,))
+    (DESIGN.md §8). The population capacity must divide the mesh size.
+    Under ``jax.distributed`` the default layout spans processes — the
+    ROADMAP's client-axis-onto-host-axis mapping, where the only
+    per-step collective crossing hosts is the ``(P,)`` reduction."""
+    return Mesh(np.array(_device_slice(n_devices, devices)), (CLIENT_AXIS,))
 
 
-def make_grid_mesh(cells: int, clients: int) -> Mesh:
+def make_grid_mesh(cells: int, clients: int, *, devices=None) -> Mesh:
     """2-D ``(cells, clients)`` mesh over the first ``cells·clients``
     devices: cell sharding across the first axis composed with
-    within-cell client sharding across the second."""
-    devices = _device_slice(cells * clients)
+    within-cell client sharding across the second. ``devices=`` pins an
+    explicit layout (e.g. a process-spanning one —
+    :func:`make_multihost_mesh` builds the canonical version)."""
+    pool = list(jax.devices()) if devices is None else list(np.ravel(devices))
+    if cells * clients > len(pool):
+        raise ValueError(
+            f"make_grid_mesh(cells={cells}, clients={clients}) needs "
+            f"{cells * clients} global devices, have "
+            f"{device_topology(pool)}")
+    devices = _device_slice(cells * clients, pool)
     return Mesh(np.array(devices).reshape(cells, clients),
                 (CELL_AXIS, CLIENT_AXIS))
+
+
+def _devices_by_process() -> list[list]:
+    """Global devices grouped by owning process, both in stable order."""
+    by_proc: dict[int, list] = {}
+    for d in jax.devices():
+        by_proc.setdefault(d.process_index, []).append(d)
+    return [by_proc[p] for p in sorted(by_proc)]
+
+
+def make_multihost_mesh(cells: int | None = None,
+                        clients: int | None = None) -> Mesh:
+    """2-D ``(cells, clients)`` mesh with the **cell axis crossing
+    processes** and every client-axis row inside one process
+    (DESIGN.md §13): the within-cell reduction never crosses a host;
+    only the cell axis spans the interconnect, and the cell axis has no
+    per-step collective at all.
+
+    Defaults: ``cells`` = the process count (one cell shard per host),
+    ``clients`` = the local devices each cell row can use. For the dual
+    layout — client axis across hosts, the ROADMAP's ``(P,)``-psum
+    mapping — use :func:`make_client_mesh`, whose global-device default
+    already spans processes; for a process-spanning 1-D cells mesh use
+    :func:`make_cell_mesh` (global devices are process-major).
+
+    Single-process sessions degenerate to ``make_grid_mesh`` layouts,
+    so the same driver code runs anywhere.
+    """
+    grid = _devices_by_process()
+    n_proc, local = len(grid), min(len(g) for g in grid)
+    cells = n_proc if cells is None else int(cells)
+    if cells % n_proc != 0:
+        raise ValueError(
+            f"make_multihost_mesh(cells={cells}): the cell axis must "
+            f"divide evenly over processes — have {device_topology()}")
+    rows_per_proc = cells // n_proc
+    width = local // rows_per_proc if clients is None else int(clients)
+    if width < 1 or rows_per_proc * width > local:
+        raise ValueError(
+            f"make_multihost_mesh(cells={cells}, clients={clients}) needs "
+            f"{rows_per_proc}×{width} devices per process, have "
+            f"{local} local — {device_topology()}")
+    rows = [g[r * width:(r + 1) * width]
+            for g in grid for r in range(rows_per_proc)]
+    return Mesh(np.array(rows), (CELL_AXIS, CLIENT_AXIS))
 
 
 def _mesh_axes(mesh: Mesh) -> tuple[str | None, str | None]:
@@ -206,11 +302,11 @@ def pad_cells(tree, n_cells: int, n_devices: int):
 
 @partial(jax.jit,
          static_argnames=("sim", "num_steps", "eval_fn", "eval_every", "mesh",
-                          "reduction"))
+                          "reduction", "replicate_out"))
 def _run_group_sharded(scheduler, energy, faults, active, p, params0, keys,
                        *, sim, num_steps: int, eval_fn=None,
                        eval_every: int = 0, mesh: Mesh,
-                       reduction: str = "psum"):
+                       reduction: str = "psum", replicate_out: bool = False):
     """shard_map'd twin of ``engine._run_group``.
 
     ``scheduler`` / ``energy`` / ``keys`` leaves carry a leading
@@ -283,16 +379,27 @@ def _run_group_sharded(scheduler, energy, faults, active, p, params0, keys,
 
     fn = shard_map(local, mesh=mesh, in_specs=in_specs,
                    out_specs=out_specs, check_rep=False)
-    return fn(sch_leaves, en_leaves, flt_leaves, active, p, keys, params0)
+    out = fn(sch_leaves, en_leaves, flt_leaves, active, p, keys, params0)
+    if replicate_out:
+        # Multi-process dispatch: assemble fully-replicated outputs
+        # *inside* this executable (a compiler-scheduled all-gather) so
+        # every process can read results locally. Fetching sharded
+        # outputs with per-leaf host-side allgathers instead is racy on
+        # the gloo CPU transport — concurrent mixed-size collectives
+        # from separate executables collide (DESIGN.md §13).
+        out = jax.lax.with_sharding_constraint(
+            out, jax.sharding.NamedSharding(mesh, PartitionSpec()))
+    return out
 
 
 @partial(jax.jit,
          static_argnames=("sim", "num_steps", "eval_fn", "eval_every", "mesh",
-                          "reduction"))
+                          "reduction", "replicate_out"))
 def _run_cell_client_sharded(scheduler, energy, active, p, params0, key, *,
                              sim, num_steps: int, eval_fn=None,
                              eval_every: int = 0, mesh: Mesh,
-                             reduction: str = "psum"):
+                             reduction: str = "psum",
+                             replicate_out: bool = False):
     """Single-cell client-sharded execution: one population spanning the
     whole ``clients`` mesh (no cell axis, no cell vmap)."""
     client_ax = CLIENT_AXIS
@@ -323,13 +430,66 @@ def _run_cell_client_sharded(scheduler, energy, active, p, params0, key, *,
                    in_specs=(percell(scheduler), percell(energy), rows, rows,
                              replicated, replicated),
                    out_specs=out_specs, check_rep=False)
-    return fn(sch_leaves, en_leaves, active, p, key, params0)
+    out = fn(sch_leaves, en_leaves, active, p, key, params0)
+    if replicate_out:
+        # See _run_group_sharded: in-executable assembly for the
+        # multi-process return boundary.
+        out = jax.lax.with_sharding_constraint(
+            out, jax.sharding.NamedSharding(mesh, PartitionSpec()))
+    return out
 
 
 def clear_cache() -> None:
     """Drop compiled sharded-grid executables (see engine.clear_cache)."""
     _run_group_sharded.clear_cache()
     _run_cell_client_sharded.clear_cache()
+
+
+# ------------------------------------------- multi-process host boundary
+
+def replicate_to_mesh(tree, mesh: Mesh):
+    """Lift host-local arrays to *replicated* global ``jax.Array``s.
+
+    Every process in a multi-controller session computes the identical
+    host-side grid (same scenarios, same padding, same PRNG keys), so
+    each already holds the full value of every operand — the lift is
+    pure bookkeeping: each process populates its addressable shards
+    from its local copy, no data moves. The jitted ``shard_map``s then
+    reshard replicated → cells/clients-sharded internally, which is
+    local slicing under SPMD. None leaves pass through.
+    """
+    sharding = jax.sharding.NamedSharding(mesh, PartitionSpec())
+
+    def one(x):
+        x = np.asarray(x)
+        return jax.make_array_from_callback(
+            x.shape, sharding, lambda idx, x=x: x[idx])
+
+    return jax.tree_util.tree_map(one, tree)
+
+
+def fetch_to_host(tree):
+    """Materialize global result arrays as numpy on **every** process —
+    the return boundary of a multi-process dispatch.
+
+    The runners request fully-replicated outputs (``replicate_out=True``
+    lowers the assembly all-gather into the compiled executable), so the
+    common path is a plain local read. A leaf that still arrives sharded
+    (outputs of user ``eval_fn``s routed around the runners) falls back
+    to a host-driven allgather — correct, but serialized per leaf, since
+    concurrent mixed-size collectives from separate executables collide
+    on the gloo CPU transport (DESIGN.md §13). Downstream host-side
+    assembly (crop, divergence attach, GridResult) then runs unchanged
+    on all hosts."""
+    from jax.experimental import multihost_utils
+
+    def one(x):
+        if getattr(x, "is_fully_addressable", True) or \
+                getattr(x, "is_fully_replicated", False):
+            return np.asarray(x)
+        return np.asarray(multihost_utils.process_allgather(x, tiled=True))
+
+    return jax.tree_util.tree_map(one, tree)
 
 
 def run_client_sharded(sim, key, params0, num_steps: int, *, scheduler=None,
@@ -368,10 +528,15 @@ def run_client_sharded(sim, key, params0, num_steps: int, *, scheduler=None,
         raise ValueError("scheduler/energy must be given (or set on sim)")
     if p is None:
         p = sim.p
-    return _run_cell_client_sharded(
-        scheduler, energy, active_mask, p, params0, key, sim=sim,
-        num_steps=num_steps, eval_fn=eval_fn, eval_every=eval_every,
-        mesh=mesh, reduction=reduction)
+    args = (scheduler, energy, active_mask, p, params0, key)
+    multiprocess = mesh_process_count(mesh) > 1
+    if multiprocess:
+        args = replicate_to_mesh(args, mesh)
+    out = _run_cell_client_sharded(
+        *args, sim=sim, num_steps=num_steps, eval_fn=eval_fn,
+        eval_every=eval_every, mesh=mesh, reduction=reduction,
+        replicate_out=multiprocess)
+    return fetch_to_host(out) if multiprocess else out
 
 
 def run_group_sharded(scheduler, energy, active, p, params0, keys, *, sim,
@@ -413,9 +578,15 @@ def run_group_sharded(scheduler, energy, active, p, params0, keys, *, sim,
     cell_shards = mesh.shape[cell_ax] if cell_ax is not None else 1
     (sch_c, en_c, flt_c, active_c, p_c, keys_c), _ = pad_cells(
         (sch_c, en_c, flt_c, active_c, p_c, keys_c), n_cells, cell_shards)
-    out = _run_group_sharded(sch_c, en_c, flt_c, active_c, p_c, params0,
-                             keys_c, sim=sim, num_steps=num_steps,
+    args = (sch_c, en_c, flt_c, active_c, p_c, params0, keys_c)
+    multiprocess = mesh_process_count(mesh) > 1
+    if multiprocess:
+        args = replicate_to_mesh(args, mesh)
+    out = _run_group_sharded(*args, sim=sim, num_steps=num_steps,
                              eval_fn=eval_fn, eval_every=eval_every,
-                             mesh=mesh, reduction=reduction)
+                             mesh=mesh, reduction=reduction,
+                             replicate_out=multiprocess)
+    if multiprocess:
+        out = fetch_to_host(out)
     return jax.tree_util.tree_map(
         lambda x: x[:n_cells].reshape((n_scenarios, r) + x.shape[1:]), out)

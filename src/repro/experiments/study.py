@@ -59,7 +59,12 @@ class ExecutionConfig:
         (DESIGN.md §5), 1-D ``clients`` mesh (within-cell client-axis
         sharding, DESIGN.md §8) or 2-D ``(cells, clients)`` grid mesh
         (:func:`repro.experiments.placement.make_grid_mesh`); None (or
-        1 device) → single-device vmap path.
+        1 device) → single-device vmap path. The mesh may span
+        processes in a ``jax.distributed`` session (DESIGN.md §13 —
+        bring it up via :mod:`repro.launch.distributed` and build from
+        global devices, e.g. ``placement.make_multihost_mesh()``);
+        dispatch is unchanged, and results come back as host numpy on
+        every process.
     eval_fn : optional (params) -> metric pytree, evaluated inside the
         compiled loop every ``eval_every`` steps.
     eval_every : eval chunk length; 0 → one eval at the end when

@@ -1,7 +1,6 @@
-import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
+from repro._env import ensure_host_device_count
+
+ensure_host_device_count(512)
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh).
 
@@ -24,6 +23,7 @@ Incremental: existing (arch, shape, mesh) entries are skipped unless
 import argparse      # noqa: E402
 import functools     # noqa: E402
 import json          # noqa: E402
+import os            # noqa: E402
 import time          # noqa: E402
 import traceback     # noqa: E402
 

@@ -1,7 +1,6 @@
-import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
+from repro._env import ensure_host_device_count
+
+ensure_host_device_count(512)
 
 """Zero-collective-overhead validation (EXPERIMENTS.md §Energy-overhead).
 

@@ -40,6 +40,10 @@ def pytest_configure(config):
         "markers",
         "serve: Study manifests, the batching StudyService and the "
         "keyed executable cache (DESIGN.md §11) — select with `-m serve`")
+    config.addinivalue_line(
+        "markers",
+        "multihost: simulated multi-process `jax.distributed` execution "
+        "(subprocess workers, DESIGN.md §13) — select with `-m multihost`")
 
 
 def pytest_collection_modifyitems(config, items):

@@ -226,3 +226,50 @@ def test_serve_series_foreign_name_in_suite_rejected():
                                        suite="serve_bench")]
     with pytest.raises(ValueError, match=r"sneaky_row.*named\s+serve_\*"):
         bench_run.check_serve_series(records)
+
+
+# ------------------------------------------- multihost_* series family
+
+def _multihost_records(**overrides):
+    derived = {
+        "multihost_baseline_1proc": {"processes": 1, "devices": 8},
+        "multihost_2proc_psum": {"processes": 2, "overhead_pct": 120.0,
+                                 "us_per_step": 2000.0},
+        "multihost_2proc_gather": {"processes": 2, "overhead_pct": 150.0,
+                                   "us_per_step": 2500.0},
+        "multihost_step_collective": {
+            "psum_us_per_step": 2000.0, "gather_us_per_step": 2500.0,
+            "timing_ref": "multihost_2proc_psum"},
+        "multihost_bitwise": {"bitwise": True,
+                              "timing_ref": "multihost_2proc_gather"},
+    }
+    for name, kv in overrides.items():
+        derived[name] = {**derived[name], **kv}
+    return [_rec(n, 100.0 * (i + 1), d, suite="multihost")
+            for i, (n, d) in enumerate(derived.items())]
+
+
+def test_multihost_series_valid_set_passes():
+    bench_run.check_multihost_series(_multihost_records())  # no raise
+    bench_run.check_multihost_series([_rec("fig1_x", 5.0)])  # other suite
+
+
+def test_multihost_series_missing_series_named():
+    records = [r for r in _multihost_records()
+               if r["name"] != "multihost_bitwise"]
+    with pytest.raises(ValueError, match="'multihost_bitwise' missing"):
+        bench_run.check_multihost_series(records)
+
+
+def test_multihost_bitwise_drift_rejected():
+    """The 2-process gather run drifting from the vmap engine is THE
+    failure the multihost path must never log as a perf data point."""
+    records = _multihost_records(multihost_bitwise={"bitwise": False})
+    with pytest.raises(ValueError, match=r"bitwise=False.*drifted"):
+        bench_run.check_multihost_series(records)
+
+
+def test_multihost_single_process_run_rejected():
+    records = _multihost_records(multihost_2proc_psum={"processes": 1})
+    with pytest.raises(ValueError, match=r"processes=1.*did not span"):
+        bench_run.check_multihost_series(records)

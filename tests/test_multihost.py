@@ -1,0 +1,188 @@
+"""Simulated multi-process `jax.distributed` execution (DESIGN.md §13).
+
+One 2-process harness launch (subprocess workers, 4 CPU placeholder
+devices each, gloo collectives over localhost) runs the canonical
+differential job — a ragged Fig-1 sub-grid, 2 scheduler structures ×
+ragged populations — through the unchanged ``Study.run`` dispatch on
+process-spanning meshes. The module-scoped fixture launches once; the
+tests then hold the workers' combined output to the repo's equivalence
+contract: gather mode bitwise against the single-process vmap engine,
+psum and the cells-spanning mesh to float32 reassociation tolerance,
+one compile per structure group per process.
+
+Plus the satellite device/env-flag fixes: the late
+``ensure_host_device_count`` warning, the ``REPRO_DIST_*`` env
+contract, and global-vs-local device counts in placement errors.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro._env import (
+    DIST_COORDINATOR,
+    DIST_LOCAL_DEVICES,
+    DIST_NUM_PROCESSES,
+    DIST_PROCESS_ID,
+    distributed_env,
+    ensure_host_device_count,
+)
+from repro.launch import distributed as dist
+
+pytestmark = pytest.mark.multihost
+
+STEPS, SEEDS = 25, 2
+LOSS_TOL = dict(rtol=2e-4, atol=1e-5)
+
+
+@pytest.fixture(scope="module")
+def simulated_run(tmp_path_factory):
+    """One 2-process run covering both meshes and both reductions."""
+    out = str(tmp_path_factory.mktemp("mh"))
+    dist.launch_simulated(2, 4, argv=[
+        "--mesh", "clients,multihost", "--reduction", "gather,psum",
+        "--steps", str(STEPS), "--seeds", str(SEEDS), "--out", out])
+    results = dict(np.load(os.path.join(out, "results.npz")))
+    reports = []
+    for pid in range(2):
+        with open(os.path.join(out, f"report_p{pid}.json")) as f:
+            reports.append(json.load(f))
+    return results, reports
+
+
+@pytest.fixture(scope="module")
+def reference():
+    """Single-process vmap-engine oracle, flattened like the npz."""
+    return dist.flatten_results("ref", dist.reference_results(STEPS, SEEDS))
+
+
+def _cells(results, tag):
+    cells = {k.split("|")[1] for k in results if k.startswith(tag + "|")}
+    assert cells, f"no {tag} results in the worker npz"
+    return cells
+
+
+def test_job_is_a_ragged_multischeduler_grid():
+    # The differential job must keep covering what the contract names:
+    # >= 2 scheduler structures and genuinely ragged populations.
+    scenarios = dist.make_job_study(STEPS, SEEDS).resolve()
+    assert len({sc.scheduler for sc in scenarios}) >= 2
+    assert len({sc.n_clients for sc in scenarios}) >= 2
+    assert min(sc.n_clients for sc in scenarios) < dist.JOB_N_CAP
+
+
+def test_gather_bitwise_vs_single_process_vmap(simulated_run, reference):
+    results, _ = simulated_run
+    for cell in _cells(results, "clients-gather"):
+        for field in ("params", "loss", "participation", "weight_sum",
+                      "finite", "diverged"):
+            got = results[f"clients-gather|{cell}|{field}"]
+            ref = reference[f"ref|{cell}|{field}"]
+            np.testing.assert_array_equal(got, ref, err_msg=(
+                f"2-process gather drifted from the vmap engine: "
+                f"{cell}/{field}"))
+
+
+def test_psum_within_tolerance(simulated_run, reference):
+    results, _ = simulated_run
+    for cell in _cells(results, "clients-psum"):
+        np.testing.assert_allclose(
+            results[f"clients-psum|{cell}|loss"],
+            reference[f"ref|{cell}|loss"], **LOSS_TOL)
+        np.testing.assert_allclose(
+            results[f"clients-psum|{cell}|params"],
+            reference[f"ref|{cell}|params"], **LOSS_TOL)
+        for field in ("participation", "finite", "diverged"):
+            np.testing.assert_array_equal(
+                results[f"clients-psum|{cell}|{field}"],
+                reference[f"ref|{cell}|{field}"])
+
+
+def test_cells_spanning_mesh_within_tolerance(simulated_run, reference):
+    results, _ = simulated_run
+    for cell in _cells(results, "multihost-gather"):
+        np.testing.assert_allclose(
+            results[f"multihost-gather|{cell}|loss"],
+            reference[f"ref|{cell}|loss"], **LOSS_TOL)
+        for field in ("participation", "finite", "diverged"):
+            np.testing.assert_array_equal(
+                results[f"multihost-gather|{cell}|{field}"],
+                reference[f"ref|{cell}|{field}"])
+
+
+def test_one_compile_per_structure_group_per_process(simulated_run):
+    _, reports = simulated_run
+    assert [r["process_id"] for r in reports] == [0, 1]
+    for rep in reports:
+        assert rep["process_count"] == 2
+        assert rep["global_devices"] == 8
+        assert rep["local_devices"] == 4
+        for tag, combo in rep["combos"].items():
+            assert combo["compiles"] == 2, (tag, combo)
+            assert combo["warm_new_compiles"] == 0, (tag, combo)
+            assert combo["mesh_process_span"] == 2, (tag, combo)
+
+
+def test_mesh_topologies(simulated_run):
+    _, reports = simulated_run
+    combos = reports[0]["combos"]
+    # clients mesh: the ROADMAP mapping — client axis across hosts.
+    assert combos["clients-gather"]["mesh_shape"] == {"clients": 8}
+    # multihost mesh: cells across processes, clients process-local.
+    assert combos["multihost-gather"]["mesh_shape"] == {
+        "cells": 2, "clients": 4}
+
+
+# ----------------------------------------- satellite device/env fixes
+
+def test_late_ensure_host_device_count_warns():
+    import jax  # long imported by this suite
+
+    with pytest.warns(UserWarning, match=r"jax\.device_count\(\)=%d"
+                      % jax.device_count()):
+        assert ensure_host_device_count(512) is False
+
+
+def test_distributed_env_roundtrip_and_partial(monkeypatch):
+    monkeypatch.delenv(DIST_COORDINATOR, raising=False)
+    monkeypatch.delenv(DIST_NUM_PROCESSES, raising=False)
+    monkeypatch.delenv(DIST_PROCESS_ID, raising=False)
+    monkeypatch.delenv(DIST_LOCAL_DEVICES, raising=False)
+    assert distributed_env() is None
+
+    monkeypatch.setenv(DIST_COORDINATOR, "127.0.0.1:1234")
+    with pytest.raises(ValueError, match="partial REPRO_DIST_"):
+        distributed_env()
+
+    monkeypatch.setenv(DIST_NUM_PROCESSES, "2")
+    monkeypatch.setenv(DIST_PROCESS_ID, "1")
+    monkeypatch.setenv(DIST_LOCAL_DEVICES, "4")
+    assert distributed_env() == {
+        "coordinator": "127.0.0.1:1234", "num_processes": 2,
+        "process_id": 1, "local_devices": 4}
+
+    monkeypatch.delenv(DIST_COORDINATOR)
+    with pytest.raises(ValueError, match="partial REPRO_DIST_"):
+        distributed_env()
+
+
+def test_placement_errors_name_global_topology():
+    from repro.experiments import placement
+
+    with pytest.raises(ValueError, match=r"global device\(s\) across "
+                                         r"\d+ process\(es\)"):
+        placement.make_grid_mesh(cells=7, clients=5)
+    with pytest.raises(ValueError, match="needs 35 global devices"):
+        placement.make_grid_mesh(cells=7, clients=5)
+
+
+def test_device_topology_string():
+    import jax
+
+    from repro.experiments import placement
+
+    s = placement.device_topology()
+    assert f"{jax.device_count()} global device(s)" in s
+    assert "across 1 process(es)" in s
